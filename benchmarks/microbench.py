@@ -1,0 +1,98 @@
+"""Paper Fig. 2 + Fig. 3: microbenchmark characterization.
+
+Fig. 2 — arithmetic throughput vs operational intensity:
+  * UPMEM DPU curve from the calibrated instruction model (the paper's
+    measured shape: compute-saturated from 0.25 op/byte, ~70 MOPS at
+    1 add/int32, rising to the ~350 MOPS pipeline roof),
+  * TPU v5e curve from the machine model (balance at ~240 FLOP/byte) —
+    the Takeaway-1 INVERSION this framework is built around,
+  * the TPU streaming kernel (kernels/microbench.py) validated against
+    its oracle at every sweep point (wall-clock on this CPU container is
+    not meaningful; on a v5e the same sweep measures the real curve).
+
+Fig. 3 — per-op/dtype arithmetic throughput on one DPU (model), with the
+paper's orderings asserted.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pim_model import TPU_V5E, UPMEM_2556
+from repro.kernels import ops, ref
+
+
+def fig2_rows():
+    dpu = UPMEM_2556
+    rows = []
+    for k in (1, 2, 4, 8, 16, 32, 64, 128):
+        oi = k / 4.0                               # int32: k adds / 4 bytes
+        # DPU: pipeline model (4 bookkeeping instr + k adds per element)
+        els = dpu.freq_hz / (4 + k)
+        mops_dpu = k * els / 1e6
+        # memory roof for reference
+        roof_dpu = oi * dpu.mram_bw / 1e6
+        # TPU v5e: same sweep against the machine model (VPU int roof
+        # approximated at peak_flops/4 for 32-bit lanes)
+        tpu_compute = TPU_V5E.peak_flops / 4
+        tpu_mem = oi * TPU_V5E.hbm_bw
+        gops_tpu = min(tpu_compute, tpu_mem) / 1e9
+        rows.append({"oi_op_per_byte": oi, "dpu_mops": mops_dpu,
+                     "dpu_mem_roof_mops": roof_dpu,
+                     "dpu_bound": "compute" if mops_dpu < roof_dpu else "memory",
+                     "tpu_gops": gops_tpu,
+                     "tpu_bound": "compute" if tpu_compute < tpu_mem else "memory"})
+    return rows
+
+
+def fig3_rows():
+    dpu = UPMEM_2556
+    rows = []
+    for dtype in ("int32", "int64", "float", "double"):
+        for op in ("add", "sub", "mul", "div"):
+            rows.append({"op": op, "dtype": dtype,
+                         "mops_per_dpu": dpu.op_throughput(op, dtype) / 1e6})
+    return rows
+
+
+def run(report):
+    report.section("Fig. 2 — throughput vs operational intensity "
+                   "(DPU model + TPU machine model)")
+    rows = fig2_rows()
+    report.table(rows)
+    # paper's claims, checked live
+    knee = rows[0]
+    assert knee["dpu_bound"] == "compute", "KT1: DPU compute-bound at OI=0.25"
+    report.note("DPU is compute-bound from OI=0.25 op/B (paper KT1); "
+                f"TPU stays memory-bound until ~{TPU_V5E.balance:.0f} "
+                "FLOP/B — the inversion DESIGN.md §2 documents.")
+
+    # kernel validation sweep (the TPU-side artifact)
+    x = jax.random.randint(jax.random.PRNGKey(0), (1 << 16,), 0, 127,
+                           jnp.int32)
+    t_rows = []
+    for k in (1, 4, 16):
+        t0 = time.perf_counter()
+        got = ops.stream_ops(x, k)
+        got.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e6
+        ok = bool(jnp.array_equal(got, ref.microbench_stream(x, k)))
+        t_rows.append({"ops_per_elem": k, "kernel_ok": ok,
+                       "us_per_call_host": round(dt, 1)})
+        assert ok
+    report.section("Fig. 2 kernel validation (interpret mode)")
+    report.table(t_rows)
+
+    report.section("Fig. 3 — arithmetic throughput per op/dtype "
+                   "(one DPU, calibrated model)")
+    rows3 = fig3_rows()
+    report.table(rows3)
+    by = {(r["op"], r["dtype"]): r["mops_per_dpu"] for r in rows3}
+    assert by[("add", "int32")] > 5 * by[("mul", "int32")]
+    assert by[("add", "int32")] > by[("add", "float")] > by[("add", "double")]
+    report.note("orderings match paper Fig. 3: add/sub ~10x mul/div; "
+                "int >> float >> double (KT2).")

@@ -1,0 +1,54 @@
+"""§Roofline summary: the 40-cell dry-run roofline table.
+
+Reads the dry-run artifacts (runs/dryrun_single*.json, written by
+``python -m repro.launch.dryrun``) and renders the per-cell three-term
+roofline. If the artifacts are missing it says how to produce them instead
+of spending ~10 minutes compiling here (the dry-run needs the 512-device
+env var that must not leak into this process)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(report):
+    paths = sorted(glob.glob("runs/dryrun_single*.json"))
+    if not paths:
+        report.note("no dry-run artifacts under runs/; generate with:\n"
+                    "  PYTHONPATH=src python -m repro.launch.dryrun "
+                    "--arch all --shape all --mesh both --out "
+                    "runs/dryrun_single.json")
+        return
+    path = paths[-1]
+    with open(path) as f:
+        records = json.load(f)
+    report.section(f"Roofline (single-pod 16x16), from {path}")
+    rows = []
+    for r in records:
+        if r.get("status") == "skip":
+            rows.append({"cell": f'{r["arch"]}/{r["shape"]}',
+                         "dominant": "SKIP", "compute_s": "-",
+                         "memory_s": "-", "collective_s": "-",
+                         "roofline_frac": r.get("reason", "")[:40]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"cell": f'{r["arch"]}/{r["shape"]}',
+                         "dominant": "FAIL", "compute_s": "-",
+                         "memory_s": "-", "collective_s": "-",
+                         "roofline_frac": r.get("error", "")[:40]})
+            continue
+        rf = r["roofline"]
+        rows.append({"cell": rf["name"], "dominant": rf["dominant"],
+                     "compute_s": f'{rf["compute_s"]:.3f}',
+                     "memory_s": f'{rf["memory_s"]:.3f}',
+                     "collective_s": f'{rf["collective_s"]:.4f}',
+                     "roofline_frac": f'{rf["roofline_fraction"]:.3f}',
+                     "mem_roof_frac": f'{rf.get("memory_roof_fraction", 0):.3f}'})
+    report.table(rows)
+    ok = [r for r in records if r.get("status") == "ok"]
+    report.note(f"{len(ok)} compiled cells, "
+                f"{sum(1 for r in records if r.get('status') == 'skip')} "
+                "documented skips. Full records (memory_analysis, "
+                "collective schedule, guidance) in the JSON.")

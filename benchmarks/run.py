@@ -1,0 +1,70 @@
+"""Benchmark orchestrator — one module per paper table/figure:
+
+  microbench        Fig. 2 (throughput vs OI), Fig. 3 (op/dtype throughput)
+  prim_bench        Table I (the 16 workloads) + Fig. 4 (cross-system)
+  suitability_bench §II Key Takeaways 1-3 scoring (PrIM + LM steps)
+  roofline_bench    §Roofline 40-cell dry-run table (from runs/*.json)
+
+Run: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+class Report:
+    """Plain-text table/section sink (markdown-ish, CSV-friendly)."""
+
+    def section(self, title: str):
+        print(f"\n## {title}\n")
+
+    def note(self, text: str):
+        print(f"  NOTE: {text}")
+
+    def raw(self, text: str):
+        print(text)
+
+    def table(self, rows: list[dict]):
+        if not rows:
+            print("  (empty)")
+            return
+        cols = list(rows[0].keys())
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "|".join("---" for _ in cols) + "|")
+        for r in rows:
+            print("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+
+
+def main(argv=None) -> int:
+    from . import (microbench, prim_bench, roofline_bench, scaling_bench,
+                   suitability_bench)
+    modules = {
+        "microbench": microbench,
+        "prim_bench": prim_bench,
+        "suitability_bench": suitability_bench,
+        "scaling_bench": scaling_bench,
+        "roofline_bench": roofline_bench,
+    }
+    names = (argv or sys.argv[1:]) or list(modules)
+    report = Report()
+    t0 = time.perf_counter()
+    failed = []
+    for name in names:
+        print(f"\n{'=' * 72}\n= benchmarks.{name}\n{'=' * 72}")
+        try:
+            modules[name].run(report)
+        except Exception:  # keep the harness going, report at end
+            import traceback
+            traceback.print_exc()
+            failed.append(name)
+    print(f"\n{'=' * 72}")
+    print(f"done in {time.perf_counter() - t0:.1f}s; "
+          f"{len(names) - len(failed)}/{len(names)} benchmark modules ok"
+          + (f"; FAILED: {failed}" if failed else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

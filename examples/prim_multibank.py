@@ -1,0 +1,61 @@
+"""PrIM on a multi-bank mesh: the UPMEM execution model made visible.
+
+MUST be launched fresh (sets the host-device count before jax init):
+
+    PYTHONPATH=src python examples/prim_multibank.py
+
+Runs three workloads with very different communication structures on an
+8-bank mesh and prints their phase anatomy:
+  RED       local reduce        -> one cross-bank tree      (tiny comm)
+  SCAN-SSA  local scan          -> bank-sum exchange -> add (tiny comm)
+  NW        wavefront: B+R-1 steps, a boundary column crosses banks
+            EVERY step (the paper's worst-fit pattern, Takeaway 3)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import prim  # noqa: E402
+from repro.core.bank_parallel import BankGrid, make_bank_mesh  # noqa: E402
+
+
+def main():
+    grid = BankGrid(make_bank_mesh(8))
+    print(f"bank mesh: {grid.n_banks} banks "
+          "(DPU=device, MRAM=shard, exchanges=collectives)\n")
+    key = jax.random.PRNGKey(0)
+
+    for name, n, phases in [
+        ("RED", 1 << 16, "local reduce + 1 tree exchange"),
+        ("SCAN-SSA", 1 << 16, "local scan + bank-sum exchange + local add"),
+        ("NW", 128, "wavefront: boundary handshake EVERY anti-diagonal"),
+    ]:
+        mod = prim.WORKLOADS[name]
+        inputs = mod.make_inputs(n, key)
+        t0 = time.perf_counter()
+        got = mod.run_pim(grid, **inputs)
+        jax.block_until_ready(got)
+        dt = (time.perf_counter() - t0) * 1e3
+        ok = all(
+            bool(jnp.array_equal(jnp.asarray(g), jnp.asarray(w)))
+            for g, w in zip(jax.tree.leaves(got),
+                            jax.tree.leaves(mod.ref(**inputs))))
+        c = mod.counts(n)
+        print(f"{name:9s} n={n:6d}  correct={ok}  {dt:7.1f} ms "
+              f"(first call, traced)")
+        print(f"          phases: {phases}")
+        print(f"          model: {c.bytes_streamed / 1e6:.1f} MB streamed, "
+              f"{c.interbank_bytes / 1e3:.1f} KB inter-bank "
+              f"({'suitable' if c.pim_suitable else 'NOT suitable'} "
+              "per Fig. 4)\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's methodology end-to-end in ~60 seconds on CPU.
+
+1. run a PrIM workload in the bank-parallel execution model,
+2. characterize it with the three-term roofline + KT1-3 suitability,
+3. reproduce the paper's headline Fig.-4 numbers from the calibrated model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import prim
+from repro.core.bank_parallel import BankGrid, make_bank_mesh
+from repro.core.hlo_analysis import analyze_hlo
+from repro.core.perf_model import Figure4, compare
+from repro.core.suitability import score
+
+
+def main():
+    # --- 1. a PrIM workload on the bank-parallel model ------------------
+    grid = BankGrid(make_bank_mesh())
+    mod = prim.WORKLOADS["SCAN-SSA"]
+    inputs = mod.make_inputs(1 << 16, jax.random.PRNGKey(0))
+    out = mod.run_pim(grid, **inputs)
+    ok = bool(jnp.array_equal(out, mod.ref(**inputs)))
+    print(f"SCAN-SSA on {grid.n_banks} bank(s): correct={ok}")
+
+    # --- 2. characterize it (the paper's Key Takeaways as code) ---------
+    compiled = jax.jit(mod.ref).lower(inputs["x"]).compile()
+    an = analyze_hlo(compiled.as_text())
+    rep = score(an, name="SCAN-SSA", machine="upmem_2556")
+    for line in rep.takeaways:
+        print(" ", line)
+    print(f"  => PIM-suitable: {rep.pim_suitable}")
+
+    # --- 3. the paper's headline comparison (calibrated model) ----------
+    fig = Figure4([compare(c) for c in prim.all_ref_counts()])
+    print(f"\n2556-DPU vs CPU : {fig.avg_speedup_2556_vs_cpu:5.1f}x "
+          "(paper: 23.2x)")
+    print(f"640-DPU  vs CPU : {fig.avg_speedup_640_vs_cpu:5.1f}x "
+          "(paper: 10.1x)")
+    print(f"2556-DPU vs GPU : {fig.avg_speedup_2556_vs_gpu_suitable:5.2f}x "
+          "on the 10 suitable benchmarks (paper: 2.54x)")
+    print(f"energy eff. 640 : {fig.avg_energy_eff_640_vs_cpu:5.2f}x "
+          "(paper: 1.64x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end training driver: train a ~100M-parameter dense LM for a few
+hundred steps on CPU with the full production stack (budget ~20 min;
+use --steps 20 for a quick look) — fault-tolerant loop,
+atomic checkpoints, deterministic data pipeline, straggler tracking.
+
+Interrupt it (Ctrl-C) and re-run: it resumes from the latest checkpoint and
+reproduces the uninterrupted trajectory bit-for-bit.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.shapes import ShapeConfig
+from repro.models import ModelConfig, Shardings
+from repro.train import DataConfig, HParams, LoopConfig, TrainLoop
+
+
+def make_100m() -> ModelConfig:
+    """~100M params: a llama-style dense decoder scaled to CPU."""
+    return ModelConfig(
+        name="demo-100m", family="dense",
+        n_layers=12, d_model=576, n_heads=8, n_kv_heads=4, d_ff=2304,
+        vocab_size=32000, rope_theta=1e4, q_chunk=64, kv_chunk=64,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)  # ~6 s/step on CPU
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_100m()
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}, {n_params / 1e6:.1f}M params")
+
+    shd = Shardings(None)
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    loop = TrainLoop(
+        cfg, shape, shd,
+        HParams(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        LoopConfig(total_steps=args.steps, ckpt_every=50,
+                   ckpt_dir=args.ckpt_dir, log_every=20),
+        DataConfig(seed=1234))
+
+    state = loop.resume_or_init()
+    if state.step:
+        print(f"resumed from checkpoint at step {state.step}")
+    t0 = time.perf_counter()
+    state = loop.run(state)
+    dt = time.perf_counter() - t0
+
+    for m in loop.metrics_log:
+        print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}")
+    steps_run = args.steps - (state.step - args.steps)
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"\ndone: {state.step} steps in {dt:.0f}s "
+          f"(~{tok_s:.0f} tok/s on CPU), "
+          f"{len(loop.straggler_steps)} straggler steps flagged")
+    first, last = loop.metrics_log[0]["loss"], loop.metrics_log[-1]["loss"]
+    print(f"loss: {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs per (arch, shape).
+
+Shapes (one set, paired with every LM arch):
+    train_4k     seq 4096,   global_batch 256   (training)
+    prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+    decode_32k   seq 32768,  global_batch 128   (one token, 32k KV cache)
+    long_500k    seq 524288, global_batch 1     (long-context decode)
+
+`long_500k` needs sub-quadratic attention: it RUNS for ssm/hybrid archs and
+for sliding-window archs (bounded ring cache), and is SKIPPED for pure
+full-attention archs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig
+from ..models.cache import cache_defs
+from ..models.sharding import Shardings, tree_shape_structs, tree_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def long_context_capable(cfg: ModelConfig) -> bool:
+    """Sub-quadratic context: SSM/hybrid state or a sliding window."""
+    return cfg.family in ("ssm", "hybrid") or cfg.sliding_window > 0
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not long_context_capable(cfg):
+        return "pure full-attention arch: 500k dense KV is quadratic-cost"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                shd: Shardings | None = None) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct stand-ins, PartitionSpecs) for one cell.
+
+    Stub frontends per the assignment: [vlm]/[audio] get precomputed
+    patch/frame embeddings instead of raw pixels/audio.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda shp: jax.ShapeDtypeStruct(shp, jnp.int32)
+    emb = lambda shp: jax.ShapeDtypeStruct(shp, jnp.dtype(cfg.dtype))
+
+    specs: dict = {}
+    if shape.kind == "train":
+        if cfg.input_mode == "embeds":          # vlm backbone stub
+            specs["embeds"] = emb((b, s, cfg.d_model))
+            if cfg.rope == "mrope":
+                specs["mrope_positions"] = tok((3, b, s))
+        else:
+            specs["tokens"] = tok((b, s))
+        specs["labels"] = tok((b, s))
+        if cfg.encoder_layers:                  # audio backbone stub
+            specs["encoder_embeds"] = emb((b, cfg.encoder_seq, cfg.d_model))
+    elif shape.kind == "prefill":
+        if cfg.input_mode == "embeds":
+            specs["embeds"] = emb((b, s, cfg.d_model))
+            if cfg.rope == "mrope":
+                specs["mrope_positions"] = tok((3, b, s))
+        else:
+            specs["tokens"] = tok((b, s))
+        if cfg.encoder_layers:
+            specs["encoder_embeds"] = emb((b, cfg.encoder_seq, cfg.d_model))
+    else:  # decode: one new token against a seq_len-deep cache
+        specs["tokens"] = tok((b, 1))
+
+    def shard_of(name: str, st):
+        if shd is None:
+            return None
+        if name == "mrope_positions":   # (3, B, S): replicated
+            return None
+        return shd.batch_spec(st.shape)
+    shards = {k: shard_of(k, v) for k, v in specs.items()}
+    return specs, shards
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                shd: Shardings | None = None):
+    """(ShapeDtypeStructs, PartitionSpecs) for the decode/prefill cache."""
+    defs = cache_defs(cfg, shape.global_batch, shape.seq_len)
+
+    def dt(d):
+        if d.dtype is not None:
+            return d.dtype
+        if d.name.endswith((".h", ".wkv")):
+            return "float32"
+        return cfg.dtype
+    structs = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(dt(d))), defs,
+        is_leaf=lambda x: hasattr(x, "kinds"))
+    specs = tree_specs(shd, defs) if shd is not None else None
+    return structs, specs
+
+
+def tokens_in(shape: ShapeConfig) -> int:
+    if shape.kind == "train" or shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,20 @@
+"""repro.core — the paper's contribution as a composable library.
+
+Layers (DESIGN.md §3):
+  * pim_model      — machine models (TPU v5e target; UPMEM/CPU/GPU baselines)
+  * bank_parallel  — the UPMEM bank-parallel execution model on shard_map
+  * hlo_analysis   — FLOP/byte/collective census of compiled XLA programs
+  * roofline       — the three-term roofline characterization engine
+  * suitability    — Key-Takeaway-1/2/3 workload scoring
+  * perf_model     — calibrated cross-system comparison (paper Fig. 4)
+"""
+
+from .bank_parallel import BankGrid, make_bank_mesh, assert_local, BANK_AXIS
+from .hlo_analysis import HloAnalysis, analyze_hlo, op_mix
+from .pim_model import (DPUModel, Machine, MACHINES, TPU_V5E, TITAN_V,
+                        UPMEM_2556, UPMEM_640, XEON_E3_1240)
+from .perf_model import Comparison, Figure4, WorkloadCounts, compare
+from .roofline import (RooflineReport, roofline_from_analysis,
+                       roofline_of_compiled, render_markdown_table,
+                       what_would_move_it)
+from .suitability import SuitabilityReport, score

@@ -1,0 +1,145 @@
+"""Bank-parallel execution: the UPMEM programming model on shard_map.
+
+UPMEM programs are structured as (paper §I, Fig. 1):
+
+    host scatter -> [bank-local kernel on each DPU's MRAM shard]
+                 -> host-mediated exchange (there is NO DPU<->DPU channel)
+                 -> [bank-local kernel] -> ... -> host gather
+
+We map this 1:1 onto a TPU mesh axis (DESIGN.md §2): a *bank* is one mesh
+device, the bank's MRAM is its shard, and every inter-bank exchange is an
+explicit collective at a phase boundary. The discipline "no communication
+inside a local phase" is enforced by `assert_local` (lowering the phase and
+checking the HLO census for collectives) and is exactly what makes a
+workload PIM-suitable per Takeaway 3.
+
+All 16 PrIM workloads in `repro.prim` are written against this API, with the
+same phase structure as their UPMEM originals (e.g. RED = local reduce +
+cross-bank tree; SCAN-SSA = local scan, exchange bank sums, local add).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+BANK_AXIS = "banks"
+
+
+def make_bank_mesh(n_banks: int | None = None, axis: str = BANK_AXIS) -> Mesh:
+    """A 1-D mesh of banks over the available devices."""
+    devs = jax.devices()
+    n = n_banks or len(devs)
+    if n > len(devs):
+        raise ValueError(f"asked for {n} banks, have {len(devs)} devices")
+    return jax.make_mesh((n,), (axis,))
+
+
+@dataclasses.dataclass(frozen=True)
+class BankGrid:
+    """A bank-parallel execution context over one mesh axis."""
+    mesh: Mesh
+    axis: str = BANK_AXIS
+
+    @property
+    def n_banks(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def shard(self, *per_dim: bool):
+        """PartitionSpec sharding dim 0 (or flagged dims) over banks."""
+        if not per_dim:
+            return NamedSharding(self.mesh, P(self.axis))
+        spec = [self.axis if f else None for f in per_dim]
+        return NamedSharding(self.mesh, P(*spec))
+
+    def replicated(self):
+        return NamedSharding(self.mesh, P())
+
+    # ---------------------------------------------------------------
+    # local phases
+    # ---------------------------------------------------------------
+    def local(self, fn: Callable, in_specs, out_specs,
+              check_rep: bool = False) -> Callable:
+        """A bank-local phase: fn runs on each bank's shard. Collectives
+        inside `fn` are a programming error (Takeaway 3) — use exchange
+        phases instead; `assert_local` verifies."""
+        return jax.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep)
+
+    def bank_map(self, fn: Callable) -> Callable:
+        """Common case: every arg sharded on dim 0, every output too."""
+        return self.local(fn, in_specs=P(self.axis), out_specs=P(self.axis))
+
+    # ---------------------------------------------------------------
+    # exchange phases (the "through the host" step on UPMEM; an ICI
+    # collective here — the cost difference is what perf_model charges)
+    # ---------------------------------------------------------------
+    def exchange_reduce(self, x, op: str = "add"):
+        """All banks end with the reduction of per-bank values."""
+        def f(v):
+            if op == "add":
+                return jax.lax.psum(v, self.axis)
+            if op == "max":
+                return jax.lax.pmax(v, self.axis)
+            if op == "min":
+                return jax.lax.pmin(v, self.axis)
+            raise ValueError(op)
+        return self.local(f, in_specs=P(self.axis), out_specs=P(self.axis))(x)
+
+    def exchange_gather(self, x):
+        """Every bank receives the concatenation of all bank shards."""
+        f = lambda v: jax.lax.all_gather(v, self.axis, axis=0, tiled=True)
+        return self.local(f, in_specs=P(self.axis), out_specs=P())(x)
+
+    def exchange_scan_sums(self, bank_vals):
+        """Exclusive scan across banks of per-bank scalars (SCAN-SSA's
+        host phase): bank i receives sum of banks [0, i)."""
+        def f(v):
+            idx = jax.lax.axis_index(self.axis)
+            allv = jax.lax.all_gather(v, self.axis, axis=0)
+            mask = (jnp.arange(self.n_banks) < idx)[(...,) + (None,) * (allv.ndim - 1)]
+            return jnp.sum(jnp.where(mask, allv, 0), axis=0)
+        return self.local(f, in_specs=P(self.axis), out_specs=P(self.axis))(bank_vals)
+
+    def exchange_shift(self, x, offset: int = 1):
+        """Neighbor handshake (NW's wavefront halo, TS's lookahead halo):
+        bank i gets bank i-offset's value; edge banks get zeros."""
+        def f(v):
+            n = self.n_banks
+            if offset >= 0:
+                perm = [(i, i + offset) for i in range(n - offset)]
+            else:
+                perm = [(i, i + offset) for i in range(-offset, n)]
+            return jax.lax.ppermute(v, self.axis, perm)
+        return self.local(f, in_specs=P(self.axis), out_specs=P(self.axis))(x)
+
+
+# ---------------------------------------------------------------------
+# Phase-discipline verification (used by tests & suitability analysis)
+# ---------------------------------------------------------------------
+
+# matches both HLO ("all-reduce") and StableHLO ("stablehlo.all_reduce")
+_COLLECTIVE_HLO = re.compile(
+    r"\b(all[-_]gather|all[-_]reduce|reduce[-_]scatter|all[-_]to[-_]all|"
+    r"collective[-_]permute)\b")
+
+
+def count_collectives_in(fn: Callable, *example_args) -> int:
+    """Lower fn and count collective ops — 0 for a legal bank-local phase."""
+    txt = jax.jit(fn).lower(*example_args).as_text()
+    return len(_COLLECTIVE_HLO.findall(txt))
+
+
+def assert_local(fn: Callable, *example_args) -> None:
+    n = count_collectives_in(fn, *example_args)
+    if n:
+        raise AssertionError(
+            f"bank-local phase contains {n} collective op(s); inter-bank "
+            "communication must go through an exchange phase (Takeaway 3)")

@@ -1,0 +1,627 @@
+"""HLO text analysis: FLOPs, HBM traffic, and collective census from compiled HLO.
+
+This module is the measurement engine behind the paper's methodology
+(roofline characterization of a memory-centric system, Gomez-Luna et al.
+2021). It parses ``compiled.as_text()`` — the post-SPMD-partitioning,
+per-device HLO module — and produces:
+
+  * ``flops``            — matmul-dominated FLOP count (dot/conv + elementwise
+                           estimate), with ``while`` bodies multiplied by their
+                           parsed trip counts (XLA's cost_analysis counts loop
+                           bodies ONCE; we correct that).
+  * ``hbm_bytes``        — per-instruction operand+output bytes (the
+                           HloCostAnalysis "bytes accessed" convention), again
+                           trip-count corrected. Under full fusion this is a
+                           good model of HBM traffic.
+  * ``collectives``      — every all-gather / all-reduce / reduce-scatter /
+                           all-to-all / collective-permute with operand bytes,
+                           group size, and replica-group structure.
+
+Known caveats (documented in DESIGN.md §8): ``lowered.as_text()`` has no
+collectives (pre-partitioning); only ``compiled.as_text()`` is useful here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Callable, Iterable
+
+# ---------------------------------------------------------------------------
+# Shape parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "tuple": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+
+    @property
+    def elements(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return int(self.elements * _DTYPE_BYTES.get(self.dtype, 4))
+
+
+def parse_shapes(type_str: str) -> list[Shape]:
+    """Parse all array shapes out of an HLO type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dim_t = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append(Shape(dtype, dim_t))
+    return out
+
+
+def type_bytes(type_str: str) -> int:
+    return sum(s.bytes for s in parse_shapes(type_str))
+
+
+# ---------------------------------------------------------------------------
+# HLO module parsing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HloOp:
+    name: str
+    type_str: str
+    opcode: str
+    operands: tuple[str, ...]
+    attrs: str  # raw attribute tail (replica_groups=..., body=..., metadata=...)
+    raw_operands: str = ""  # literal text inside the opcode parens
+    is_root: bool = False
+
+    @property
+    def out_bytes(self) -> int:
+        return type_bytes(self.type_str)
+
+    @property
+    def out_shapes(self) -> list[Shape]:
+        return parse_shapes(self.type_str)
+
+    def attr(self, key: str) -> str | None:
+        m = re.search(rf"{key}=(%?[\w\.\-]+)", self.attrs)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloComputation:
+    name: str
+    ops: dict[str, HloOp]
+    order: list[str]
+
+
+@dataclasses.dataclass
+class HloModule:
+    name: str
+    computations: dict[str, HloComputation]
+    entry: str
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_OP_RE = re.compile(r"^\s+(ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_and_rest(rhs: str) -> tuple[str, str]:
+    """Split 'TYPE opcode(...)...' where TYPE may be a tuple with spaces."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].lstrip()
+        return rhs, ""
+    sp = rhs.find(" ")
+    if sp < 0:
+        return rhs, ""
+    return rhs[:sp], rhs[sp + 1:].lstrip()
+
+
+_OPCODE_RE = re.compile(r"^([a-z][\w\-]*)\(")
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_hlo_text(text: str) -> HloModule:
+    module_name = "module"
+    m = re.match(r"HloModule\s+([\w\.\-]+)", text)
+    if m:
+        module_name = m.group(1)
+
+    computations: dict[str, HloComputation] = {}
+    entry = ""
+    cur_name: str | None = None
+    cur_ops: dict[str, HloOp] = {}
+    cur_order: list[str] = []
+
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            if line.startswith("}"):
+                if cur_name is not None:
+                    computations[cur_name] = HloComputation(cur_name, cur_ops, cur_order)
+                cur_name, cur_ops, cur_order = None, {}, []
+                continue
+            hm = _COMP_HEADER_RE.match(line)
+            if hm:
+                cur_name = hm.group(1)
+                cur_ops, cur_order = {}, []
+                if line.startswith("ENTRY"):
+                    entry = cur_name
+            continue
+        if cur_name is None:
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        is_root, op_name, rhs = bool(om.group(1)), om.group(2), om.group(3)
+        type_str, rest = _split_type_and_rest(rhs)
+        cm = _OPCODE_RE.match(rest)
+        if not cm:
+            continue
+        opcode = cm.group(1)
+        # operand list: balanced parens right after the opcode
+        depth, start, end = 0, rest.find("("), len(rest)
+        for i in range(start, len(rest)):
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = rest[start + 1: end]
+        attrs = rest[end + 1:]
+        operands = tuple(_OPERAND_NAME_RE.findall(operand_str))
+        cur_ops[op_name] = HloOp(op_name, type_str, opcode, operands, attrs,
+                                 operand_str, is_root)
+        cur_order.append(op_name)
+
+    if cur_name is not None:
+        computations[cur_name] = HloComputation(cur_name, cur_ops, cur_order)
+    if not entry and computations:
+        entry = list(computations)[-1]
+    return HloModule(module_name, computations, entry)
+
+
+# ---------------------------------------------------------------------------
+# FLOP / byte / collective accounting
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_OPCODES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# opcodes that carry no HBM traffic of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call",
+}
+
+_ELEMENTWISE_FLOP_HINT = {
+    # rough per-output-element flop counts for common non-dot compute
+    "exponential": 8, "log": 8, "rsqrt": 4, "sqrt": 4, "tanh": 8,
+    "logistic": 8, "divide": 4, "power": 10, "sine": 8, "cosine": 8,
+    "erf": 8,
+}
+
+
+@dataclasses.dataclass
+class CollectiveInfo:
+    opcode: str
+    bytes: int            # operand bytes (spec convention), x trip multiplier
+    count: int            # dynamic count (trip-corrected)
+    group_size: int
+    replica_groups: str
+    op_name: str          # HLO op name (first occurrence)
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float
+    dot_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collectives: list[CollectiveInfo]
+    op_census: Counter            # opcode -> dynamic count
+    dot_details: list[dict]       # per-dot: flops, shapes, metadata name, count
+    trip_counts: dict[str, int]   # while op name -> parsed trip count
+    largest_tensors: list[tuple[int, str, str]]  # (bytes, opname, type)
+
+    @property
+    def collective_breakdown(self) -> dict[str, int]:
+        d: dict[str, int] = defaultdict(int)
+        for c in self.collectives:
+            d[c.opcode] += c.bytes
+        return dict(d)
+
+
+def _parse_dims_attr(attrs: str, key: str) -> tuple[int, ...]:
+    m = re.search(rf"{key}={{([0-9,]*)}}", attrs)
+    if not m or not m.group(1):
+        return ()
+    return tuple(int(x) for x in m.group(1).split(","))
+
+
+def _dot_flops(op: HloOp, comp: HloComputation) -> float:
+    """2 * prod(output dims) * prod(lhs contracting dims)."""
+    out = op.out_shapes
+    if not out:
+        return 0.0
+    out_elems = out[0].elements
+    lhs_name = op.operands[0] if op.operands else None
+    lhs_op = comp.ops.get(lhs_name) if lhs_name else None
+    k = 1
+    if lhs_op is not None and lhs_op.out_shapes:
+        lhs_shape = lhs_op.out_shapes[0]
+        for d in _parse_dims_attr(op.attrs, "lhs_contracting_dims"):
+            if d < len(lhs_shape.dims):
+                k *= lhs_shape.dims[d]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: HloOp, comp: HloComputation) -> float:
+    """Approximate: 2 * out_elems * (kernel spatial elems * in_channels)."""
+    out = op.out_shapes
+    rhs_name = op.operands[1] if len(op.operands) > 1 else None
+    rhs_op = comp.ops.get(rhs_name) if rhs_name else None
+    if not out or rhs_op is None or not rhs_op.out_shapes:
+        return 0.0
+    kernel_elems = rhs_op.out_shapes[0].elements
+    # kernel = spatial x in_ch x out_ch; out includes out_ch, so divide by it
+    out_shape = out[0]
+    feature = out_shape.dims[-1] if out_shape.dims else 1
+    return 2.0 * out_shape.elements * max(kernel_elems // max(feature, 1), 1)
+
+
+def _group_size(attrs: str, fallback: int = 1) -> int:
+    # iota form: replica_groups=[num_groups,group_size]<=[...]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2},{...}}
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return fallback
+
+
+def _replica_groups_str(attrs: str) -> str:
+    m = re.search(r"replica_groups=(\[[^ ]*|\{\{[^}]*\}[^,]*)", attrs)
+    return m.group(1)[:80] if m else ""
+
+
+class _Accumulator:
+    def __init__(self, module: HloModule, trip_count_fallback: int):
+        self.module = module
+        self.flops = 0.0
+        self.dot_flops = 0.0
+        self.hbm_bytes = 0.0
+        self.op_census: Counter = Counter()
+        self.coll: dict[str, CollectiveInfo] = {}
+        self.dot_details: list[dict] = []
+        self.trip_counts: dict[str, int] = {}
+        self.largest: list[tuple[int, str, str]] = []
+        self.trip_count_fallback = trip_count_fallback
+        self._raw_text_cache: dict[str, str] = {}
+
+    def trip_count_of(self, op: HloOp) -> int:
+        cond_name = (op.attr("condition") or "").lstrip("%")
+        cond = self.module.computations.get(cond_name)
+        if cond is None:
+            return self.trip_count_fallback
+        # scan conds hold the loop bound as an s32[] scalar constant whose
+        # literal value sits in the operand parens: `s32[] constant(126)`
+        best = 0
+        for c_op in cond.ops.values():
+            if c_op.opcode == "constant" and c_op.type_str.startswith("s32[]"):
+                lit = c_op.raw_operands.strip()
+                if lit.lstrip("-").isdigit():
+                    best = max(best, int(lit))
+        return best if best > 0 else self.trip_count_fallback
+
+    def visit(self, comp_name: str, multiplier: float, for_traffic: bool = True):
+        comp = self.module.computations.get(comp_name)
+        if comp is None:
+            return
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            oc = op.opcode
+            self.op_census[oc] += int(multiplier) if multiplier >= 1 else 1
+
+            if oc == "while":
+                body = (op.attr("body") or "").lstrip("%")
+                tc = self.trip_count_of(op)
+                self.trip_counts[op.name] = tc
+                self.visit(body, multiplier * tc, for_traffic=for_traffic)
+                continue
+            if oc in ("call",):
+                callee = (op.attr("to_apply") or "").lstrip("%")
+                self.visit(callee, multiplier, for_traffic=for_traffic)
+                continue
+            if oc == "conditional":
+                # visit all branches once (upper bound)
+                for key in ("true_computation", "false_computation"):
+                    br = (op.attr(key) or "").lstrip("%")
+                    if br:
+                        self.visit(br, multiplier, for_traffic=for_traffic)
+                continue
+
+            # --- FLOPs ---
+            if oc == "dot":
+                f = _dot_flops(op, comp) * multiplier
+                self.flops += f
+                self.dot_flops += f
+                meta = re.search(r'op_name="([^"]*)"', op.attrs)
+                self.dot_details.append({
+                    "flops": f, "type": op.type_str, "count": multiplier,
+                    "op_name": meta.group(1) if meta else op.name,
+                })
+            elif oc == "convolution":
+                f = _conv_flops(op, comp) * multiplier
+                self.flops += f
+                self.dot_flops += f
+            elif oc == "fusion":
+                callee = (op.attr("calls") or "").lstrip("%")
+                self._visit_fusion_flops(callee, multiplier)
+                self.flops += op.out_shapes[0].elements * multiplier if op.out_shapes else 0
+            elif oc in ("reduce", "reduce-window"):
+                in_op = comp.ops.get(op.operands[0]) if op.operands else None
+                if in_op is not None and in_op.out_shapes:
+                    self.flops += in_op.out_shapes[0].elements * multiplier
+            elif oc in _ELEMENTWISE_FLOP_HINT:
+                self.flops += (op.out_shapes[0].elements if op.out_shapes else 0) \
+                    * _ELEMENTWISE_FLOP_HINT[oc] * multiplier
+            elif oc in ("add", "subtract", "multiply", "maximum", "minimum",
+                        "and", "or", "xor", "select", "compare"):
+                self.flops += (op.out_shapes[0].elements if op.out_shapes else 0) * multiplier
+
+            # --- collectives ---
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVE_OPCODES and not oc.endswith("-done"):
+                operand_bytes = 0
+                for on in op.operands:
+                    src = comp.ops.get(on)
+                    if src is not None:
+                        operand_bytes += src.out_bytes
+                if operand_bytes == 0:
+                    operand_bytes = op.out_bytes  # fallback
+                gs = _group_size(op.attrs)
+                key = f"{base}:{op.name}"
+                info = self.coll.get(key)
+                nbytes = int(operand_bytes * multiplier)
+                if info is None:
+                    self.coll[key] = CollectiveInfo(
+                        base, nbytes, int(max(multiplier, 1)), gs,
+                        _replica_groups_str(op.attrs), op.name)
+                else:
+                    info.bytes += nbytes
+                    info.count += int(max(multiplier, 1))
+
+            # --- HBM traffic ---
+            if for_traffic and oc not in _NO_TRAFFIC:
+                b = self._op_traffic(op, comp)
+                self.hbm_bytes += b * multiplier
+                if op.out_bytes > 0:
+                    self.largest.append((op.out_bytes, op.name, op.type_str[:60]))
+
+    # ------------------------------------------------------------------
+    # traffic model: bytes an op actually moves through HBM. The naive
+    # "operands + outputs at full size" convention overcounts slicing ops
+    # catastrophically inside loops (a dynamic-slice reads its SLICE, but
+    # its operand is the whole buffer — measured 95% of a 405B train
+    # step's traffic before this correction). Slice-like ops are charged
+    # at slice granularity; in-place update buffers are charged at update
+    # granularity (the rest of the buffer is aliased, not copied).
+    # ------------------------------------------------------------------
+
+    _SLICE_READERS = ("dynamic-slice", "gather")
+    _INPLACE = ("dynamic-update-slice", "scatter")
+    # ops a pure layout/precision-change fusion may contain. XLA:CPU
+    # legalizes bf16 dots by materializing f32 copies of their operands
+    # (weights, KV caches) — kLoop convert fusions a TPU/Mosaic build never
+    # emits. They are charged ZERO traffic (TPU projection); the residual
+    # inflation is dots reading f32-sized operands (<= 2x), documented in
+    # DESIGN.md §8.
+    _LAYOUT_ONLY = {"parameter", "constant", "convert", "bitcast", "copy",
+                    "transpose", "broadcast", "reshape", "tuple",
+                    "get-tuple-element"}
+
+    def _op_traffic(self, op: HloOp, comp: HloComputation) -> float:
+        oc = op.opcode
+        if oc == "fusion":
+            return self._fusion_traffic(op, comp)
+        if oc in self._SLICE_READERS:
+            # read the slice + indices, write the slice
+            return 2.0 * op.out_bytes
+        if oc in self._INPLACE:
+            # buffer (operand 0) is aliased; traffic = update read+write
+            upd = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+            ub = upd.out_bytes if upd is not None else op.out_bytes
+            return 2.0 * ub
+        b = float(op.out_bytes)
+        for on in op.operands:
+            src = comp.ops.get(on)
+            if src is not None and src.opcode not in ("constant",):
+                b += src.out_bytes
+        return b
+
+    def _fusion_traffic(self, op: HloOp, comp: HloComputation) -> float:
+        """Charge fused parameters at what the fused computation actually
+        reads from them: slice-sized for params consumed only by
+        dynamic-slice/gather, zero for in-place-updated buffers (aliased),
+        full size otherwise. Output side: a fusion rooted in
+        dynamic-update-slice writes only the update region."""
+        callee = (op.attr("calls") or "").lstrip("%")
+        fused = self.module.computations.get(callee)
+        if fused is None:
+            b = float(op.out_bytes)
+            for on in op.operands:
+                src = comp.ops.get(on)
+                if src is not None:
+                    b += src.out_bytes
+            return b
+
+        if all(f.opcode in self._LAYOUT_ONLY for f in fused.ops.values()):
+            return 0.0      # CPU-backend bf16-legalization artifact
+
+        # parameter index -> fused-computation op name
+        param_names: dict[int, str] = {}
+        for f_op in fused.ops.values():
+            if f_op.opcode == "parameter":
+                lit = f_op.raw_operands.strip()
+                if lit.isdigit():
+                    param_names[int(lit)] = f_op.name
+
+        # consumers of each fused op
+        consumers: dict[str, list[HloOp]] = defaultdict(list)
+        for f_op in fused.ops.values():
+            for on in f_op.operands:
+                consumers[on].append(f_op)
+
+        _PASS_THROUGH = ("convert", "bitcast", "copy", "reshape",
+                         "transpose", "broadcast")
+
+        def effective_consumers(name: str, depth: int = 0) -> list[HloOp]:
+            """Consumers reached through pure layout/precision ops."""
+            out: list[HloOp] = []
+            for c in consumers.get(name, []):
+                if c.opcode in _PASS_THROUGH and depth < 6:
+                    out.extend(effective_consumers(c.name, depth + 1))
+                else:
+                    out.append(c)
+            return out
+
+        total = 0.0
+        for i, on in enumerate(op.operands):
+            src = comp.ops.get(on)
+            if src is None or src.opcode == "constant":
+                continue
+            full = src.out_bytes
+            pname = param_names.get(i)
+            cons = effective_consumers(pname) if pname else []
+            slice_like = self._SLICE_READERS + self._INPLACE
+            if cons and all(c.opcode in slice_like for c in cons):
+                # reads at slice granularity; in-place updates alias the
+                # buffer (their write is charged on the output side)
+                total += sum(c.out_bytes for c in cons
+                             if c.opcode in self._SLICE_READERS)
+            else:
+                total += full
+
+        # output: DUS-rooted fusions (possibly behind layout ops) write
+        # the update region only
+        root = next((fused.ops[n] for n in fused.order
+                     if fused.ops[n].is_root), None)
+        out_b = float(op.out_bytes)
+        seen = 0
+        while root is not None and root.opcode in _PASS_THROUGH \
+                and root.operands and seen < 6:
+            root = fused.ops.get(root.operands[0])
+            seen += 1
+        if root is not None and root.opcode == "dynamic-update-slice" \
+                and len(root.operands) > 1:
+            upd = fused.ops.get(root.operands[1])
+            if upd is not None:
+                out_b = float(upd.out_bytes)
+        return total + out_b
+
+    def _visit_fusion_flops(self, comp_name: str, multiplier: float):
+        comp = self.module.computations.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops.values():
+            if op.opcode == "dot":
+                f = _dot_flops(op, comp) * multiplier
+                self.flops += f
+                self.dot_flops += f
+            elif op.opcode == "fusion":
+                callee = (op.attr("calls") or "").lstrip("%")
+                self._visit_fusion_flops(callee, multiplier)
+            elif op.opcode not in _NO_TRAFFIC:
+                # census fused elementwise ops for the Takeaway-2 op mix
+                self.op_census[op.opcode] += int(max(multiplier, 1))
+
+
+def analyze_hlo(text: str, trip_count_fallback: int = 1) -> HloAnalysis:
+    """Analyze a post-partitioning HLO module (``compiled.as_text()``).
+
+    Returns per-device FLOPs / bytes / collective census with while-loop
+    bodies multiplied by parsed trip counts.
+    """
+    module = parse_hlo_text(text)
+    acc = _Accumulator(module, trip_count_fallback)
+    acc.visit(module.entry, 1.0)
+    colls = sorted(acc.coll.values(), key=lambda c: -c.bytes)
+    largest = sorted(acc.largest, key=lambda t: -t[0])[:20]
+    return HloAnalysis(
+        flops=acc.flops,
+        dot_flops=acc.dot_flops,
+        hbm_bytes=acc.hbm_bytes,
+        collective_bytes=float(sum(c.bytes for c in colls)),
+        collectives=colls,
+        op_census=acc.op_census,
+        dot_details=sorted(acc.dot_details, key=lambda d: -d["flops"])[:50],
+        trip_counts=acc.trip_counts,
+        largest_tensors=largest,
+    )
+
+
+def op_mix(analysis: HloAnalysis) -> dict[str, float]:
+    """Paper Takeaway-2 style op-mix census: fraction of dynamic ops that are
+    'simple' (add/sub/bitwise/compare) vs 'complex' (mul/div/transcendental)
+    vs matmul."""
+    simple = complex_ = matmul = other = 0
+    simple_ops = {"add", "subtract", "and", "or", "xor", "not", "compare",
+                  "select", "maximum", "minimum", "shift-left",
+                  "shift-right-logical", "shift-right-arithmetic"}
+    complex_ops = {"multiply", "divide", "power", "exponential", "log",
+                   "rsqrt", "sqrt", "tanh", "logistic", "sine", "cosine",
+                   "remainder", "erf", "atan2"}
+    for oc, n in analysis.op_census.items():
+        if oc in simple_ops:
+            simple += n
+        elif oc in complex_ops:
+            complex_ += n
+        elif oc in ("dot", "convolution"):
+            matmul += n
+        else:
+            other += n
+    total = max(simple + complex_ + matmul, 1)
+    return {
+        "simple_frac": simple / total,
+        "complex_frac": complex_ / total,
+        "matmul_frac": matmul / total,
+        "total_arith_ops": simple + complex_ + matmul,
+    }

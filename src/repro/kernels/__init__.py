@@ -1,0 +1,8 @@
+"""repro.kernels — Pallas TPU kernels for the PrIM hot-spots + the LM
+decode path, each validated against ref.py in interpret mode.
+
+Kernels: va, gemv, reduction, scan (2-phase SSA), histogram, ts, trns,
+decode_attention (flash-decode, GQA-grouped), microbench (Fig-2 OI sweep).
+Public API in ops.py (padding/reshape/jit); oracles in ref.py."""
+
+from . import ops, ref

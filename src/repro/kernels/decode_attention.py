@@ -1,0 +1,91 @@
+"""Flash-decode Pallas kernel — the serving hot-spot (DESIGN.md §4).
+
+One decode step's attention for one chip's KV shard: q (B, KVH, G, hd)
+attends over a (B, W, KVH, hd) KV cache, streamed in (BW, KVH, hd) chunks
+through VMEM with an online-softmax running state (m, l, acc) held in VMEM
+scratch — the cache is read EXACTLY once at bandwidth roof, the PIM pattern
+(bank = chip, MRAM = HBM shard, WRAM = VMEM, tasklets = grid steps).
+
+GQA-aware: scores are computed per kv-head group without repeating K/V
+(repeat-to-full-heads costs G x the cache traffic — the difference between
+the roofline memory terms of the naive and kernel paths).
+
+The cache length is data-dependent: a per-chunk valid-count array is
+blocked into the kernel ((1,1) int32), avoiding scalar prefetch while
+keeping masking exact."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BW = 512    # KV chunk (sequence) per grid step
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_s, l_s, acc_s,
+                   *, n_chunks: int, scale: float):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, -1e30)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)                 # (KVH, G, hd)
+    k = k_ref[0].astype(jnp.float32)                 # (BW, KVH, hd)
+    v = v_ref[0].astype(jnp.float32)                 # (BW, KVH, hd)
+    s = jnp.einsum("kgd,wkd->kgw", q, k,
+                   preferred_element_type=jnp.float32) * scale
+
+    pos = w * BW + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(pos < len_ref[0, 0], s, -1e30)
+
+    m_prev, l_prev = m_s[...], l_s[...]              # (KVH, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])                # (KVH, G, BW)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc = acc_s[...] * alpha[..., None] + jnp.einsum(
+        "kgw,wkd->kgd", p, v, preferred_element_type=jnp.float32)
+    m_s[...], l_s[...], acc_s[...] = m_new, l_new, acc
+
+    @pl.when(w == n_chunks - 1)
+    def _finish():
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)[..., None]) \
+            .astype(o_ref.dtype)
+
+
+def decode_attention_grouped(q, k, v, length, *, interpret: bool = False):
+    """q: (B, KVH, G, hd); k, v: (B, W, KVH, hd); length: int32 scalar
+    (valid cache slots, same for the batch). Returns (B, KVH, G, hd)."""
+    b, kvh, g, hd = q.shape
+    w = k.shape[1]
+    assert w % BW == 0, (w, BW)
+    n_chunks = w // BW
+    lens = jnp.full((n_chunks, 1), length, jnp.int32)
+    kern = functools.partial(_decode_kernel, n_chunks=n_chunks,
+                             scale=1.0 / math.sqrt(hd))
+    return pl.pallas_call(
+        kern,
+        grid=(b, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, kvh, g, hd), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, BW, kvh, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, BW, kvh, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kvh, g, hd), lambda i, j: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, g), jnp.float32),
+            pltpu.VMEM((kvh, g), jnp.float32),
+            pltpu.VMEM((kvh, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)

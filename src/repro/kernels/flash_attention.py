@@ -1,0 +1,108 @@
+"""Flash-attention (prefill/train forward) Pallas kernel.
+
+The pure-JAX chunked flash in models/layers.py is the dry-run/reference
+path; this is the TPU hot-spot version: one (BQ, hd) query tile stays
+VMEM-resident while (BK, hd) K/V tiles stream through, with the online
+softmax state in VMEM scratch. GQA-grouped (no repeat-to-full-heads),
+causal and sliding-window masks supported.
+
+Grid: (batch, kv_head, q_group_member?, q_blocks, kv_blocks) — flattened
+to (B*KVH*G, n_q, n_k) with the kv dimension innermost (sequential
+revisiting accumulation). Causality skips fully-masked kv tiles via
+pl.when (the classic ~2x for causal prefill)."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 256
+BK = 512
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+                  *, n_k: int, scale: float, causal: bool, window: int,
+                  valid_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, -1e30)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_lo = qi * BQ
+    k_lo = ki * BK
+    # tile-level culling: skip tiles fully above the causal diagonal or
+    # fully outside the sliding window (the classic ~2x for causal)
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + BQ - 1
+    if window:
+        live &= q_lo - (k_lo + BK - 1) < window
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)               # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)               # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        mask = k_pos < valid_k          # kv tile padding (static)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, -1e30)
+        m_prev, l_prev = m_s[...], l_s[...]            # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_s[...], l_s[...] = m_new, l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)) \
+            .astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        valid_k: int = 0, interpret: bool = False):
+    """q: (BH, Sq, hd); k, v: (BH, Skv, hd) — heads pre-flattened into the
+    leading dim (GQA handled by the ops.py wrapper). Sq % BQ == 0,
+    Skv % BK == 0; rows >= valid_k (kv padding) are masked out."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    valid_k = valid_k or skv
+    assert sq % BQ == 0 and skv % BK == 0, (sq, skv)
+    n_q, n_k = sq // BQ, skv // BK
+    kern = functools.partial(
+        _flash_kernel, n_k=n_k, scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, valid_k=valid_k)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, 1), jnp.float32),
+            pltpu.VMEM((BQ, 1), jnp.float32),
+            pltpu.VMEM((BQ, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

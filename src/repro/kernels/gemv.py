@@ -1,0 +1,48 @@
+"""GEMV Pallas kernel — the bank-parallel decode hot-spot (PrIM GEMV; one
+chip's shard of the weight-stationary decode matmul).
+
+Tiling: A is walked in (BM, BK) VMEM tiles, x in (1, BK) slivers; the
+kernel accumulates the partial dot into a f32 (BM, 1) output block that
+stays resident across the K-grid dimension (revisiting accumulation — the
+K axis is the innermost, sequential grid dim). BM/BK are MXU-aligned
+(multiples of 128 lanes / 8 sublanes)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 256
+BK = 512
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)          # (BM, BK)
+    x = x_ref[...].astype(jnp.float32)          # (1, BK)
+    o_ref[...] += jnp.sum(a * x, axis=1, keepdims=True)
+
+
+def gemv_tiled(A, x, *, interpret: bool = False):
+    """A: (M, K); x: (K,). M % BM == 0, K % BK == 0. Returns f32 (M,)."""
+    m, k = A.shape
+    assert m % BM == 0 and k % BK == 0, (A.shape,)
+    grid = (m // BM, k // BK)
+    out = pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(A, x[None, :])
+    return out[:, 0]

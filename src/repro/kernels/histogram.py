@@ -1,0 +1,49 @@
+"""HST Pallas kernel: streaming histogram (PrIM HST-S/L bank-local phase).
+
+The WRAM-private-histogram trick maps to VMEM: the (1, BINS) counts block
+stays VMEM-resident across the whole sequential grid while (BLOCK_ROWS,
+128) input tiles stream through. Binning uses a one-hot compare + sum
+(VPU-friendly; no data-dependent scatter, which the TPU vector unit does
+not do) — the TPU-native replacement for the UPMEM scatter loop
+(DESIGN.md §2 hardware adaptation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 32
+LANES = 128
+SHIFT = 12          # values are < 2**SHIFT
+
+
+def _hst_kernel(x_ref, o_ref, *, bins: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.uint32).reshape(-1)     # (R*128,)
+    idx = ((x * bins) >> SHIFT).astype(jnp.int32)
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (idx.shape[0], bins), 1))
+    o_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0,
+                          keepdims=True)
+
+
+def histogram_2d(x, bins: int, *, interpret: bool = False):
+    """x: (R, 128) uint32 < 2**SHIFT -> (bins,) int32 counts."""
+    import functools
+    r, l = x.shape
+    assert l == LANES and r % BLOCK_ROWS == 0, (x.shape,)
+    out = pl.pallas_call(
+        functools.partial(_hst_kernel, bins=bins),
+        grid=(r // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, bins), jnp.int32),
+        interpret=interpret,
+    )(x)
+    return out[0]

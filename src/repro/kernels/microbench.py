@@ -1,0 +1,40 @@
+"""Fig-2 microbenchmark kernel: arithmetic throughput vs operational
+intensity. Streams (BLOCK_ROWS, 128) tiles and performs a *dependent* chain
+of `ops_per_elem` adds on each element — sweeping ops_per_elem sweeps the
+operational intensity (op/byte) axis of the roofline, exactly the paper's
+Fig. 2 experiment (there on a DPU; here the same sweep positions the TPU's
+balance point). benchmarks/microbench.py runs the sweep."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _stream_kernel(x_ref, o_ref, *, ops_per_elem: int):
+    y = x_ref[...]
+    for i in range(ops_per_elem):     # dependent chain, static unroll
+        y = y + jnp.asarray(i + 1, y.dtype)
+    o_ref[...] = y
+
+
+def stream_ops(x, ops_per_elem: int, *, interpret: bool = False):
+    """x: (R, 128) int32/f32."""
+    r, l = x.shape
+    assert l == LANES and r % BLOCK_ROWS == 0, (x.shape,)
+    kern = functools.partial(_stream_kernel, ops_per_elem=ops_per_elem)
+    spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(r // BLOCK_ROWS,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

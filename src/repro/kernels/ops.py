@@ -1,0 +1,173 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile alignment, 1-D <-> 2-D lane reshapes, and dtype
+plumbing. `interpret` defaults to True off-TPU (this container validates
+kernel bodies in interpret mode; on a v5e the same calls compile to
+Mosaic)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _da
+from . import gemv as _gemv
+from . import histogram as _hst
+from . import microbench as _mb
+from . import reduction as _red
+from . import scan_block as _scan
+from . import trns as _trns
+from . import ts as _ts
+from . import va as _va
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_lanes(x, rows_mult: int):
+    """(N,) -> ((R, 128), pad) with R % rows_mult == 0."""
+    lanes = 128
+    n = x.shape[0]
+    per = rows_mult * lanes
+    pad = (-n) % per
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x.reshape(-1, lanes), pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def va(a, b, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    a2, pad = _to_lanes(a, _va.BLOCK_ROWS)
+    b2, _ = _to_lanes(b, _va.BLOCK_ROWS)
+    out = _va.va_2d(a2, b2, interpret=interpret).reshape(-1)
+    return out[:a.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemv(A, x, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = A.shape
+    pm, pk = (-m) % _gemv.BM, (-k) % _gemv.BK
+    if pm or pk:
+        A = jnp.pad(A, ((0, pm), (0, pk)))
+        x = jnp.pad(x, (0, pk))
+    out = _gemv.gemv_tiled(A, x, interpret=interpret)
+    return out[:m].astype(A.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def reduction(x, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    x2, _ = _to_lanes(x, _red.BLOCK_ROWS)
+    return _red.reduce_2d(x2, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scan(x, interpret: bool | None = None):
+    """Full prefix sum via the SCAN-SSA phase structure, f32 accumulate."""
+    interpret = default_interpret() if interpret is None else interpret
+    n = x.shape[0]
+    x2, _ = _to_lanes(x, _scan.BLOCK_ROWS)
+    scans, totals = _scan.scan_blocks(x2, interpret=interpret)
+    offsets = (jnp.cumsum(totals) - totals).astype(jnp.float32)
+    full = _scan.add_offsets(scans, offsets, interpret=interpret)
+    return full.reshape(-1)[:n].astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "interpret"))
+def histogram(x, bins: int, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    n = x.shape[0]
+    per = _hst.BLOCK_ROWS * 128
+    pad = (-n) % per
+    xp = jnp.pad(x, (0, pad), constant_values=0)
+    out = _hst.histogram_2d(xp.reshape(-1, 128), bins, interpret=interpret)
+    if pad:  # remove the pad zeros counted into bin 0
+        out = out.at[0].add(-pad)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ts_min(series, query, interpret: bool | None = None):
+    """(min squared distance, argmin window) via the TS kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    n, m = series.shape[0], query.shape[0]
+    pad = (-n) % _ts.BLOCK
+    sp = jnp.pad(series, (0, pad))
+    d = _ts.ts_dists_tiled(sp, query, interpret=interpret)
+    nwin = n - m + 1
+    d = jnp.where(jnp.arange(d.shape[0]) < nwin, d, jnp.inf)
+    i = jnp.argmin(d)
+    return d[i], i.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def transpose(A, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = A.shape
+    pm, pn = (-m) % _trns.BT, (-n) % _trns.BT
+    if pm or pn:
+        A = jnp.pad(A, ((0, pm), (0, pn)))
+    out = _trns.transpose_tiled(A, interpret=interpret)
+    return out[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, length, interpret: bool | None = None):
+    """q: (B, H, hd); k, v: (B, W, KVH, hd); length: int32 scalar.
+    Pads W to the kernel chunk; GQA grouping handled here."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, h, hd = q.shape
+    w, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    pad_w = (-w) % _da.BW
+    if pad_w:
+        k = jnp.pad(k, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+    qg = q.reshape(b, kvh, g, hd)
+    out = _da.decode_attention_grouped(qg, k, v, length,
+                                       interpret=interpret)
+    return out.reshape(b, h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("ops_per_elem", "interpret"))
+def stream_ops(x, ops_per_elem: int, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    n = x.shape[0]
+    x2, _ = _to_lanes(x, _mb.BLOCK_ROWS)
+    return _mb.stream_ops(x2, ops_per_elem,
+                          interpret=interpret).reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool | None = None):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd). GQA handled by
+    repeating KV here (the grouped-ref pattern is in decode_attention).
+    Pads Sq/Skv to the kernel tiles; pad k-rows are masked by causality
+    when causal, and sliced off the output either way."""
+    from . import flash_attention as _fa
+    interpret = default_interpret() if interpret is None else interpret
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    pq, pk = (-sq) % _fa.BQ, (-skv) % _fa.BK
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # (B, S, H, hd) -> (B*H, S, hd)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(-1, x.shape[1], hd)
+    o = _fa.flash_attention_fwd(fold(q), fold(k), fold(v), causal=causal,
+                                window=window, valid_k=skv,
+                                interpret=interpret)
+    o = o.reshape(b, h, q.shape[1], hd).transpose(0, 2, 1, 3)
+    return o[:, :sq]

@@ -1,0 +1,40 @@
+"""RED Pallas kernel: streaming sum (PrIM RED, bank-local phase).
+
+Each grid step streams a (BLOCK_ROWS, 128) tile into VMEM, reduces it on
+the VPU and accumulates into a (1, 1) f32 output that stays VMEM-resident
+across the whole (sequential) grid — the tree-reduce across banks happens
+outside (core.bank_parallel.exchange_reduce)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+LANES = 128
+
+
+def _red_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...].astype(jnp.float32))
+
+
+def reduce_2d(x, *, interpret: bool = False):
+    """x: (R, 128), R % BLOCK_ROWS == 0 -> f32 scalar."""
+    r, l = x.shape
+    assert l == LANES and r % BLOCK_ROWS == 0, (x.shape,)
+    out = pl.pallas_call(
+        _red_kernel,
+        grid=(r // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[0, 0]

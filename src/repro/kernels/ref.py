@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the per-kernel shape/dtype sweep tests assert
+against (tests/test_kernels.py). Kept deliberately naive — readability over
+speed."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def va(a, b):
+    return a + b
+
+
+def gemv(A, x):
+    """A: (M, K); x: (K,) -> (M,). Accumulates in f32."""
+    return (A.astype(jnp.float32) @ x.astype(jnp.float32)).astype(A.dtype)
+
+
+def reduction(x):
+    """Full sum, f32 accumulation."""
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def block_scan(x, block: int):
+    """(local inclusive scan per block, per-block totals) — the bank-local
+    phase of SCAN-SSA."""
+    n = x.shape[0]
+    xb = x.reshape(n // block, block)
+    scans = jnp.cumsum(xb.astype(jnp.float32), axis=1)
+    return scans.reshape(n).astype(x.dtype), scans[:, -1].astype(x.dtype)
+
+
+def scan(x, block: int = 256):
+    """Full prefix sum via the SSA structure (oracle = jnp.cumsum)."""
+    return jnp.cumsum(x)
+
+
+def histogram(x, bins: int, shift: int):
+    idx = (x.astype(jnp.uint32) * bins) >> shift
+    return jnp.zeros((bins,), jnp.int32).at[idx].add(1)
+
+
+def ts_dists(series, query):
+    """Squared euclidean distance of query to every aligned window."""
+    m = query.shape[0]
+    nwin = series.shape[0] - m + 1
+    idx = jnp.arange(nwin)[:, None] + jnp.arange(m)[None, :]
+    wins = series[idx].astype(jnp.float32)
+    d = wins - query.astype(jnp.float32)[None, :]
+    return jnp.sum(d * d, axis=1)
+
+
+def trns(A):
+    return A.T
+
+
+def decode_attention(q, k, v, length):
+    """q: (B,H,hd); k,v: (B,W,KVH,hd); length: #valid cache slots.
+    Returns (B,H,hd) attention output, GQA-aware, f32 softmax."""
+    b, h, hd = q.shape
+    w, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, kf) / math.sqrt(hd)
+    mask = jnp.arange(w) < length
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", p, vf)
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def microbench_stream(x, ops_per_elem: int):
+    """Fig-2 microbenchmark: `ops_per_elem` dependent adds per element."""
+    y = x
+    for i in range(ops_per_elem):
+        y = y + jnp.int32(i + 1)
+    return y
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KVH,hd) — plain softmax attention."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""SCAN Pallas kernels: the two bank-local phases of PrIM SCAN-SSA.
+
+Phase 1 (`scan_blocks`): per-block inclusive scan + block totals. The scan
+runs along the 128-lane axis of an (8, 128) tile via cumsum (log-depth
+shifts on the VPU); rows of a (BLOCK_ROWS, 128) tile are chained with a
+row-offset cumsum so a whole tile scans in one pass.
+Phase 2 (`add_offsets`): adds the exclusive-scanned block offsets back.
+
+The cross-block exclusive scan between the phases is tiny (n_blocks
+elements) and runs as plain jnp in ops.py — on the real machine it is the
+host/ICI exchange of SCAN-SSA."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 64
+LANES = 128
+
+
+def _scan_kernel(x_ref, s_ref, t_ref):
+    x = x_ref[...].astype(jnp.float32)              # (R, 128)
+    lane_scan = jnp.cumsum(x, axis=1)               # scan within rows
+    row_tot = lane_scan[:, -1]                      # (R,)
+    row_off = jnp.cumsum(row_tot) - row_tot         # exclusive over rows
+    full = lane_scan + row_off[:, None]
+    s_ref[...] = full.astype(s_ref.dtype)
+    t_ref[...] = full[-1:, -1:].astype(t_ref.dtype)
+
+
+def scan_blocks(x, *, interpret: bool = False):
+    """x: (R, 128) -> (row-major inclusive scan per BLOCK_ROWS-tile,
+    per-tile totals (n_tiles,))."""
+    r, l = x.shape
+    assert l == LANES and r % BLOCK_ROWS == 0, (x.shape,)
+    n = r // BLOCK_ROWS
+    scans, totals = pl.pallas_call(
+        _scan_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return scans, totals[:, 0]
+
+
+def _add_kernel(s_ref, off_ref, o_ref):
+    o_ref[...] = s_ref[...] + off_ref[0, 0]
+
+
+def add_offsets(scans, offsets, *, interpret: bool = False):
+    """scans: (R, 128); offsets: (n_tiles,) exclusive block offsets."""
+    r, l = scans.shape
+    n = r // BLOCK_ROWS
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(scans.shape, scans.dtype),
+        interpret=interpret,
+    )(scans, offsets[:, None])

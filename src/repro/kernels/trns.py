@@ -1,0 +1,32 @@
+"""TRNS Pallas kernel: tiled matrix transpose (PrIM TRNS bank-local step).
+
+(BT, BT) tiles stream through VMEM; the in-VMEM transpose is a register
+shuffle on the VPU. The out BlockSpec swaps the grid indices — the
+HBM-level coarse transpose — exactly the PrIM decomposition (host does
+tile-granular placement, DPU transposes within the tile)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BT = 128
+
+
+def _trns_kernel(a_ref, o_ref):
+    o_ref[...] = a_ref[...].T
+
+
+def transpose_tiled(A, *, interpret: bool = False):
+    """A: (M, N), both % BT == 0 -> (N, M)."""
+    m, n = A.shape
+    assert m % BT == 0 and n % BT == 0, (A.shape,)
+    return pl.pallas_call(
+        _trns_kernel,
+        grid=(m // BT, n // BT),
+        in_specs=[pl.BlockSpec((BT, BT), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BT, BT), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((n, m), A.dtype),
+        interpret=interpret,
+    )(A)

@@ -1,0 +1,53 @@
+"""TS Pallas kernel: sliding-window distance (PrIM TS bank-local phase).
+
+Each grid step owns BLOCK windows. The halo (first M-1 elements of the
+NEXT block) arrives as a second BlockSpec on the same input with a +1
+index map — overlapping reads without any host-side copy. The M-step
+window loop is unrolled in-kernel (M is small and static), each step a
+shifted VPU subtract-square-accumulate."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _ts_kernel(x_ref, halo_ref, q_ref, o_ref, *, m: int):
+    seg = jnp.concatenate([x_ref[0], halo_ref[0]])     # (2*BLOCK,) f32-able
+    q = q_ref[...]                                     # (1, m)
+    acc = jnp.zeros((BLOCK,), jnp.float32)
+    for j in range(m):                                 # static unroll
+        d = seg[j:j + BLOCK].astype(jnp.float32) - q[0, j].astype(jnp.float32)
+        acc += d * d
+    o_ref[...] = acc[None]
+
+
+def ts_dists_tiled(series, query, *, interpret: bool = False):
+    """series: (N,) with N % BLOCK == 0; query: (m,), m <= BLOCK.
+    Returns (N,) f32 distances; entries past N-m+1 are garbage — callers
+    mask them (ops.ts_min does)."""
+    n = series.shape[0]
+    m = query.shape[0]
+    assert n % BLOCK == 0 and m <= BLOCK, (n, m)
+    nb = n // BLOCK
+    x2d = series[None, :]                              # (1, N)
+    kern = functools.partial(_ts_kernel, m=m)
+    out = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            # halo: next block (clamped at the edge)
+            pl.BlockSpec((1, BLOCK), lambda i: (0, jnp.minimum(i + 1, nb - 1))),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(x2d, x2d, query[None, :])
+    return out[0]

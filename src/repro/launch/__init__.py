@@ -1,0 +1,8 @@
+"""repro.launch — mesh construction, dry-run, train/serve drivers.
+
+NOTE: do not import .dryrun from here — it sets
+xla_force_host_platform_device_count at import time and must only be run
+as a main module (`python -m repro.launch.dryrun`).
+"""
+
+from .mesh import make_production_mesh, make_smoke_mesh

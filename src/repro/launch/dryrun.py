@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, prove memory fits, and emit the roofline terms (EXPERIMENTS.md
+§Dry-run / §Roofline read the JSON this writes).
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init) — that is why they precede the module docstring's
+imports and why this env var is never set globally.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh both --out runs/dryrun.json
+    ... --arch llama3-405b --shape train_4k --mesh multi -v
+    ... --policy kv_layout=batch --policy seq_parallel_acts=1   # hillclimbs
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_arch
+from ..configs.shapes import (ShapeConfig, cache_specs, input_specs,
+                              skip_reason, tokens_in)
+from ..core.hlo_analysis import analyze_hlo
+from ..core.pim_model import TPU_V5E
+from ..core.roofline import (RooflineReport, roofline_from_analysis,
+                             render_markdown_table, what_would_move_it)
+from ..models import (DECODE_POLICY, TRAIN_POLICY, ModelConfig, Policy,
+                      Shardings, param_shape_structs, param_specs)
+from ..serve import make_decode_step, make_prefill_step
+from ..train import HParams, make_train_step
+from .mesh import make_production_mesh
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def _opt_structs_and_specs(cfg: ModelConfig, shd: Shardings):
+    pstructs = param_shape_structs(cfg)
+    pspecs = param_specs(cfg, shd)
+    mdt = jnp.dtype(cfg.opt_moment_dtype)
+    mstructs = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                            pstructs)
+    ostructs = {"m": mstructs, "v": mstructs,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    return ostructs, ospecs
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               policy: Policy | None = None, verbose: bool = False):
+    """Lower + compile one (arch, shape, mesh) cell. Returns a record dict."""
+    t0 = time.perf_counter()
+    pol = policy or (TRAIN_POLICY if shape.kind == "train" else DECODE_POLICY)
+    shd = Shardings(mesh, pol)
+    n_chips = mesh.size
+
+    pspecs = param_specs(cfg, shd)
+    pstructs = param_shape_structs(cfg)
+    in_structs, in_spec_tree = input_specs(cfg, shape, shd)
+    p_sh = _named(mesh, pspecs)
+    b_sh = _named(mesh, in_spec_tree)
+
+    if shape.kind == "train":
+        ostructs, ospecs = _opt_structs_and_specs(cfg, shd)
+        o_sh = _named(mesh, ospecs)
+        step = make_train_step(cfg, shd, HParams())
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None))
+        lowered = jitted.lower(pstructs, ostructs, in_structs)
+    else:
+        cstructs, cspecs = cache_specs(cfg, shape, shd)
+        c_sh = _named(mesh, cspecs)
+        logits_sh = NamedSharding(
+            mesh, shd.spec((shape.global_batch, cfg.vocab_size),
+                           ("batch", "vocab"), "logits"))
+        if shape.kind == "prefill":
+            step = make_prefill_step(cfg, shd)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh),
+                             out_shardings=((logits_sh, c_sh)))
+            lowered = jitted.lower(pstructs, cstructs, in_structs)
+        else:  # decode
+            step = make_decode_step(cfg, shd)
+            tok_sh = b_sh["tokens"]
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh),
+                             out_shardings=((logits_sh, c_sh)))
+            lowered = jitted.lower(pstructs, cstructs, in_structs["tokens"])
+
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    # --- memory / cost analysis (proves it fits; feeds §Roofline) -------
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+    try:
+        cost = compiled.cost_analysis()
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "utilization operand 0 {}",
+                 "optimal_seconds")} or \
+               {k: float(v) for k, v in list(cost.items())[:8]
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        cost = {"error": str(e)}
+
+    analysis = analyze_hlo(compiled.as_text(),
+                           trip_count_fallback=cfg.n_blocks)
+    mf = cfg.model_flops(tokens=tokens_in(shape),
+                         train=(shape.kind == "train"))
+    name = f"{cfg.name}/{shape.name}"
+    # analytic minimum bytes the step must stream (global; roofline.py
+    # divides by chips): params once (+grads/moments for train, active
+    # params only for MoE decode), plus the KV/state cache for serving
+    bp = jnp.dtype(cfg.dtype).itemsize
+    bm = jnp.dtype(cfg.opt_moment_dtype).itemsize
+    if shape.kind == "train":
+        model_bytes = cfg.param_count() * (3 * bp + 4 * bm)
+    else:
+        active = cfg.param_count(active_only=(shape.kind == "decode"))
+        cache_b = sum(
+            s.size * s.dtype.itemsize
+            for s in jax.tree.leaves(cache_specs(cfg, shape, None)[0]))
+        model_bytes = active * bp + cache_b
+    report = roofline_from_analysis(analysis, name=name, n_chips=n_chips,
+                                    model_flops=mf, model_bytes=model_bytes)
+    # HBM residency per device: params (+moments when training) + cache
+    bytes_per_param = jnp.dtype(cfg.dtype).itemsize
+    resident = cfg.param_count() * bytes_per_param
+    if shape.kind == "train":
+        resident += 2 * cfg.param_count() * jnp.dtype(cfg.opt_moment_dtype).itemsize
+    resident /= n_chips
+
+    rec = {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "resident_bytes_per_device_est": int(resident),
+        "dropped_shardings": shd.dropped[:20],
+        "roofline": report.to_row(),
+        "collectives": [dataclasses.asdict(c) for c in analysis.collectives[:12]],
+        "flops_per_device": analysis.flops,
+        "hbm_bytes_per_device": analysis.hbm_bytes,
+        "collective_bytes_per_device": analysis.collective_bytes,
+        "guidance": what_would_move_it(report),
+    }
+    if verbose:
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis:   {cost}")
+        print(f"  roofline:        {report.to_row()}")
+        print(f"  guidance:        {rec['guidance']}")
+    return rec, report
+
+
+def _parse_policy(kvs: list[str], base: Policy) -> Policy:
+    changes = {}
+    for kv in kvs:
+        k, v = kv.split("=", 1)
+        f = {f.name: f for f in dataclasses.fields(Policy)}[k]
+        if f.type == "bool" or isinstance(getattr(base, k), bool):
+            changes[k] = v not in ("0", "false", "False")
+        elif isinstance(getattr(base, k), tuple):
+            changes[k] = tuple(x for x in v.split(",") if x)
+        else:
+            changes[k] = v
+    return dataclasses.replace(base, **changes)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--policy", action="append", default=[],
+                    help="Policy overrides, e.g. kv_layout=batch")
+    ap.add_argument("--remat-group", type=int, default=0,
+                    help="override every arch's remat_group (0 = config)")
+    ap.add_argument("--out", default="")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records, reports = [], []
+    failures = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "multi(2,16,16)" if multi_pod else "single(16,16)"
+        for arch in archs:
+            cfg = get_arch(arch)
+            if args.remat_group:
+                cfg = dataclasses.replace(cfg, remat_group=args.remat_group)
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                reason = skip_reason(cfg, shape)
+                tag = f"{cfg.name:22s} x {shape.name:12s} @ {mesh_name}"
+                if reason:
+                    print(f"SKIP {tag}: {reason}")
+                    records.append({"arch": cfg.name, "shape": shape.name,
+                                    "mesh": mesh_name, "status": "skip",
+                                    "reason": reason})
+                    continue
+                try:
+                    pol_base = (TRAIN_POLICY if shape.kind == "train"
+                                else DECODE_POLICY)
+                    pol = _parse_policy(args.policy, pol_base) \
+                        if args.policy else None
+                    rec, rep = lower_cell(cfg, shape, mesh, pol,
+                                          args.verbose)
+                    rec["mesh_name"] = mesh_name
+                    records.append(rec)
+                    if not multi_pod:
+                        reports.append(rep)  # roofline table: single-pod
+                    r = rec["roofline"]
+                    print(f"OK   {tag}: compile={rec['compile_s']:.1f}s "
+                          f"dominant={r['dominant']} "
+                          f"frac={r['roofline_fraction']:.3f}")
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                    if args.verbose:
+                        traceback.print_exc()
+                    records.append({"arch": cfg.name, "shape": shape.name,
+                                    "mesh": mesh_name, "status": "fail",
+                                    "error": f"{type(e).__name__}: {e}"})
+
+    if reports:
+        print("\n## Roofline (single-pod)\n")
+        print(render_markdown_table(reports))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"\nwrote {len(records)} records -> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

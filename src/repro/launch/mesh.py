@@ -1,0 +1,31 @@
+"""Production meshes. Functions, not module constants — importing this
+module never touches jax device state (the dry-run sets
+xla_force_host_platform_device_count BEFORE any jax call).
+
+Topology (TPU v5e pods):
+  single-pod : (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+"model" is the innermost axis (fastest ICI ring) — tensor-parallel
+collectives are the latency-critical ones. "pod" is outermost: only
+data-parallel gradient all-reduces cross the inter-pod links (the paper's
+Takeaway-3 discipline applied to the mesh: high-rate traffic stays on the
+local axis, cross-pod traffic is one all-reduce per step).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n: int | None = None):
+    """A tiny mesh over whatever devices exist (tests / examples)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((1, n), ("data", "model"))

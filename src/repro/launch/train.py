@@ -1,0 +1,71 @@
+"""Training launcher: `python -m repro.launch.train --arch mixtral-8x7b`.
+
+Runs the fault-tolerant TrainLoop on the available devices (reduced configs
+on this CPU container; the same driver code path runs full configs on a
+real pod — the mesh and shardings come from launch/mesh.py either way).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch mixtral-8x7b --reduced --steps 100 --batch 8 --seq 128 \
+        --ckpt-dir /tmp/run1    # rerun resumes from the latest checkpoint
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from ..configs import get_arch
+from ..configs.shapes import ShapeConfig
+from ..models import Shardings, TRAIN_POLICY
+from ..train import DataConfig, HParams, LoopConfig, TrainLoop
+from .mesh import make_smoke_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over all local devices")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    mesh = make_smoke_mesh() if args.mesh else None
+    shd = Shardings(mesh, TRAIN_POLICY)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    hp = HParams(lr=args.lr, warmup_steps=args.warmup,
+                 total_steps=args.steps)
+    loop_cfg = LoopConfig(total_steps=args.steps,
+                          ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir, log_every=10)
+    loop = TrainLoop(cfg, shape, shd, hp, loop_cfg)
+
+    state = loop.resume_or_init(args.seed)
+    if state.step:
+        print(f"resumed from step {state.step}")
+    t0 = time.perf_counter()
+    state = loop.run(state)
+    dt = time.perf_counter() - t0
+    toks = (args.steps - 0) * args.batch * args.seq
+    for m in loop.metrics_log:
+        print(json.dumps(m))
+    print(f"done: {state.step} steps, {dt:.1f}s, "
+          f"{toks / max(dt, 1e-9):.0f} tok/s, "
+          f"stragglers={len(loop.straggler_steps)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+"""repro.models — the architecture zoo (dense/MoE/hybrid/SSM/enc-dec/VLM)."""
+
+from .config import LayerSpec, ModelConfig
+from .sharding import (ParamDef, Policy, Shardings, stack_defs, tree_specs,
+                       tree_shape_structs, TRAIN_POLICY, DECODE_POLICY)
+from .transformer import (forward, init_params, lm_loss, param_defs,
+                          param_shape_structs, param_specs)
+from .cache import cache_defs, init_cache, cache_width

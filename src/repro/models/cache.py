@@ -1,0 +1,137 @@
+"""Decode caches: full / sliding-window-ring KV, SSM states, cross-attn KV.
+
+Slot->position math is derived from a single scalar `index` (tokens written
+so far), so no positions array is stored or checkpointed:
+
+  full cache (W == max_len):  slot s holds position s, valid iff s < index
+  ring cache (W == window):   slot s holds p = (index-1) - ((index-1 - s) % W),
+                              valid iff p >= 0
+
+KV tensors are sequence-sharded over the model axis by default
+(flash-decoding; the bank-parallel layout of DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import LayerSpec, ModelConfig
+from .mamba import mamba_state_defs
+from .rwkv import rwkv_state_defs
+from .sharding import ParamDef, Shardings, stack_defs
+
+
+def kv_defs(cfg: ModelConfig, batch: int, width: int, name: str) -> dict:
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": ParamDef((batch, width, kvh, hd),
+                      ("batch", "cache_seq", None, None), f"{name}.k", "zeros"),
+        "v": ParamDef((batch, width, kvh, hd),
+                      ("batch", "cache_seq", None, None), f"{name}.v", "zeros"),
+    }
+
+
+def cross_kv_defs(cfg: ModelConfig, batch: int, name: str) -> dict:
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": ParamDef((batch, cfg.encoder_seq, kvh, hd),
+                      ("batch", "cache_seq", None, None), f"{name}.ck", "zeros"),
+        "v": ParamDef((batch, cfg.encoder_seq, kvh, hd),
+                      ("batch", "cache_seq", None, None), f"{name}.cv", "zeros"),
+    }
+
+
+def cache_width(cfg: ModelConfig, max_len: int) -> int:
+    """Ring-buffer width: the window if it is smaller than the context."""
+    if cfg.sliding_window and cfg.sliding_window < max_len:
+        return cfg.sliding_window
+    return max_len
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ParamDef tree for the whole decode cache (stacked over blocks)."""
+    width = cache_width(cfg, max_len)
+    per_pos = []
+    for i, spec in enumerate(cfg.layer_pattern()):
+        name = f"cache.l{i}"
+        if spec.kind == "attn":
+            d = kv_defs(cfg, batch, width, name)
+            if spec.cross_attn:
+                d.update(cross=cross_kv_defs(cfg, batch, name))
+        elif spec.kind == "mamba":
+            d = mamba_state_defs(cfg, batch, name)
+        elif spec.kind == "rwkv":
+            d = rwkv_state_defs(cfg, batch, name)
+        else:
+            d = {}
+        per_pos.append(d)
+    layers = [stack_defs(d, cfg.n_blocks) for d in per_pos]
+    return {
+        "index": ParamDef((), (), "cache.index", "zeros", "int32"),
+        "layers": layers,
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               shd: Shardings | None = None) -> dict:
+    """Zero-initialized cache (concrete arrays, optionally sharded)."""
+    from .sharding import tree_specs, is_def
+    defs = cache_defs(cfg, batch, max_len)
+
+    def mk(d: ParamDef):
+        dt = jnp.dtype(d.dtype or ("float32" if "wkv" in d.name
+                                   or d.name.endswith(".h") else cfg.dtype))
+        arr = jnp.zeros(d.shape, dt)
+        if shd is not None and shd.mesh is not None:
+            arr = jax.device_put(arr, shd.named(d.shape, d.kinds, d.name))
+        return arr
+    return jax.tree.map(mk, defs, is_leaf=is_def)
+
+
+def slot_positions(count, width: int):
+    """True position held by each slot given `count` tokens written.
+
+    count: scalar -> (W,); per-row (B,) -> (B, W). -1 marks empty slots.
+    Per-row counts support continuous batching (length-skewed slots share
+    one batched cache — serve/engine.py)."""
+    s = jnp.arange(width, dtype=jnp.int32)
+    idx1 = jnp.asarray(count, jnp.int32) - 1
+    if jnp.ndim(idx1):
+        idx1 = idx1[:, None]
+    pos = idx1 - jnp.mod(idx1 - s, width)
+    return jnp.where(pos >= 0, pos, -1)
+
+
+def write_decode(kv: dict, k_new, v_new, index, width: int) -> dict:
+    """Insert one token's k/v at slot index % width. k_new: (B,1,KVH,hd).
+    index: scalar (synchronized batch) or (B,) per-row positions."""
+    slot = jnp.mod(jnp.asarray(index, jnp.int32), width)
+    if jnp.ndim(slot) == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            kv["k"], k_new.astype(kv["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            kv["v"], v_new.astype(kv["v"].dtype), slot, axis=1)
+    else:
+        upd = jax.vmap(lambda dst, src, sl:
+                       jax.lax.dynamic_update_slice_in_dim(dst, src, sl, axis=0))
+        k = upd(kv["k"], k_new.astype(kv["k"].dtype), slot)
+        v = upd(kv["v"], v_new.astype(kv["v"].dtype), slot)
+    return dict(kv, k=k, v=v)
+
+
+def write_prefill(kv: dict, k_full, v_full) -> dict:
+    """Write a prefill's k/v. If the prefill is longer than the (ring)
+    cache, keep the last `width` tokens at their p % width slots."""
+    s, width = k_full.shape[1], kv["k"].shape[1]
+    if s > width:
+        k_full = jnp.roll(k_full[:, s - width:], s % width, axis=1)
+        v_full = jnp.roll(v_full[:, s - width:], s % width, axis=1)
+        s = width
+    k = jax.lax.dynamic_update_slice_in_dim(
+        kv["k"], k_full.astype(kv["k"].dtype), 0, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        kv["v"], v_full.astype(kv["v"].dtype), 0, axis=1)
+    return dict(kv, k=k, v=v)

@@ -1,0 +1,211 @@
+"""RWKV-6 (Finch) block: data-dependent-decay linear attention + channel mix.
+
+The wkv state is (B, H, hs, hs) per layer, updated per token:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (faaaa * (k_t^T v_t) + S_t)
+Training/prefill runs a `lax.scan` over time (sequence-chunked at the
+caller's discretion); decode is one step. Attention-free: O(1) state makes
+this the strongest fit for the paper's bank-parallel decode mapping (pure
+weight/state streaming, no inter-bank traffic).
+
+Time-mix projections stay head-aligned: (D, D) weights are sharded on the
+*input* dim (contracting) so outputs keep whole heads per chip regardless
+of H % tp (H=40 does not divide a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import ParamDef, Shardings
+
+_MIX = ("w", "k", "v", "r", "g")
+
+#: chunk length for the parallel wkv formulation. 8 * max |log w| (= 8 per
+#: the decay clamp) keeps every pairwise exponent within f32 range.
+WKV_CHUNK = 8
+
+
+def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int):
+    """Chunked-parallel wkv: solve S_{t+1} = diag(w_t) S_t + k_t^T v_t and
+    o_t = r_t (u ⊙ k_t^T v_t + S_t) with the state carried once per chunk.
+
+    Within a chunk (log-space, c_t = sum_{i<t} log w_i from chunk start):
+        o_t  = (r_t e^{c_t}) S0             (inter-chunk, one matmul)
+             + sum_{j<t} [r_t·k_j e^{c_t - c_{j+1}}] v_j   (intra, masked
+               (C,C) attention-like matmul pair on the MXU)
+             + (r_t·(u ⊙ k_t)) v_t          (diagonal bonus term)
+        S'   = diag(e^{c_C}) S0 + sum_j diag(e^{c_C - c_{j+1}}) k_j^T v_j
+    All exponents are differences of same-chunk cumulative sums, bounded by
+    chunk * max|log w| <= 64 < 88.7 (f32 exp range) via the decay clamp.
+
+    rh/kh/vh/wh: (B,S,H,hs) f32; S0: (B,H,hs,hs) f32.
+    Returns (S_final, o (B,S,H,hs))."""
+    b, s, h, hs = rh.shape
+    n = s // chunk
+    resh = lambda x: x.reshape(b, n, chunk, h, hs).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = resh(rh), resh(kh), resh(vh), resh(wh)
+
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def chunk_step(S, inp):
+        r, k, v, w = inp                       # (B,C,H,hs)
+        lw = jnp.log(w)
+        cum = jnp.cumsum(lw, axis=1)           # c_{t+1}: sum_{i<=t}
+        c_ex = cum - lw                        # c_t: sum_{i<t}
+        q = r * jnp.exp(c_ex)                  # (B,C,H,hs)
+        o_inter = jnp.einsum("bchk,bhkv->bchv", q, S)
+        kd = k * jnp.exp(-cum)                 # e^{-c_{j+1}} k_j
+        A = jnp.einsum("bthk,bjhk->bhtj", q, kd)
+        A = jnp.where(tril[None, None], A, 0.0)
+        o_intra = jnp.einsum("bhtj,bjhv->bthv", A, v)
+        coef = jnp.einsum("bthk,hk->bth", r * k, u)
+        o_diag = coef[..., None] * v
+        wC = jnp.exp(cum[:, -1])               # (B,H,hs): e^{c_C}
+        ks = k * jnp.exp(cum[:, -1:] - cum)    # e^{c_C - c_{j+1}} k_j
+        S_new = wC[..., None] * S + jnp.einsum("bjhk,bjhv->bhkv", ks, v)
+        return S_new, o_inter + o_intra + o_diag
+
+    S_final, outs = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    # (n, B, C, H, hs) -> (B, S, H, hs)
+    o = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hs)
+    return S_final, o
+
+
+def rwkv_defs(cfg: ModelConfig, name: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lw, lm = cfg.rwkv_decay_lora, cfg.rwkv_mix_lora
+    defs = {
+        # token-shift mixing coefficients + LoRA
+        "maa_x": ParamDef((d,), (None,), f"{name}.maa_x", "small"),
+        "maa": ParamDef((5, d), (None, None), f"{name}.maa", "small"),
+        "maa_w1": ParamDef((d, 5 * lm), (None, None), f"{name}.maa_w1", "small"),
+        "maa_w2": ParamDef((5, lm, d), (None, None, None), f"{name}.maa_w2", "small"),
+        # data-dependent decay
+        "decay": ParamDef((d,), (None,), f"{name}.decay", "small"),
+        "decay_w1": ParamDef((d, lw), (None, None), f"{name}.decay_w1", "small"),
+        "decay_w2": ParamDef((lw, d), (None, None), f"{name}.decay_w2", "small"),
+        "faaaa": ParamDef((cfg.n_rwkv_heads, cfg.rwkv_head_size),
+                          (None, None), f"{name}.faaaa", "small"),
+        # projections: input-dim sharded (see module docstring)
+        "wr": ParamDef((d, d), ("tp", None), f"{name}.wr"),
+        "wk": ParamDef((d, d), ("tp", None), f"{name}.wk"),
+        "wv": ParamDef((d, d), ("tp", None), f"{name}.wv"),
+        "wg": ParamDef((d, d), ("tp", None), f"{name}.wg"),
+        "wo": ParamDef((d, d), (None, "tp"), f"{name}.wo"),
+        "ln_x": ParamDef((d,), (None,), f"{name}.ln_x", "ones"),
+        # channel mix
+        "cm_maa_k": ParamDef((d,), (None,), f"{name}.cm_maa_k", "small"),
+        "cm_maa_r": ParamDef((d,), (None,), f"{name}.cm_maa_r", "small"),
+        "cm_wk": ParamDef((d, f), ("fsdp", "tp"), f"{name}.cm_wk"),
+        "cm_wv": ParamDef((f, d), ("tp", "fsdp"), f"{name}.cm_wv"),
+        "cm_wr": ParamDef((d, d), ("tp", None), f"{name}.cm_wr"),
+    }
+    return defs
+
+
+def _token_shift(x, shift_state):
+    """x: (B,S,D); shift_state: (B,1,D) last token of previous segment."""
+    prev = jnp.concatenate([shift_state.astype(x.dtype), x[:, :-1]], axis=1)
+    return prev
+
+
+def rwkv_time_mix(x, p, cfg: ModelConfig, shd: Shardings, state):
+    b, s, d = x.shape
+    h, hs = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    lm = cfg.rwkv_mix_lora
+
+    prev = _token_shift(x, state["shift_tm"])
+    xx = prev - x
+    xxx = x + xx * p["maa_x"].astype(x.dtype)
+    # (B,S,5*lm) -> (5,B,S,lm) -> lora -> (5,B,S,D)
+    lora = jnp.tanh(jnp.einsum("bsd,dl->bsl", xxx, p["maa_w1"].astype(x.dtype)))
+    lora = lora.reshape(b, s, 5, lm).transpose(2, 0, 1, 3)
+    mix = jnp.einsum("fbsl,fld->fbsd", lora, p["maa_w2"].astype(x.dtype))
+    mix = mix + p["maa"].astype(x.dtype)[:, None, None, :]
+    xw, xk, xv, xr, xg = [x + xx * mix[i] for i in range(5)]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+
+    dec = p["decay"].astype(jnp.float32) + jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["decay_w1"].astype(x.dtype))
+                 ).astype(jnp.float32),
+        p["decay_w2"].astype(jnp.float32))
+    # per-token decay clamped to >= e^-8 (state halving every 0.09 tokens
+    # is never useful) — makes the chunked log-space formulation below
+    # overflow-safe (pairwise exponents bounded by 8*chunk < 88.7 = f32
+    # exp range). Applied in BOTH the chunked and the per-token (decode)
+    # paths, so decode == full forward stays exact.
+    w = jnp.exp(-jnp.minimum(jnp.exp(dec), 8.0))   # (B,S,D) in [e^-8, 1)
+
+    rh = r.reshape(b, s, h, hs).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hs).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hs).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hs)
+    u = p["faaaa"].astype(jnp.float32)             # (H,hs)
+
+    if s > 1 and s % WKV_CHUNK == 0:
+        # chunked parallel formulation: state touched once per CHUNK and
+        # the per-token outer products become (C x C x hs) MXU matmuls —
+        # the TPU adaptation of the paper's "put compute where the
+        # bandwidth is" (§Perf rwkv iteration; state traffic / WKV_CHUNK)
+        S_final, o = _wkv_chunked(rh, kh, vh, wh, u, state["wkv"],
+                                  WKV_CHUNK)
+        o = o.reshape(b, s, d)
+    else:
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp               # (B,H,hs) each
+            kv = k_t[..., None] * v_t[..., None, :]  # (B,H,hs,hs)
+            o_t = jnp.einsum("bhk,bhkv->bhv", r_t,
+                             u[None, :, :, None] * kv + S)
+            S_new = w_t[..., None] * S + kv
+            return S_new, o_t
+
+        xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+              vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+        S_final, outs = jax.lax.scan(step, state["wkv"], xs)
+        o = outs.transpose(1, 0, 2, 3).reshape(b, s, d)  # (B,S,D) f32
+
+    # group norm over heads (ln_x), then gate and output projection
+    o = o.reshape(b, s, h, hs)
+    mu = jnp.mean(o, -1, keepdims=True)
+    var = jnp.var(o, -1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)
+    o = o.astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", o, p["wo"].astype(x.dtype))
+    out = shd.act(out, "batch", "seq", None)
+    new_state = {"wkv": S_final, "shift_tm": x[:, -1:]}
+    return out, new_state
+
+
+def rwkv_channel_mix(x, p, cfg: ModelConfig, shd: Shardings, state):
+    prev = _token_shift(x, state["shift_cm"])
+    xx = prev - x
+    xk = x + xx * p["cm_maa_k"].astype(x.dtype)
+    xr = x + xx * p["cm_maa_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk, p["cm_wk"].astype(x.dtype))))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["cm_wr"].astype(x.dtype)))
+    out = shd.act(r * kv, "batch", "seq", None)
+    return out, {"shift_cm": x[:, -1:]}
+
+
+def rwkv_state_defs(cfg: ModelConfig, batch: int, name: str) -> dict:
+    h, hs, d = cfg.n_rwkv_heads, cfg.rwkv_head_size, cfg.d_model
+    return {
+        "wkv": ParamDef((batch, h, hs, hs), ("batch", None, None, None),
+                        f"{name}.wkv", "zeros"),
+        "shift_tm": ParamDef((batch, 1, d), ("batch", None, None),
+                             f"{name}.shift_tm", "zeros"),
+        "shift_cm": ParamDef((batch, 1, d), ("batch", None, None),
+                             f"{name}.shift_cm", "zeros"),
+    }

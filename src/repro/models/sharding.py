@@ -1,0 +1,186 @@
+"""Logical-axis sharding: one table maps model dims onto mesh axes.
+
+Production mesh axes (launch/mesh.py): ("pod",) "data", "model".
+
+Train policy (2-D FSDP x TP, MaxText-style):
+  * batch            -> ("pod", "data")
+  * weight in-dim    -> "data"   (FSDP: all-gathered per layer)
+  * weight out-dim / heads / ffn / vocab -> "model" (tensor parallel)
+  * KV-cache seq     -> "model"  (flash-decoding / bank-parallel layout)
+
+Decode reuses the same weight layout (no resharding at checkpoint load) —
+each chip streams only its weight shard per token, the PIM pattern of the
+paper (bank-local streaming + small activations exchange).
+
+Divisibility: a dim is only sharded if the axis size divides it; otherwise
+the rule is dropped for that tensor and recorded in `ShardingPlan.dropped`
+(e.g. deepseek's 56 q-heads on a 16-way model axis stay unsharded unless
+`pad_heads=True` lets GSPMD pad).
+
+Activation constraint points (`Shardings.act`) are mandatory: GSPMD loses
+the batch sharding of scan-carried residuals without them (measured: the
+405B prototype kept activations replicated over the 16-way data axis,
+499 GB/device temp -> see EXPERIMENTS.md §Perf baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    batch: tuple[str, ...] = ("pod", "data")
+    fsdp: tuple[str, ...] = ("data",)
+    tp: tuple[str, ...] = ("model",)
+    # KV cache layout: "sequence" (flash-decoding) | "heads" | "batch"
+    kv_layout: str = "sequence"
+    # shard vocab dim of embedding / lm head over tp
+    shard_vocab: bool = True
+    # allow GSPMD padding when heads don't divide the tp axis
+    pad_uneven_heads: bool = False
+    # sequence-parallel activations between layers (Megatron SP: sub-layer
+    # outputs reduce-scatter to seq-sharded; saved remat boundaries shrink
+    # by the tp size — §Perf iteration 3, on by default for training)
+    seq_parallel_acts: bool = True
+    # experts dim over tp instead of per-expert ffn TP (EP hillclimb knob)
+    expert_parallel: bool = False
+
+
+TRAIN_POLICY = Policy()
+DECODE_POLICY = Policy(kv_layout="sequence", seq_parallel_acts=False)
+
+
+class Shardings:
+    """Resolves logical dims against a concrete mesh; None mesh = no-op
+    (single-device smoke tests)."""
+
+    def __init__(self, mesh: Mesh | None, policy: Policy = TRAIN_POLICY):
+        self.mesh = mesh
+        self.policy = policy
+        self.dropped: list[str] = []
+        if mesh is not None:
+            self._axis_size = {a: mesh.shape[a] for a in mesh.axis_names}
+        else:
+            self._axis_size = {}
+
+    # -------------------------------------------------------------- #
+    def _present(self, axes: tuple[str, ...]) -> tuple[str, ...]:
+        return tuple(a for a in axes if a in self._axis_size)
+
+    def _axes_size(self, axes: tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self._axis_size[a]
+        return n
+
+    def logical(self, kind: str) -> tuple[str, ...]:
+        pol = self.policy
+        table = {
+            "batch": pol.batch,
+            "fsdp": pol.fsdp,
+            "tp": pol.tp,
+            "vocab": pol.tp if pol.shard_vocab else (),
+            "experts": pol.tp if pol.expert_parallel else (),
+            "cache_seq": pol.tp if pol.kv_layout == "sequence" else (),
+            "cache_heads": pol.tp if pol.kv_layout == "heads" else (),
+            "seq": pol.tp if pol.seq_parallel_acts else (),
+            # unconditional seq-over-tp (uneven-head attention fallback)
+            "force_seq": pol.tp,
+            "none": (),
+        }
+        return self._present(table[kind])
+
+    def spec(self, dims: tuple[int, ...], kinds: tuple[str | None, ...],
+             name: str = "?") -> P:
+        """Build a PartitionSpec for a tensor, dropping non-dividing rules."""
+        if self.mesh is None:
+            return P()
+        assert len(dims) == len(kinds), (name, dims, kinds)
+        entries: list[Any] = []
+        for dim, kind in zip(dims, kinds):
+            if kind is None:
+                entries.append(None)
+                continue
+            axes = self.logical(kind)
+            if not axes:
+                entries.append(None)
+                continue
+            size = self._axes_size(axes)
+            if dim % size != 0:
+                if kind in ("tp", "cache_heads") and self.policy.pad_uneven_heads:
+                    entries.append(axes if len(axes) > 1 else axes[0])
+                    continue
+                self.dropped.append(f"{name}[{dim}]%{size}!=0 ({kind})")
+                entries.append(None)
+                continue
+            entries.append(axes if len(axes) > 1 else axes[0])
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def named(self, dims, kinds, name="?") -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(dims, kinds, name))
+
+    # -------------------------------------------------------------- #
+    def act(self, x, *kinds: str | None):
+        """Constrain an activation's sharding (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(tuple(x.shape), kinds, "act")
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def batch_spec(self, shape) -> P:
+        """Batch-sharded on dim0, replicated elsewhere (tokens, labels).
+        Falls back to replicated when the batch doesn't divide the axis
+        (e.g. long_500k's global_batch=1)."""
+        if self.mesh is None:
+            return P()
+        kinds = ("batch",) + (None,) * (len(tuple(shape)) - 1)
+        return self.spec(tuple(shape), kinds, "batch")
+
+
+def tree_specs(shd: Shardings, defs) -> Any:
+    """Map a tree of ParamDef -> tree of PartitionSpec."""
+    return jax.tree.map(
+        lambda d: shd.spec(d.shape, d.kinds, d.name), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_shape_structs(defs, default_dtype) -> Any:
+    """Map a tree of ParamDef -> tree of jax.ShapeDtypeStruct (dry-run)."""
+    import jax.numpy as jnp  # local to avoid cycles
+
+    def f(d: "ParamDef"):
+        dt = jnp.dtype(d.dtype or default_dtype)
+        return jax.ShapeDtypeStruct(d.shape, dt)
+    return jax.tree.map(f, defs, is_leaf=is_def)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Shape + logical kinds + initializer for one parameter/state tensor."""
+    shape: tuple[int, ...]
+    kinds: tuple[str | None, ...]
+    name: str = "?"
+    init: str = "normal"        # normal | zeros | ones | small
+    dtype: str | None = None    # None -> model dtype
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(defs, n: int):
+    """Add a leading (scan/blocks) dim of size n to every ParamDef."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.kinds, d.name,
+                           d.init, d.dtype),
+        defs, is_leaf=is_def)

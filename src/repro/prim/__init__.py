@@ -1,0 +1,42 @@
+"""PrIM — the 16-workload benchmark suite of the paper (Table I), written
+against the bank-parallel execution model (core.bank_parallel).
+
+Registry: WORKLOADS maps short name -> module; HST-L shares the hst module
+with a different bin count (the paper's S/L distinction is bins-per-WRAM).
+"""
+
+from . import bfs, bs, gemv, hst, mlp, nw, red, scan_rss, scan_ssa, sel, \
+    spmv, trns, ts, uni, va
+
+WORKLOADS = {
+    "VA": va, "GEMV": gemv, "SpMV": spmv, "SEL": sel, "UNI": uni,
+    "BS": bs, "TS": ts, "BFS": bfs, "MLP": mlp, "NW": nw,
+    "HST-S": hst, "HST-L": hst, "RED": red, "SCAN-SSA": scan_ssa,
+    "SCAN-RSS": scan_rss, "TRNS": trns,
+}
+
+#: paper Fig. 4 grouping (group 1 = "more suitable")
+SUITABLE_SET = {n for n, m in WORKLOADS.items() if m.SUITABLE}
+
+
+def all_counts(n: int):
+    """WorkloadCounts for all 16 at a common scale n (perf model input)."""
+    out = []
+    for name, mod in WORKLOADS.items():
+        if name == "HST-L":
+            out.append(mod.counts_l(n))
+        else:
+            out.append(mod.counts(n))
+    return out
+
+
+def all_ref_counts():
+    """WorkloadCounts at each workload's paper-scale reference size
+    (module REF_N) — what the Fig-4 comparison validates against."""
+    out = []
+    for name, mod in WORKLOADS.items():
+        if name == "HST-L":
+            out.append(mod.counts_l(mod.REF_N))
+        else:
+            out.append(mod.counts(mod.REF_N))
+    return out

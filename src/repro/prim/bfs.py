@@ -1,0 +1,92 @@
+"""BFS — breadth-first search (graph processing, uint64 bitmaps). Table I:
+sequential + random, bitwise logic, barrier+mutex, inter-DPU communication.
+
+Level-synchronous frontier BFS: vertices (and their out-edges) are sharded
+across banks; each level is one bank-local expand (bitwise OR into a
+next-frontier bitmap) followed by a cross-bank OR exchange of the bitmap —
+the paper's worst-case inter-DPU pattern (the whole frontier crosses the
+host every level)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = False   # inter-DPU heavy (Takeaway 3)
+REF_N = 2**18      # paper-scale graphs (loc-gowalla etc are ~200K vertices)
+
+MAX_DEG = 8
+
+
+def make_inputs(n: int, key):
+    """Random graph: n vertices, MAX_DEG out-edges each (self-loops ok)."""
+    adj = jax.random.randint(key, (n, MAX_DEG), 0, n, jnp.int32)
+    return {"adj": adj, "src": jnp.zeros((), jnp.int32)}
+
+
+def ref(adj, src):
+    n = adj.shape[0]
+    dist = jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32).at[src].set(0)
+    frontier = jnp.zeros((n,), bool).at[src].set(True)
+    visited = frontier
+    level = 0
+    while bool(jnp.any(frontier)):
+        level += 1
+        nxt = jnp.zeros((n,), bool)
+        nxt = nxt.at[adj[frontier].reshape(-1)].set(True)
+        nxt = nxt & ~visited
+        dist = jnp.where(nxt, level, dist)
+        visited = visited | nxt
+        frontier = nxt
+    return dist
+
+
+def run_pim(grid: BankGrid, adj, src):
+    n = adj.shape[0]
+    dist = jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32).at[src].set(0)
+    frontier = jnp.zeros((n,), bool).at[src].set(True)
+    visited = frontier
+    level = 0
+
+    # bank-local expand over the bank's adjacency rows
+    def expand(adj_b, frontier_all):
+        bank = jax.lax.axis_index(grid.axis)
+        per = adj_b.shape[0]
+        mine = jax.lax.dynamic_slice_in_dim(frontier_all, bank * per, per)
+        targets = jnp.where(mine[:, None], adj_b, n)  # n = out of range
+        nxt = jnp.zeros((n,), bool).at[targets.reshape(-1)].set(
+            True, mode="drop")
+        return nxt.astype(jnp.uint32)
+
+    local_expand = grid.local(expand, in_specs=(P(grid.axis), P()),
+                              out_specs=P(grid.axis))
+
+    while bool(jnp.any(frontier)):
+        level += 1
+        partial = local_expand(adj, frontier)           # (B, n) per-bank
+        # exchange: cross-bank OR of the frontier bitmap (through the host)
+        nxt = jnp.any(partial.reshape(grid.n_banks, n).astype(bool), axis=0)
+        nxt = nxt & ~visited
+        dist = jnp.where(nxt, level, dist)
+        visited = visited | nxt
+        frontier = nxt
+    return dist
+
+
+def counts(n: int) -> WorkloadCounts:
+    e = n * MAX_DEG
+    levels = 4.0   # random MAX_DEG-regular graphs have tiny diameter
+    return WorkloadCounts(
+        name="BFS",
+        ops={("bitwise", "int64"): float(e + 2 * n * levels)},
+        bytes_streamed=4.0 * e + (n / 8) * levels * 4,
+        interbank_bytes=(n / 8) * levels * 64,   # bitmap x banks per level
+        flops_equiv=float(e),
+        pim_suitable=SUITABLE,
+        bytes_cpu=64.0 * e,      # random vertex touch: line per edge
+        bytes_gpu=32.0 * e / 4,  # sectors + warp coalescing over frontier
+    )

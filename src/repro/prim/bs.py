@@ -1,0 +1,51 @@
+"""BS — binary search (data analytics, int64). Table I: sequential +
+random access, compare only, no sync. Queries are sharded across banks;
+the sorted array is replicated to each bank's MRAM (the PrIM layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = True
+REF_N = 2**21      # 2M queries into a 16 MB sorted array
+
+
+def make_inputs(n: int, key):
+    """n queries against a sorted array of n elements."""
+    ka, kq = jax.random.split(key)
+    arr = jnp.sort(jax.random.randint(ka, (n,), 0, 1 << 30, jnp.int64))
+    queries = jax.random.randint(kq, (n,), 0, 1 << 30, jnp.int64)
+    return {"arr": arr, "queries": queries}
+
+
+def ref(arr, queries):
+    return jnp.searchsorted(arr, queries).astype(jnp.int32)
+
+
+def run_pim(grid: BankGrid, arr, queries):
+    def local(a, q):
+        return jnp.searchsorted(a, q).astype(jnp.int32)
+    return grid.local(local, in_specs=(P(), P(grid.axis)),
+                      out_specs=P(grid.axis))(arr, queries)
+
+
+def counts(n: int) -> WorkloadCounts:
+    import math
+    steps = max(math.log2(n), 1.0)
+    return WorkloadCounts(
+        name="BS",
+        ops={("compare", "int64"): float(n * steps)},
+        bytes_streamed=8.0 * (n * steps + n),   # random probes + queries
+        interbank_bytes=0.0,
+        flops_equiv=float(n * steps),
+        pim_suitable=SUITABLE,
+        # CPU probes are dependent 64B-line misses once below the cached
+        # tree top (~half the levels); GPU fetches 32B sectors
+        bytes_cpu=8.0 * n + 32.0 * n * steps,
+        bytes_gpu=8.0 * n + 16.0 * n * steps,
+    )

@@ -1,0 +1,65 @@
+"""Shared helpers for the PrIM workloads.
+
+Every workload module exposes the same surface:
+
+    make_inputs(n, key)      -> dict of jnp arrays (sized for n)
+    ref(**inputs)            -> oracle result (pure jnp/numpy, host-style)
+    run_pim(grid, **inputs)  -> same result, bank-parallel phase structure
+    counts(n)                -> WorkloadCounts for the Fig-4 perf model
+    SUITABLE                 -> paper Fig-4 grouping (True = group 1)
+
+`run_pim` keeps the exact UPMEM phase structure (bank-local programs +
+host-mediated exchanges, Table I's communication column); tests assert both
+correctness vs `ref` and phase discipline (no collectives inside local
+phases) via core.bank_parallel.assert_local.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bank_parallel import BankGrid
+
+
+def pad_to_banks(x, n_banks: int, axis: int = 0, fill=0):
+    """Pad dim `axis` so it divides n_banks. Returns (padded, orig_len)."""
+    n = x.shape[axis]
+    rem = (-n) % n_banks
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=fill), n
+
+
+def local_compact(vals, keep):
+    """Stable compaction of `vals` where keep is True; returns
+    (compacted_padded, count). Padded slots hold the last kept value
+    (callers slice by count). Pure bank-local (sort by ~keep)."""
+    idx = jnp.argsort(~keep, stable=True)
+    comp = vals[idx]
+    count = jnp.sum(keep.astype(jnp.int32))
+    return comp, count
+
+
+def assemble_compact(parts, counts, total_len: int):
+    """Host-side assembly of per-bank compacted parts (B, L) + counts (B,)
+    into one dense array — the serial DPU->host retrieve of the paper."""
+    b, l = parts.shape
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    out = jnp.zeros((total_len,), parts.dtype)
+    # scatter each bank's first counts[i] values at offs[i]
+    pos_in_bank = jnp.arange(l)[None, :]                      # (1, L)
+    dest = offs[:, None] + pos_in_bank                        # (B, L)
+    valid = pos_in_bank < counts[:, None]
+    dest = jnp.where(valid, dest, total_len)                  # drop pads
+    out = out.at[dest.reshape(-1)].set(parts.reshape(-1), mode="drop")
+    return out
+
+
+def zipf_ints(key, n: int, vocab: int, dtype=jnp.int32):
+    u = jax.random.uniform(key, (n,), jnp.float32, 1e-6, 1.0)
+    ids = jnp.floor(jnp.power(u, -1.0 / 0.9)).astype(jnp.int32)
+    return jnp.clip(ids, 0, vocab - 1).astype(dtype)

@@ -1,0 +1,50 @@
+"""GEMV — matrix-vector multiply (dense linear algebra). Table I:
+sequential, add+mul, uint32. Row-block partitioning: each bank owns M/B
+rows of A and the whole x (the UPMEM layout); y is produced bank-locally
+and retrieved by the host. No inter-DPU communication.
+
+This is the decode-GEMV of the LM serving path (DESIGN.md §4): the
+weight-stationary pattern the paper's technique maps onto."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = False   # uses multiplication (Takeaway 2)
+REF_N = 2**13      # 8192 x 2048
+
+
+def make_inputs(n: int, key):
+    """n = M; N fixed at n//4 for a 4:1 aspect (paper uses 8192x1024)."""
+    m, k = n, max(n // 4, 8)
+    ka, kx = jax.random.split(key)
+    return {"A": jax.random.randint(ka, (m, k), 0, 64, jnp.uint32),
+            "x": jax.random.randint(kx, (k,), 0, 64, jnp.uint32)}
+
+
+def ref(A, x):
+    return (A.astype(jnp.uint64) @ x.astype(jnp.uint64)).astype(jnp.uint32)
+
+
+def run_pim(grid: BankGrid, A, x):
+    def local(Ab, xb):
+        return (Ab.astype(jnp.uint64) @ xb.astype(jnp.uint64)).astype(jnp.uint32)
+    return grid.local(local, in_specs=(P(grid.axis), P()),
+                      out_specs=P(grid.axis))(A, x)
+
+
+def counts(n: int) -> WorkloadCounts:
+    m, k = n, max(n // 4, 8)
+    return WorkloadCounts(
+        name="GEMV",
+        ops={("mul", "int32"): float(m * k), ("add", "int32"): float(m * k)},
+        bytes_streamed=4.0 * (m * k + k + m),
+        interbank_bytes=0.0,
+        flops_equiv=2.0 * m * k,
+        pim_suitable=SUITABLE,
+    )

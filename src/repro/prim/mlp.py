@@ -1,0 +1,62 @@
+"""MLP — multilayer perceptron inference (neural networks, int32).
+Table I: sequential, add+mul+compare (ReLU), no intra-DPU sync, but each
+layer boundary is an inter-DPU exchange: the layer output must be gathered
+and re-broadcast because the next layer's GEMV needs the WHOLE vector on
+every bank (weights are row-partitioned, Takeaway 3's cost made visible)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = False   # multiplication (Takeaway 2)
+REF_N = 2**12      # 3 square layers of width 4096
+
+N_LAYERS = 3
+
+
+def make_inputs(n: int, key):
+    """n = layer width; N_LAYERS square layers."""
+    keys = jax.random.split(key, N_LAYERS + 1)
+    ws = [jax.random.randint(keys[i], (n, n), -4, 5, jnp.int32)
+          for i in range(N_LAYERS)]
+    x = jax.random.randint(keys[-1], (n,), -4, 5, jnp.int32)
+    return {"ws": ws, "x": x}
+
+
+def ref(ws, x):
+    h = x
+    for w in ws:
+        h = jnp.maximum(w.astype(jnp.int64) @ h.astype(jnp.int64), 0) \
+            .astype(jnp.int32)
+    return h
+
+
+def run_pim(grid: BankGrid, ws, x):
+    def layer(wb, hb):
+        y = wb.astype(jnp.int64) @ hb.astype(jnp.int64)
+        return jnp.maximum(y, 0).astype(jnp.int32)
+    local_gemv = grid.local(layer, in_specs=(P(grid.axis), P()),
+                            out_specs=P(grid.axis))
+    h = x
+    for w in ws:
+        part = local_gemv(w, h)       # bank-local GEMV on the row block
+        h = grid.exchange_gather(part)  # layer boundary: through the host
+    return h
+
+
+def counts(n: int) -> WorkloadCounts:
+    ops_mm = float(N_LAYERS * n * n)
+    return WorkloadCounts(
+        name="MLP",
+        ops={("mul", "int32"): ops_mm, ("add", "int32"): ops_mm,
+             ("compare", "int32"): float(N_LAYERS * n)},
+        bytes_streamed=4.0 * (N_LAYERS * n * n + 2 * N_LAYERS * n),
+        interbank_bytes=4.0 * N_LAYERS * n,   # gather+rebroadcast per layer
+        flops_equiv=2.0 * ops_mm,
+        pim_suitable=SUITABLE,
+    )

@@ -1,0 +1,128 @@
+"""NW — Needleman-Wunsch global sequence alignment (bioinformatics, int32).
+Table I: sequential + strided, add/sub/compare, barrier, inter-DPU
+communication. The paper's canonical BAD-fit workload: every wavefront step
+moves block boundaries between DPUs through the host.
+
+Bank-parallel block-wavefront (the PrIM 2-D blocking):
+  * columns are partitioned across banks (w = n/B each); rows are processed
+    in blocks of height h (R = n/h row-blocks),
+  * at wavefront step t, bank b computes row-block r = t - b: a (h, w) DP
+    block, given its own previous top row (bank-local carry) and the left
+    boundary column received from bank b-1 (exchange_shift per step),
+  * the within-row dependence H[i][j] = max(c[j], H[i][j-1] - gap) is
+    solved with the max-plus cummax transform
+        H[i][p] = cummax(c[p] + gap*p) - gap*p
+    so a whole row is one vectorized pass (the 8-tasklet inner loop of the
+    UPMEM version becomes a VPU-wide scan).
+
+Scoring: match +1, mismatch -1, linear gap -2 (vs the numpy oracle)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = False   # inter-DPU per wavefront step (Takeaway 3)
+REF_N = 2**12      # 4096 x 4096 DP matrix
+
+MATCH, MISMATCH, GAP = 1, -1, 2
+
+
+def make_inputs(n: int, key):
+    ka, kb = jax.random.split(key)
+    return {"a": jax.random.randint(ka, (n,), 0, 4, jnp.int32),
+            "b": jax.random.randint(kb, (n,), 0, 4, jnp.int32)}
+
+
+def ref(a, b):
+    """Full numpy DP; returns the last row H[n][1..n]."""
+    a, b = np.asarray(a), np.asarray(b)
+    n, m = len(a), len(b)
+    H = np.zeros((n + 1, m + 1), np.int32)
+    H[0, :] = -GAP * np.arange(m + 1)
+    H[:, 0] = -GAP * np.arange(n + 1)
+    for i in range(1, n + 1):
+        s = np.where(b == a[i - 1], MATCH, MISMATCH)
+        for j in range(1, m + 1):
+            H[i, j] = max(H[i - 1, j - 1] + s[j - 1],
+                          H[i - 1, j] - GAP, H[i, j - 1] - GAP)
+    return jnp.asarray(H[n, 1:])
+
+
+def _block(a_rows, b_local, top, left_col, corner):
+    """Solve one (h, w) DP block. Returns (new_top, right_col)."""
+    w = b_local.shape[0]
+    gaps = GAP * jnp.arange(w + 1, dtype=jnp.int32)
+
+    def row_fn(carry, inp):
+        prev_row, prev_left = carry          # H[i-1][cols], H[i-1][c0]
+        a_i, left_val = inp                  # row char, H[i][c0]
+        diag = jnp.concatenate([prev_left[None], prev_row[:-1]])
+        s = jnp.where(b_local == a_i, MATCH, MISMATCH)
+        c = jnp.maximum(diag + s, prev_row - GAP)
+        e = jnp.concatenate([left_val[None], c]) + gaps
+        h_row = (jax.lax.cummax(e) - gaps)[1:]
+        return (h_row, left_val), h_row[-1]
+
+    (new_top, _), right_col = jax.lax.scan(
+        row_fn, (top, corner), (a_rows, left_col))
+    return new_top, right_col
+
+
+def run_pim(grid: BankGrid, a, b, block_rows: int | None = None):
+    """Returns the final DP row H[n][1..n] (bank-sharded concatenation)."""
+    n = int(a.shape[0])
+    nb = grid.n_banks
+    w = n // nb
+    h = block_rows or max(w, 1)
+    assert n % nb == 0 and n % h == 0, (n, nb, h)
+    r_blocks = n // h
+
+    top = -GAP * (jnp.arange(n, dtype=jnp.int32) + 1)   # H[0][1..n]
+    msg = jnp.zeros((nb, h + 1), jnp.int32)             # right_col + corner
+
+    def step_fn(t, a_all, b_loc, top_loc, msg_in):
+        bank = jax.lax.axis_index(grid.axis)
+        r_idx = t - bank
+        active = (r_idx >= 0) & (r_idx < r_blocks)
+        r_safe = jnp.clip(r_idx, 0, r_blocks - 1)
+        row0 = r_safe * h
+        # left boundary: bank 0 uses the DP edge, others the neighbor msg
+        bound_left = -GAP * (row0 + 1 + jnp.arange(h, dtype=jnp.int32))
+        bound_corner = (-GAP * row0).astype(jnp.int32)
+        left_col = jnp.where(bank == 0, bound_left, msg_in[0, :h])
+        corner = jnp.where(bank == 0, bound_corner, msg_in[0, h])
+        a_rows = jax.lax.dynamic_slice_in_dim(a_all, row0, h)
+        send_corner = top_loc[-1]            # H[row0][my last col]
+        new_top, right_col = _block(a_rows, b_loc, top_loc, left_col, corner)
+        top_out = jnp.where(active, new_top, top_loc)
+        msg_out = jnp.concatenate([right_col, send_corner[None]])[None]
+        return top_out, msg_out
+
+    for t in range(nb + r_blocks - 1):
+        msg_in = grid.exchange_shift(msg, offset=1)   # host handshake
+        top, msg = grid.local(
+            functools.partial(step_fn, t),
+            in_specs=(P(), P(grid.axis), P(grid.axis), P(grid.axis)),
+            out_specs=(P(grid.axis), P(grid.axis)))(a, b, top, msg_in)
+    return top
+
+
+def counts(n: int) -> WorkloadCounts:
+    cells = float(n * n)
+    return WorkloadCounts(
+        name="NW",
+        ops={("add", "int32"): 2 * cells, ("sub", "int32"): 2 * cells,
+             ("compare", "int32"): 3 * cells},
+        bytes_streamed=4.0 * 2 * cells,
+        interbank_bytes=8.0 * 64 * n,   # block boundaries, every wavefront
+        flops_equiv=4.0 * cells,
+        pim_suitable=SUITABLE,
+    )

@@ -1,0 +1,44 @@
+"""RED — reduction (parallel primitives, int64). Table I: sequential +
+strided, add, barrier, inter-DPU communication (the cross-bank tree).
+
+Phases: bank-local sum -> cross-bank tree reduction (through the host)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = True
+REF_N = 2**27
+
+
+def make_inputs(n: int, key):
+    return {"x": jax.random.randint(key, (n,), -1000, 1000, jnp.int64)}
+
+
+def ref(x):
+    return jnp.sum(x)
+
+
+def run_pim(grid: BankGrid, x):
+    # phase 1: bank-local reduce
+    local = grid.local(lambda xb: jnp.sum(xb)[None], in_specs=P(grid.axis),
+                       out_specs=P(grid.axis))(x)
+    # phase 2: cross-bank tree (psum exchange)
+    total = grid.exchange_reduce(local, op="add")
+    return total[0]
+
+
+def counts(n: int) -> WorkloadCounts:
+    return WorkloadCounts(
+        name="RED",
+        ops={("add", "int64"): float(n)},
+        bytes_streamed=8.0 * n,
+        interbank_bytes=8.0 * 64,          # one scalar per bank, tiny
+        flops_equiv=float(n),
+        pim_suitable=SUITABLE,
+    )

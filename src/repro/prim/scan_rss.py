@@ -1,0 +1,52 @@
+"""SCAN-RSS — prefix sum, reduce-scan-scan variant (int64). Table I:
+sequential, add, handshake+barrier, inter-DPU communication.
+
+Phases (RSS trades a second streaming pass for not re-writing the scan):
+  1. bank-local reduce (totals only)
+  2. exchange: exclusive scan of per-bank totals (host)
+  3. bank-local full scan + offset in one pass"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = True
+REF_N = 2**27
+
+
+def make_inputs(n: int, key):
+    return {"x": jax.random.randint(key, (n,), -100, 100, jnp.int64)}
+
+
+def ref(x):
+    return jnp.cumsum(x)
+
+
+def run_pim(grid: BankGrid, x):
+    # phase 1: local reduce
+    totals = grid.local(lambda xb: jnp.sum(xb)[None],
+                        in_specs=P(grid.axis), out_specs=P(grid.axis))(x)
+    # phase 2: exclusive scan of totals (host)
+    offsets = grid.exchange_scan_sums(totals)
+    # phase 3: local scan + add in a single pass
+    def local_scan_add(xb, ob):
+        return jnp.cumsum(xb) + ob[0]
+    return grid.local(local_scan_add,
+                      in_specs=(P(grid.axis), P(grid.axis)),
+                      out_specs=P(grid.axis))(x, offsets)
+
+
+def counts(n: int) -> WorkloadCounts:
+    return WorkloadCounts(
+        name="SCAN-RSS",
+        ops={("add", "int64"): 2.0 * n},    # reduce + scan
+        bytes_streamed=8.0 * 3 * n,          # reduce pass + scan pass + write
+        interbank_bytes=8.0 * 64,
+        flops_equiv=2.0 * n,
+        pim_suitable=SUITABLE,
+    )

@@ -1,0 +1,55 @@
+"""SCAN-SSA — prefix sum, scan-scan-add variant (int64). Table I:
+sequential, add, handshake+barrier, inter-DPU communication.
+
+Phases (the PrIM SSA structure):
+  1. bank-local inclusive scan of the bank's block
+  2. exchange: exclusive scan of the per-bank totals (through the host)
+  3. bank-local add of the incoming offset"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = True
+REF_N = 2**27
+
+
+def make_inputs(n: int, key):
+    return {"x": jax.random.randint(key, (n,), -100, 100, jnp.int64)}
+
+
+def ref(x):
+    return jnp.cumsum(x)
+
+
+def run_pim(grid: BankGrid, x):
+    # phase 1: local inclusive scan (+ the bank total)
+    def local_scan(xb):
+        s = jnp.cumsum(xb)
+        return s, s[-1:]
+    scanned, totals = grid.local(
+        local_scan, in_specs=P(grid.axis),
+        out_specs=(P(grid.axis), P(grid.axis)))(x)
+    # phase 2: exclusive scan of bank totals (host)
+    offsets = grid.exchange_scan_sums(totals)
+    # phase 3: local add
+    def local_add(sb, ob):
+        return sb + ob[0]
+    return grid.local(local_add, in_specs=(P(grid.axis), P(grid.axis)),
+                      out_specs=P(grid.axis))(scanned, offsets)
+
+
+def counts(n: int) -> WorkloadCounts:
+    return WorkloadCounts(
+        name="SCAN-SSA",
+        ops={("add", "int64"): 2.0 * n},    # scan + offset add
+        bytes_streamed=8.0 * 3 * n,          # read, write scan, rewrite add
+        interbank_bytes=8.0 * 64,
+        flops_equiv=2.0 * n,
+        pim_suitable=SUITABLE,
+    )

@@ -1,0 +1,56 @@
+"""SpMV — sparse matrix-vector multiply (float32, CSR in the paper).
+Table I: sequential + random access, add+mul float. Row-block partition;
+x is replicated per bank (the paper copies it to every DPU's MRAM).
+
+JAX adaptation: rows are padded to a fixed nnz/row (ELL layout) — ragged
+CSR does not map to fixed-shape arrays; the access pattern (random gathers
+into x) and the op mix (float mul/add) are what the paper characterizes,
+and both are preserved."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = False   # floating point (Takeaway 2)
+REF_N = 2**22      # 67M nnz
+
+NNZ_PER_ROW = 16
+
+
+def make_inputs(n: int, key):
+    """n rows, NNZ_PER_ROW nonzeros each, n columns."""
+    kc, kv, kx = jax.random.split(key, 3)
+    cols = jax.random.randint(kc, (n, NNZ_PER_ROW), 0, n, jnp.int32)
+    vals = jax.random.normal(kv, (n, NNZ_PER_ROW), jnp.float32)
+    x = jax.random.normal(kx, (n,), jnp.float32)
+    return {"cols": cols, "vals": vals, "x": x}
+
+
+def ref(cols, vals, x):
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def run_pim(grid: BankGrid, cols, vals, x):
+    def local(c, v, xb):
+        return jnp.sum(v * xb[c], axis=1)   # random gather into local x copy
+    return grid.local(local, in_specs=(P(grid.axis), P(grid.axis), P()),
+                      out_specs=P(grid.axis))(cols, vals, x)
+
+
+def counts(n: int) -> WorkloadCounts:
+    nnz = n * NNZ_PER_ROW
+    return WorkloadCounts(
+        name="SpMV",
+        ops={("mul", "float"): float(nnz), ("add", "float"): float(nnz)},
+        bytes_streamed=8.0 * nnz + 4.0 * 2 * n,   # val+col per nnz, x + y
+        interbank_bytes=0.0,
+        flops_equiv=2.0 * nnz,
+        pim_suitable=SUITABLE,
+        bytes_cpu=8.0 * nnz + 64.0 * nnz + 4.0 * 2 * n,  # line per gather
+        bytes_gpu=8.0 * nnz + 16.0 * nnz + 4.0 * 2 * n,  # sector per gather
+    )

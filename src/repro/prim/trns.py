@@ -1,0 +1,66 @@
+"""TRNS — matrix transposition (int64). Table I: sequential + random,
+add/sub/mul (index arithmetic), mutex, NO inter-DPU column.
+
+The PrIM algorithm: the host performs the coarse (tile-granular) transpose
+as part of the scatter to MRAM banks; each DPU then transposes its own
+tiles in-place (step 2/3 of the paper's algorithm). Mapped here: an
+all-to-all exchange moves tile ROWS to the owning bank (the host-side
+coarse step), then a bank-local fine transpose."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = True
+REF_N = 2**13      # 8192 x 8192 int64
+
+
+def make_inputs(n: int, key):
+    """(n, n) int64 matrix."""
+    return {"A": jax.random.randint(key, (n, n), -1000, 1000, jnp.int64)}
+
+
+def ref(A):
+    return A.T
+
+
+def run_pim(grid: BankGrid, A):
+    b = grid.n_banks
+    m, n = A.shape
+
+    def local(Ab):
+        # Ab: (m/b, n). split columns into b tiles, all-to-all so bank j
+        # receives every bank's j-th column tile (the host coarse step),
+        # then transpose each received tile locally (the DPU fine step).
+        rows = Ab.shape[0]
+        tiles = Ab.reshape(rows, b, n // b)           # (r, b, n/b)
+        tiles = jnp.transpose(tiles, (1, 0, 2))       # (b, r, n/b)
+        recv = jax.lax.all_to_all(tiles, grid.axis, split_axis=0,
+                                  concat_axis=0, tiled=True)
+        # recv: (b*r, n/b) = all row blocks of my column tile
+        recv = recv.reshape(b, rows, n // b)
+        out = jnp.transpose(recv, (2, 0, 1)).reshape(n // b, m)
+        return out
+
+    return grid.local(local, in_specs=P(grid.axis),
+                      out_specs=P(grid.axis))(A)
+
+
+def counts(n: int) -> WorkloadCounts:
+    elems = float(n * n)
+    return WorkloadCounts(
+        name="TRNS",
+        ops={("add", "int64"): elems / 8, ("sub", "int64"): elems / 16,
+             ("mul", "int64"): elems / 16},   # amortized index arithmetic
+        bytes_streamed=8.0 * 2 * elems,
+        interbank_bytes=0.0,    # coarse step rides the initial host scatter
+        flops_equiv=elems / 4,
+        pim_suitable=SUITABLE,
+        bytes_cpu=(8.0 + 64.0) * elems,   # strided writes: line per element
+        # GPU tiles through shared memory: no penalty
+    )

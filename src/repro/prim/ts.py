@@ -1,0 +1,84 @@
+"""TS — time series analysis (int32). Table I: sequential, add/sub/mul/div.
+
+PrIM's TS computes a matrix-profile-style z-normalized distance of a query
+subsequence against every window of a long series. The series is sharded
+across banks with an (m-1)-element halo from the RIGHT neighbor so every
+window is computable bank-locally; the final min-distance/argmin is a tiny
+cross-bank reduction."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = False    # mul/div heavy (Takeaway 2)
+REF_N = 2**26
+
+M = 8  # query length
+
+
+def make_inputs(n: int, key):
+    ks, kq = jax.random.split(key)
+    series = jax.random.randint(ks, (n,), -100, 100, jnp.int32)
+    query = jax.random.randint(kq, (M,), -100, 100, jnp.int32)
+    return {"series": series, "query": query}
+
+
+def _dists(seg, query):
+    """Squared euclidean distance of query to every window in seg."""
+    m = query.shape[0]
+    nwin = seg.shape[0] - m + 1
+    idx = jnp.arange(nwin)[:, None] + jnp.arange(m)[None, :]
+    wins = seg[idx].astype(jnp.int64)
+    d = wins - query.astype(jnp.int64)[None, :]
+    return jnp.sum(d * d, axis=1)
+
+
+def ref(series, query):
+    d = _dists(series, query)
+    return jnp.min(d), jnp.argmin(d).astype(jnp.int32)
+
+
+def run_pim(grid: BankGrid, series, query):
+    b = grid.n_banks
+    per = series.shape[0] // b
+
+    # phase 1 (exchange): halo — first m-1 elements of the RIGHT neighbor
+    def head(xb):
+        return xb[:M - 1]
+    heads = grid.local(head, in_specs=P(grid.axis),
+                       out_specs=P(grid.axis))(series)
+    halo = grid.exchange_shift(heads, offset=-1)  # bank i gets bank i+1's head
+
+    # phase 2: bank-local windows (+ halo), local min/argmin
+    def local(xb, hb, qb):
+        bank = jax.lax.axis_index(grid.axis)
+        seg = jnp.concatenate([xb, hb])
+        d = _dists(seg, qb)
+        # windows starting in the halo belong to the next bank
+        d = jnp.where(jnp.arange(d.shape[0]) < per, d, jnp.iinfo(d.dtype).max)
+        loc = jnp.argmin(d)
+        return d[loc][None], (bank * per + loc).astype(jnp.int32)[None]
+    dmin, amin = grid.local(
+        local, in_specs=(P(grid.axis), P(grid.axis), P()),
+        out_specs=(P(grid.axis), P(grid.axis)))(series, halo, query)
+
+    # phase 3 (exchange): global min + owner  (host-side tiny reduce)
+    best = int(jnp.argmin(dmin))
+    return dmin[best], amin[best]
+
+
+def counts(n: int) -> WorkloadCounts:
+    return WorkloadCounts(
+        name="TS",
+        ops={("sub", "int32"): float(n * M), ("mul", "int32"): float(n * M),
+             ("add", "int32"): float(n * M), ("div", "int32"): float(n)},
+        bytes_streamed=4.0 * n * M,
+        interbank_bytes=0.0,
+        flops_equiv=3.0 * n * M,
+        pim_suitable=SUITABLE,
+    )

@@ -1,0 +1,71 @@
+"""UNI — database unique (remove consecutive duplicates, int64). Table I:
+sequential, add+compare, handshake+barrier, inter-DPU communication.
+
+Like SEL plus one extra exchange: bank i needs bank i-1's LAST element to
+decide whether its own first element is a duplicate (neighbor handshake)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+from .common import assemble_compact, local_compact
+
+SUITABLE = True
+REF_N = 2**27
+
+
+def make_inputs(n: int, key):
+    # runs of duplicates: sorted small-alphabet values
+    x = jnp.sort(jax.random.randint(key, (n,), 0, max(n // 4, 4), jnp.int64))
+    return {"x": x}
+
+
+def ref(x):
+    keep = jnp.concatenate([jnp.ones((1,), bool), x[1:] != x[:-1]])
+    return x[keep]
+
+
+def run_pim(grid: BankGrid, x):
+    # phase 1 (exchange): neighbor handshake — last element of bank i-1
+    def last_elem(xb):
+        return xb[-1:]
+    lasts = grid.local(last_elem, in_specs=P(grid.axis),
+                       out_specs=P(grid.axis))(x)
+    prev_last = grid.exchange_shift(lasts, offset=1)
+
+    # phase 2: bank-local predicate + compaction
+    def local(xb, prevb, bank_first_mask):
+        prev = jnp.concatenate([prevb, xb[:-1]])
+        keep = xb != prev
+        # bank 0's first element is always kept (no predecessor)
+        keep = keep | bank_first_mask
+        comp, cnt = local_compact(xb, keep)
+        return comp, cnt[None]
+
+    b = grid.n_banks
+    per = x.shape[0] // b
+    first_mask = jnp.zeros((x.shape[0],), bool).at[0].set(True)
+    parts, cnts = grid.local(
+        local, in_specs=(P(grid.axis), P(grid.axis), P(grid.axis)),
+        out_specs=(P(grid.axis), P(grid.axis)))(x, prev_last, first_mask)
+
+    # phase 3: host-side assembly
+    parts = parts.reshape(b, -1)
+    total = int(jnp.sum(cnts))
+    return assemble_compact(parts, cnts, total)[:total]
+
+
+def counts(n: int) -> WorkloadCounts:
+    kept = n / 4
+    return WorkloadCounts(
+        name="UNI",
+        ops={("compare", "int64"): float(n), ("add", "int64"): float(n)},
+        bytes_streamed=8.0 * (n + kept),
+        interbank_bytes=8.0 * 64,   # neighbor handshake + counts scan
+        flops_equiv=float(n),
+        pim_suitable=SUITABLE,
+    )

@@ -1,0 +1,40 @@
+"""VA — vector addition (dense linear algebra). Table I: sequential, add,
+int32, no intra/inter-DPU sync. The canonical PIM-suitable workload."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+
+SUITABLE = True
+REF_N = 2**27          # ~2 GB working set (paper-scale strong-scaling input)
+
+
+def make_inputs(n: int, key):
+    ka, kb = jax.random.split(key)
+    return {"a": jax.random.randint(ka, (n,), -1000, 1000, jnp.int32),
+            "b": jax.random.randint(kb, (n,), -1000, 1000, jnp.int32)}
+
+
+def ref(a, b):
+    return a + b
+
+
+def run_pim(grid: BankGrid, a, b):
+    # one bank-local phase, no exchange
+    return grid.bank_map(lambda x, y: x + y)(a, b)
+
+
+def counts(n: int) -> WorkloadCounts:
+    return WorkloadCounts(
+        name="VA",
+        ops={("add", "int32"): float(n)},
+        bytes_streamed=3.0 * 4 * n,        # read a, b; write c
+        interbank_bytes=0.0,
+        flops_equiv=float(n),
+        pim_suitable=SUITABLE,
+    )

@@ -1,0 +1,4 @@
+"""repro.serve — prefill/decode steps + batched serving engine."""
+
+from .engine import (Request, ServeEngine, make_decode_step,
+                     make_prefill_step, sample)

@@ -1,0 +1,190 @@
+"""Serving: prefill + decode steps and a batched continuous-batching loop.
+
+The decode step is the paper's workload (§4 of DESIGN.md): a batched GEMV
+against bank-resident weights — PIM-suitable by all three takeaways. The
+engine keeps the weight layout identical between prefill and decode (no
+resharding at the boundary) and a slot-based KV cache so requests of
+different lengths share one batch (continuous batching):
+
+  * `Slots` tracks per-slot position/liveness; arrivals fill free slots,
+    finished sequences free them. Positions are per-slot (`positions`
+    argument of the model forward), so one decode step advances every live
+    slot by one token regardless of length skew.
+  * Greedy sampling by default; temperature knob for examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, Shardings, forward, init_cache
+
+
+def make_prefill_step(cfg: ModelConfig, shd: Shardings):
+    """(params, cache, batch_inputs) -> (last_logits, cache)."""
+    def prefill_step(params, cache, inputs):
+        logits, cache, _ = forward(params, cfg, shd, cache=cache, **inputs)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shd: Shardings):
+    """(params, cache, tokens (B,1)) -> (logits (B,V), cache)."""
+    def decode_step(params, cache, tokens):
+        logits, cache, _ = forward(params, cfg, shd, tokens=tokens,
+                                   cache=cache)
+        return logits[:, -1], cache
+    return decode_step
+
+
+def sample(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------- #
+# batched serving engine
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray          # (S,) int32
+    max_new_tokens: int
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based batched decoding over a fixed batch of cache slots.
+
+    Single-sequence prefill per arrival (depth-first admission) + batched
+    decode for all live slots. CPU-host loop; the steps themselves are
+    jitted and mesh-shardable (the decode step is what the dry-run lowers).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int,
+                 max_len: int, shd: Shardings | None = None,
+                 temperature: float = 0.0, eos_id: int | None = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.shd = shd or Shardings(None)
+        self.params = params
+        self.n_slots = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+
+        # per-slot caches live stacked in one batched cache
+        self.cache = init_cache(cfg, batch_slots, max_len, self.shd)
+        # the model's cache carries one global index; per-slot positions
+        # are maintained here and passed through `positions`
+        self.slot_pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.slot_live = [False] * batch_slots
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
+
+        self._decode = jax.jit(self._decode_step_fn)
+        # retraces once per distinct prompt length (padded buckets in prod)
+        self._prefill_one = jax.jit(self._prefill_one_fn)
+
+    # ------------------------------------------------------------- #
+    def _decode_step_fn(self, params, cache, tokens, slot_pos, live_mask,
+                        key):
+        positions = slot_pos[:, None]
+        # index drives slot addressing; per-slot validity is the per-row
+        # positions array (cache index is the max position across slots)
+        logits, new_cache, _ = forward(params, self.cfg, self.shd,
+                                       tokens=tokens, cache=cache,
+                                       positions=positions)
+        nxt = sample(logits[:, -1], key, self.temperature)
+        # dead slots keep their last token and don't advance
+        nxt = jnp.where(live_mask, nxt, tokens[:, 0])
+        new_pos = jnp.where(live_mask, slot_pos + 1, slot_pos)
+        return nxt[:, None], new_cache, new_pos
+
+    def _prefill_one_fn(self, params, cache, tokens, slot):
+        """Prefill one slot: run the single sequence through, scatter its
+        KV rows into the batched cache at `slot`."""
+        one = init_cache(self.cfg, 1, self.max_len, self.shd)
+        logits, one, _ = forward(params, self.cfg, self.shd,
+                                 tokens=tokens[None], cache=one)
+        # scatter every per-batch tensor of `one` into row `slot` of cache
+        def scatter(c_dst, c_src):
+            # leaves have shape (blocks, B, ...) for stacked layers or (B,...)
+            def leaf(d, s):
+                if d.ndim >= 2 and d.shape[0] == self.cfg.n_blocks \
+                        and s.shape[0] == self.cfg.n_blocks:
+                    return jax.vmap(
+                        lambda dd, ss: jax.lax.dynamic_update_slice_in_dim(
+                            dd, ss.astype(dd.dtype), slot, axis=0))(d, s)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    d, s.astype(d.dtype), slot, axis=0)
+            return jax.tree.map(leaf, c_dst, c_src)
+
+        new_layers = scatter(cache["layers"], one["layers"])
+        new_cache = dict(cache, layers=new_layers,
+                         index=jnp.maximum(cache["index"], one["index"]))
+        return logits[0, -1], new_cache
+
+    # ------------------------------------------------------------- #
+    def admit(self, req: Request) -> bool:
+        """Admit a request into a free slot (prefill now). False if full."""
+        try:
+            slot = self.slot_live.index(False)
+        except ValueError:
+            return False
+        plen = int(req.prompt.shape[0])
+        logits, self.cache = self._prefill_one(
+            self.params, self.cache, req.prompt, jnp.int32(slot))
+        self.key, k = jax.random.split(self.key)
+        first = int(sample(logits, k, self.temperature))
+        req.out_tokens.append(first)
+        self.slot_live[slot] = True
+        self.slot_req[slot] = req
+        self.slot_pos = self.slot_pos.at[slot].set(plen)
+        self.last_tok = self.last_tok.at[slot, 0].set(first)
+        return True
+
+    def step(self) -> int:
+        """One batched decode step for all live slots. Returns #live."""
+        live = jnp.asarray(self.slot_live)
+        if not any(self.slot_live):
+            return 0
+        self.key, k = jax.random.split(self.key)
+        self.last_tok, self.cache, self.slot_pos = self._decode(
+            self.params, self.cache, self.last_tok, self.slot_pos, live, k)
+        toks = jax.device_get(self.last_tok[:, 0])
+        for slot, req in enumerate(self.slot_req):
+            if req is None or not self.slot_live[slot]:
+                continue
+            t = int(toks[slot])
+            req.out_tokens.append(t)
+            limit_hit = len(req.out_tokens) >= req.max_new_tokens
+            eos_hit = self.eos_id is not None and t == self.eos_id
+            if limit_hit or eos_hit or int(self.slot_pos[slot]) >= self.max_len - 1:
+                req.done = True
+                self.slot_live[slot] = False
+                self.slot_req[slot] = None
+        return sum(self.slot_live)
+
+    def serve(self, requests: list[Request]) -> list[Request]:
+        """Run a full workload: admit as slots free up, decode until done."""
+        pending = list(requests)
+        done: list[Request] = []
+        inflight: list[Request] = []
+        while pending or inflight:
+            while pending and self.admit(pending[0]):
+                inflight.append(pending.pop(0))
+            self.step()
+            for r in list(inflight):
+                if r.done:
+                    inflight.remove(r)
+                    done.append(r)
+        return done

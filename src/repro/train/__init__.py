@@ -1,0 +1,8 @@
+"""repro.train — optimizer, data, checkpointing, fault-tolerant loop."""
+
+from .checkpoint import latest_step, prune, restore, save, valid_steps
+from .data import DataConfig, make_batch
+from .optimizer import (HParams, adamw_init, adamw_update,
+                        clip_by_global_norm, global_norm, schedule)
+from .runtime import InjectedFailure, LoopConfig, LoopState, TrainLoop
+from .step import loss_fn, make_eval_step, make_train_step, train_shardings

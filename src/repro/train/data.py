@@ -1,0 +1,73 @@
+"""Synthetic data pipeline: stateless, seeded, restart-exact.
+
+A batch is a pure function of (seed, step): after a failure/restart the
+pipeline resumes from the checkpointed step with bit-identical batches (the
+fault-tolerance requirement — no data-loader state to snapshot). Tokens are
+drawn from a Zipfian-ish mixture so the LM loss has structure to descend.
+
+For the [vlm]/[audio] stub frontends the pipeline emits precomputed
+embeddings (per the assignment: the modality frontend is a stub).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import ShapeConfig
+from ..models import ModelConfig
+from ..models.sharding import Shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    zipf_exponent: float = 1.1
+
+
+def _zipf_tokens(key, shape, vocab: int, exponent: float):
+    """Zipf-distributed token ids via inverse-CDF on a uniform draw."""
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-6, 1.0)
+    # approximate inverse CDF of zipf over [1, vocab]
+    ids = jnp.floor(jnp.power(u, -1.0 / (exponent - 1.0))).astype(jnp.int32)
+    return jnp.clip(ids, 0, vocab - 1)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, step: int,
+               data_cfg: DataConfig = DataConfig(),
+               shd: Shardings | None = None) -> dict:
+    """Batch for `step`, deterministically derived from (seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(data_cfg.seed), step)
+    k_tok, k_lab, k_emb, k_enc = jax.random.split(key, 4)
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(k_emb, (b, s, cfg.d_model),
+                                            jnp.float32).astype(cfg.dtype)
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+            batch["mrope_positions"] = jnp.broadcast_to(pos[None], (3, b, s))
+    else:
+        toks = _zipf_tokens(k_tok, (b, s + 1), cfg.vocab_size,
+                            data_cfg.zipf_exponent)
+        batch["tokens"] = toks[:, :-1]
+    if cfg.input_mode == "embeds":
+        batch["labels"] = _zipf_tokens(k_lab, (b, s), cfg.vocab_size,
+                                       data_cfg.zipf_exponent)
+    else:
+        batch["labels"] = toks[:, 1:]
+    if cfg.encoder_layers:
+        batch["encoder_embeds"] = jax.random.normal(
+            k_enc, (b, cfg.encoder_seq, cfg.d_model),
+            jnp.float32).astype(cfg.dtype)
+    if shd is not None and shd.mesh is not None:
+        from jax.sharding import NamedSharding
+        def place(name, x):
+            spec = shd.batch_spec(x.shape)
+            if name == "mrope_positions":
+                spec = jax.sharding.PartitionSpec()
+            return jax.device_put(x, NamedSharding(shd.mesh, spec))
+        batch = {k: place(k, v) for k, v in batch.items()}
+    return batch

@@ -1,0 +1,117 @@
+"""AdamW in pure JAX, sharded-state friendly.
+
+Moments live in `cfg.opt_moment_dtype` (float32 default; bf16 for the 405B
+per DESIGN.md §7 — the "gradient compression" trick recorded in §Perf) and
+inherit the parameter's PartitionSpec, so optimizer state is sharded exactly
+like the weights (ZeRO-style: FSDP axis shards both).
+
+Update math follows Loshchilov & Hutter: decoupled weight decay, bias
+correction; the whole update is a `jax.tree` map so it fuses into the
+train step under jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HParams:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(step, hp: HParams):
+    """Linear warmup + cosine decay to min_lr_frac. step: int32 scalar."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(hp.warmup_steps, 1)
+    t = (s - hp.warmup_steps) / jnp.maximum(hp.total_steps - hp.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = hp.min_lr_frac + (1 - hp.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return hp.lr * jnp.where(s < hp.warmup_steps, warm, cos)
+
+
+def adamw_init(params, cfg: ModelConfig):
+    """Zero moments in cfg.opt_moment_dtype, same tree/sharding as params."""
+    mdt = jnp.dtype(cfg.opt_moment_dtype)
+
+    def zeros_like_sharded(p):
+        z = jnp.zeros(p.shape, mdt)
+        if hasattr(p, "sharding") and p.sharding is not None:
+            try:
+                z = jax.device_put(z, p.sharding)
+            except Exception:
+                pass
+        return z
+
+    return {
+        "m": jax.tree.map(zeros_like_sharded, params),
+        "v": jax.tree.map(zeros_like_sharded, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def clip_by_global_norm(grads, clip: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def adamw_update(params, grads, opt, hp: HParams, cfg: ModelConfig):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    lr = schedule(step, hp)
+    grads, gnorm = clip_by_global_norm(grads, hp.clip_norm)
+    b1, b2 = hp.b1, hp.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.opt_moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + hp.eps) + hp.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    # unzip the 3-tuples back into trees
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_opt = {"m": new_m, "v": new_v, "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_opt, metrics
+
+
+def opt_specs(param_specs_tree, moment_specs_tree=None):
+    """PartitionSpec tree for the optimizer state, mirroring the params."""
+    from jax.sharding import PartitionSpec as P
+    mspec = moment_specs_tree if moment_specs_tree is not None else param_specs_tree
+    return {"m": mspec, "v": mspec, "step": P()}

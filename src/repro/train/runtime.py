@@ -1,0 +1,121 @@
+"""Fault-tolerant training loop: checkpoint/restart, failure injection,
+straggler mitigation hooks.
+
+`TrainLoop.run()` drives steps with:
+  * periodic atomic checkpoints (train/checkpoint.py) + resume-from-latest,
+  * exact restart (data pipeline is a pure function of step — data.py),
+  * a failure injector for tests (`fail_at_step`) that kills the loop the
+    way a preempted pod would (mid-interval, after optimizer update,
+    before checkpoint) — the restart path must reproduce the exact same
+    trajectory, which tests/test_fault_tolerance.py asserts bitwise,
+  * straggler mitigation hook: per-step wall-time is tracked; steps slower
+    than `straggler_factor` x the running median invoke `on_straggler`
+    (on a real pod: re-shard away from the slow host / alert; here: logged
+    and counted so the policy is testable).
+
+Elasticity: `resume(mesh')` restores the latest checkpoint onto a different
+mesh — checkpoints are mesh-agnostic (full-array leaves + target shardings
+at restore), so scaling from 512 to 256 chips is a restore, not a reshard
+script. The dry-run (launch/dryrun.py --mesh single) re-validates that every
+arch compiles on the alternate mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from ..configs.shapes import ShapeConfig
+from ..models import ModelConfig, Shardings, init_params
+from . import checkpoint as ckpt_lib
+from .data import DataConfig, make_batch
+from .optimizer import HParams, adamw_init
+from .step import make_train_step
+
+
+class InjectedFailure(RuntimeError):
+    """Stands in for a pod preemption / host crash in tests."""
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    log_every: int = 10
+    fail_at_step: int | None = None       # failure injection (tests)
+    straggler_factor: float = 3.0
+
+
+@dataclasses.dataclass
+class LoopState:
+    params: Any
+    opt: Any
+    step: int
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 shd: Shardings, hp: HParams, loop: LoopConfig,
+                 data: DataConfig = DataConfig(),
+                 on_straggler: Callable[[int, float], None] | None = None):
+        self.cfg, self.shape, self.shd = cfg, shape, shd
+        self.hp, self.loop, self.data = hp, loop, data
+        self.train_step = jax.jit(make_train_step(cfg, shd, hp))
+        self.metrics_log: list[dict] = []
+        self.straggler_steps: list[int] = []
+        self._durations: list[float] = []
+        self.on_straggler = on_straggler
+
+    # ---------------------------------------------------------------- #
+    def init_state(self, seed: int = 0) -> LoopState:
+        params = init_params(jax.random.PRNGKey(seed), self.cfg, self.shd)
+        opt = adamw_init(params, self.cfg)
+        return LoopState(params, opt, 0)
+
+    def resume_or_init(self, seed: int = 0) -> LoopState:
+        latest = ckpt_lib.latest_step(self.loop.ckpt_dir)
+        state = self.init_state(seed)
+        if latest is None:
+            return state
+        tree = ckpt_lib.restore(self.loop.ckpt_dir, latest,
+                                {"params": state.params, "opt": state.opt})
+        return LoopState(tree["params"], tree["opt"], latest)
+
+    # ---------------------------------------------------------------- #
+    def _check_straggler(self, step: int, dt: float):
+        self._durations.append(dt)
+        if len(self._durations) < 8:
+            return
+        med = sorted(self._durations[-50:])[len(self._durations[-50:]) // 2]
+        if dt > self.loop.straggler_factor * med:
+            self.straggler_steps.append(step)
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt)
+
+    def run(self, state: LoopState) -> LoopState:
+        """Run to total_steps (raises InjectedFailure at fail_at_step)."""
+        while state.step < self.loop.total_steps:
+            step = state.step
+            if self.loop.fail_at_step is not None and step == self.loop.fail_at_step:
+                raise InjectedFailure(f"injected failure at step {step}")
+            batch = make_batch(self.cfg, self.shape, step, self.data, self.shd)
+            t0 = time.perf_counter()
+            params, opt, metrics = self.train_step(state.params, state.opt,
+                                                   batch)
+            jax.block_until_ready(metrics["loss"])
+            self._check_straggler(step, time.perf_counter() - t0)
+            state = LoopState(params, opt, step + 1)
+            if (step + 1) % self.loop.log_every == 0 or step == 0:
+                self.metrics_log.append(
+                    {"step": step + 1,
+                     **{k: float(v) for k, v in metrics.items()}})
+            if (step + 1) % self.loop.ckpt_every == 0:
+                ckpt_lib.save(self.loop.ckpt_dir, step + 1,
+                              {"params": state.params, "opt": state.opt})
+                ckpt_lib.prune(self.loop.ckpt_dir, self.loop.keep_ckpts)
+        return state

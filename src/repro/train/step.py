@@ -1,0 +1,66 @@
+"""Train / eval step factories with explicit shardings.
+
+`make_train_step` closes over (cfg, shd, hp) and returns a pure function
+`(params, opt, batch) -> (params, opt, metrics)` suitable for jax.jit with
+in_shardings/out_shardings from `train_shardings()`. Microbatch gradient
+accumulation (`accum_steps`) runs as a lax.scan over batch slices — the
+standard memory/comm trade for large global batches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import ModelConfig, Shardings, forward, lm_loss, param_specs
+from .optimizer import HParams, adamw_update
+
+
+def _forward_kwargs(batch: dict) -> dict:
+    return {k: v for k, v in batch.items() if k != "labels"}
+
+
+def loss_fn(params, batch, cfg: ModelConfig, shd: Shardings):
+    logits, _, aux = forward(params, cfg, shd, **_forward_kwargs(batch))
+    return lm_loss(logits, batch["labels"], aux, cfg.router_aux_loss)
+
+
+def make_train_step(cfg: ModelConfig, shd: Shardings, hp: HParams,
+                    accum_steps: int = 1):
+    def train_step(params, opt, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg, shd)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb, cfg, shd)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+            split = lambda x: x.reshape((accum_steps, -1) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = lsum / accum_steps
+        params2, opt2, om = adamw_update(params, grads, opt, hp, cfg)
+        metrics = {"loss": loss, **om}
+        return params2, opt2, metrics
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, shd: Shardings):
+    def eval_step(params, batch):
+        return loss_fn(params, batch, cfg, shd)
+    return eval_step
+
+
+def train_shardings(cfg: ModelConfig, shd: Shardings):
+    """(params_specs, opt_specs, batch_spec_fn) for jit in_shardings."""
+    pspecs = param_specs(cfg, shd)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    return pspecs, ospecs

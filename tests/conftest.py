@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no xla_force_host_platform_device_count here —
+smoke tests see the real (single) device; multi-bank behaviour is tested
+in a subprocess (test_prim_multibank.py) per the dry-run isolation rule."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def bank_grid():
+    """A BankGrid over whatever devices exist (1 on this container)."""
+    from repro.core.bank_parallel import BankGrid, make_bank_mesh
+    return BankGrid(make_bank_mesh())

@@ -1,0 +1,111 @@
+"""hlo_analysis / roofline / suitability validation against analytic
+ground truth on known programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_analysis import analyze_hlo, op_mix, parse_shapes
+from repro.core.pim_model import TPU_V5E, UPMEM_2556
+from repro.core.roofline import roofline_from_analysis
+from repro.core.suitability import score
+
+
+def _analyze(fn, *args, trips=1):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo(compiled.as_text(), trip_count_fallback=trips)
+
+
+def test_shape_parsing():
+    shapes = parse_shapes("(f32[128,256]{1,0}, bf16[8]{0})")
+    assert shapes[0].bytes == 128 * 256 * 4
+    assert shapes[1].bytes == 16
+
+
+def test_matmul_flops_exact():
+    m, k, n = 256, 512, 128
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    an = _analyze(lambda x, y: x @ y, a, b)
+    want = 2 * m * k * n
+    assert an.dot_flops == want, (an.dot_flops, want)
+    # bytes: read a, b; write out (within 2x for fusion variance)
+    io = (m * k + k * n + m * n) * 4
+    assert io <= an.hbm_bytes <= 3 * io
+
+
+def test_scan_trip_count_correction():
+    """cost_analysis counts while bodies once; ours multiplies by trips."""
+    t = 17
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c * 0.5, ()
+        out, _ = jax.lax.scan(body, x, None, length=t)
+        return out
+
+    an = _analyze(f, a)
+    per_iter = 2 * 64 * 64 * 64
+    assert an.dot_flops == t * per_iter, (an.dot_flops, t * per_iter)
+    assert t in an.trip_counts.values()
+
+
+def test_roofline_terms_and_dominance():
+    m = 4096
+    a = jnp.zeros((m, m), jnp.bfloat16)
+    an = _analyze(lambda x, y: x @ y, a, a)
+    rep = roofline_from_analysis(an, name="mm", n_chips=1,
+                                 model_flops=2 * m ** 3)
+    # one 4096^3 bf16 matmul on v5e: compute-bound
+    assert rep.dominant == "compute"
+    # convert fusions add ~0.04% elementwise flops on top of the dot
+    assert rep.compute_s == pytest.approx(2 * m ** 3 / 197e12, rel=1e-2)
+    assert 0.9 < rep.useful_compute_ratio <= 1.1
+
+
+def test_streaming_is_memory_bound():
+    x = jnp.zeros((1 << 22,), jnp.float32)
+    an = _analyze(lambda v: v + 1.0, x)
+    rep = roofline_from_analysis(an, name="va", n_chips=1,
+                                 model_flops=float(x.size))
+    assert rep.dominant == "memory"
+
+
+def test_suitability_kt1_kt2_kt3():
+    # VA-like: int add stream -> suitable on UPMEM
+    x = jnp.zeros((1 << 20,), jnp.int32)
+    an = _analyze(lambda a, b: a + b, x, x)
+    rep = score(an, name="va", machine="upmem_2556")
+    assert rep.memory_bound and rep.simple_ops and rep.low_comm
+    assert rep.pim_suitable
+
+    # matmul: operational intensity >> balance -> NOT memory-bound
+    a = jnp.zeros((2048, 2048), jnp.float32)
+    an2 = _analyze(lambda p, q: p @ q, a, a)
+    rep2 = score(an2, name="mm", machine="tpu_v5e")
+    assert not rep2.memory_bound
+    assert not rep2.pim_suitable
+
+    # float divide stream -> complex-op heavy (KT2)
+    an3 = _analyze(lambda p, q: p / (q + 2.0), x.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    rep3 = score(an3, name="div", machine="upmem_2556")
+    assert rep3.complex_frac > 0.3
+    assert not rep3.pim_suitable
+
+
+def test_machine_balance_inversion():
+    """DESIGN.md §2: the DPU is compute-bound where the TPU is memory-bound
+    — the machine balance points sit on opposite sides of 1 op/byte."""
+    dpu = UPMEM_2556.as_machine()
+    assert dpu.balance < 1.0 < TPU_V5E.balance
+
+
+def test_op_mix_census():
+    x = jnp.zeros((1 << 16,), jnp.float32)
+    an = _analyze(lambda a: jnp.tanh(a) * a, x)
+    mix = op_mix(an)
+    assert mix["complex_frac"] > 0.3     # tanh + multiply
+    assert mix["total_arith_ops"] > 0

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (reduced configs): one forward + one train
+step + one prefill/decode on CPU, asserting shapes and finiteness. The FULL
+configs are exercised only via the dry-run (launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, REDUCED
+from repro.configs.shapes import ShapeConfig
+from repro.models import Shardings, forward, init_cache, init_params
+from repro.train import DataConfig, HParams, adamw_init, make_batch, \
+    make_train_step
+
+SHD = Shardings(None)
+B, S = 2, 16
+
+
+def _inputs(cfg, key):
+    kw = {}
+    if cfg.input_mode == "embeds":
+        kw["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                         jnp.float32)
+    else:
+        kw["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.encoder_layers:
+        kw["encoder_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return kw
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED))
+def test_forward_shapes_finite(name, rng):
+    cfg = REDUCED[name]
+    params = init_params(rng, cfg, SHD)
+    logits, _, aux = forward(params, cfg, SHD, **_inputs(cfg, rng))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED))
+def test_train_step(name, rng):
+    cfg = REDUCED[name]
+    shape = ShapeConfig("t", S, B, "train")
+    params = init_params(rng, cfg, SHD)
+    opt = adamw_init(params, cfg)
+    step = jax.jit(make_train_step(cfg, SHD, HParams(warmup_steps=2,
+                                                     total_steps=10)))
+    batch = make_batch(cfg, shape, 0, DataConfig())
+    p2, o2, m = step(params, opt, batch)
+    assert jnp.isfinite(m["loss"]) and float(m["loss"]) > 0
+    assert jnp.isfinite(m["grad_norm"])
+    assert int(o2["step"]) == 1
+    # params actually changed somewhere (bf16 weight-decay-only deltas on
+    # grad-less leaves round away, so check the whole tree, not leaf 0)
+    changed = any(
+        not bool(jnp.array_equal(a, b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert changed
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED))
+def test_prefill_decode(name, rng):
+    cfg = REDUCED[name]
+    params = init_params(rng, cfg, SHD)
+    cache = init_cache(cfg, B, 32, SHD)
+    logits, cache, _ = forward(params, cfg, SHD, cache=cache,
+                               **_inputs(cfg, rng))
+    assert int(cache["index"]) == S
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits2, cache2, _ = forward(params, cfg, SHD, tokens=tok, cache=cache)
+    assert logits2.shape == (B, 1, cfg.padded_vocab)
+    assert int(cache2["index"]) == S + 1
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    a = ARCHS
+    c = a["qwen2-vl-72b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (80, 8192, 64, 8, 29568, 152064)
+    c = a["mixtral-8x7b"]
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k) == (32, 4096, 8, 2)
+    c = a["qwen2-moe-a2.7b"]
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k,
+            c.n_shared_experts) == (24, 2048, 60, 4, 4)
+    c = a["jamba-1.5-large-398b"]
+    assert (c.n_layers, c.d_model, c.n_experts, c.attn_layer_period) == \
+        (72, 8192, 16, 8)
+    c = a["rwkv6-3b"]
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == \
+        (32, 2560, 8960, 65536)
+    c = a["deepseek-coder-33b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (62, 7168, 56, 8, 19200, 32256)
+    c = a["starcoder2-7b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4608, 36, 4, 18432, 49152)
+    c = a["granite-3-8b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 8, 12800, 49155)
+    c = a["llama3-405b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (126, 16384, 128, 8, 53248, 128256)
+    c = a["whisper-tiny"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size,
+            c.encoder_layers) == (4, 384, 6, 1536, 51865, 4)
+
+
+def test_param_counts_plausible():
+    """6N sanity: param_count lands near the nameplate sizes."""
+    def bn(name):
+        return ARCHS[name].param_count() / 1e9
+    assert 44 < bn("mixtral-8x7b") < 50          # 46.7B total
+    assert 390 < bn("llama3-405b") < 420
+    assert 30 < bn("deepseek-coder-33b") < 36
+    assert 6.5 < bn("starcoder2-7b") < 8.5
+    assert 2.5 < bn("rwkv6-3b") < 3.5
+    assert 350 < bn("jamba-1.5-large-398b") < 420
+    assert 0.02 < bn("whisper-tiny") < 0.08
+    # MoE active < total
+    assert ARCHS["mixtral-8x7b"].param_count(active_only=True) < \
+        ARCHS["mixtral-8x7b"].param_count() / 2.5

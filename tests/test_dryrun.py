@@ -1,0 +1,38 @@
+"""The multi-pod dry-run machinery itself, smoke-tested in a subprocess
+(it needs the 512-device env var set before jax init)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_and_reports(tmp_path):
+    out = tmp_path / "rec.json"
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "decode_32k,train_4k",
+         "--mesh", "both", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    recs = json.load(open(out))
+    assert len(recs) == 4                      # 2 shapes x 2 meshes
+    for rec in recs:
+        assert rec["status"] == "ok", rec
+        rf = rec["roofline"]
+        # three terms present and positive where expected
+        assert rf["memory_s"] > 0
+        assert rf["compute_s"] >= 0
+        assert rf["dominant"] in ("compute", "memory", "collective")
+        assert 0 <= rf["roofline_fraction"] <= 1
+        # the multi-pod record really used 512 chips
+    chips = {rec["n_chips"] for rec in recs}
+    assert chips == {256, 512}
+    # decode must be memory-dominant (the paper's regime)
+    dec = [rec for rec in recs if rec["shape"] == "decode_32k"]
+    assert all(rec["roofline"]["dominant"] == "memory" for rec in dec)

@@ -1,0 +1,23 @@
+"""Elastic scaling: a checkpoint taken on one mesh must resume on a
+different mesh with the same training trajectory (runs launch/elastic.py
+in an 8-device subprocess)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_elastic_mesh_restart():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.elastic",
+         "--arch", "granite-3-8b", "--ckpt", "/tmp/repro_elastic_test"],
+        env=env, capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "elastic restart OK" in r.stdout

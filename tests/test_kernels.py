@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+@pytest.mark.parametrize("n", [128, 4096, 100_001, 262_144])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32, jnp.bfloat16])
+def test_va(n, dtype):
+    if dtype == jnp.bfloat16:
+        a = jax.random.normal(k(0), (n,), jnp.float32).astype(dtype)
+        b = jax.random.normal(k(1), (n,), jnp.float32).astype(dtype)
+    else:
+        a = jax.random.randint(k(0), (n,), -99, 99).astype(dtype)
+        b = jax.random.randint(k(1), (n,), -99, 99).astype(dtype)
+    np.testing.assert_allclose(np.asarray(ops.va(a, b), np.float32),
+                               np.asarray(ref.va(a, b), np.float32))
+
+
+@pytest.mark.parametrize("m,kk", [(256, 512), (300, 700), (1024, 1024),
+                                  (8, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemv(m, kk, dtype):
+    A = (jax.random.normal(k(2), (m, kk), jnp.float32) / 8).astype(dtype)
+    x = (jax.random.normal(k(3), (kk,), jnp.float32) / 8).astype(dtype)
+    got = np.asarray(ops.gemv(A, x), np.float32)
+    want = np.asarray(ref.gemv(A, x), np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("n", [65_536, 70_000, 128])
+def test_reduction(n):
+    x = jax.random.normal(k(4), (n,), jnp.float32)
+    np.testing.assert_allclose(float(ops.reduction(x)),
+                               float(ref.reduction(x)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [8192, 50_000, 128])
+def test_scan(n):
+    x = jax.random.randint(k(5), (n,), -10, 10).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.scan(x)),
+                               np.asarray(jnp.cumsum(x)),
+                               rtol=1e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("n,bins", [(30_000, 256), (8192, 1024),
+                                    (4096, 4096)])
+def test_histogram(n, bins):
+    x = jax.random.randint(k(6), (n,), 0, 1 << 12, jnp.uint32)
+    got = np.asarray(ops.histogram(x, bins))
+    want = np.asarray(ref.histogram(x, bins, 12))
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == n
+
+
+@pytest.mark.parametrize("n,m", [(5000, 8), (2048, 16), (512, 4)])
+def test_ts(n, m):
+    s = jax.random.randint(k(7), (n,), -100, 100, jnp.int32)
+    q = jax.random.randint(k(8), (m,), -100, 100, jnp.int32)
+    d, i = ops.ts_min(s, q)
+    dr = ref.ts_dists(s, q)
+    assert np.isclose(float(d), float(jnp.min(dr)))
+    assert float(dr[int(i)]) == float(jnp.min(dr))
+
+
+@pytest.mark.parametrize("m,n", [(128, 128), (200, 300), (512, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_transpose(m, n, dtype):
+    A = jax.random.randint(k(9), (m, n), -99, 99).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(ops.transpose(A)),
+                                  np.asarray(ref.trns(A)))
+
+
+@pytest.mark.parametrize("b,h,kvh,hd,w,length", [
+    (2, 8, 2, 64, 1000, 777),
+    (1, 4, 4, 128, 512, 512),    # MHA, full cache
+    (2, 16, 2, 64, 2048, 1),     # single valid slot
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kvh, hd, w, length, dtype):
+    q = jax.random.normal(k(10), (b, h, hd), jnp.float32).astype(dtype)
+    kc = jax.random.normal(k(11), (b, w, kvh, hd), jnp.float32).astype(dtype)
+    vc = jax.random.normal(k(12), (b, w, kvh, hd), jnp.float32).astype(dtype)
+    got = np.asarray(ops.decode_attention(q, kc, vc, jnp.int32(length)),
+                     np.float32)
+    want = np.asarray(ref.decode_attention(q, kc, vc, length), np.float32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("ops_per_elem", [1, 4, 16])
+def test_microbench_stream(ops_per_elem):
+    x = jax.random.randint(k(13), (10_000,), 0, 100, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.stream_ops(x, ops_per_elem)),
+        np.asarray(ref.microbench_stream(x, ops_per_elem)))
+
+
+@pytest.mark.parametrize("sq,skv,h,kvh,hd,causal,window", [
+    (300, 300, 4, 2, 64, True, 0),      # GQA, causal, padded seq
+    (512, 512, 2, 2, 128, True, 64),    # sliding window
+    (256, 700, 4, 1, 64, False, 0),     # cross-attention-like, padded kv
+    (128, 512, 2, 2, 64, True, 32),     # window smaller than kv tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_fwd(sq, skv, h, kvh, hd, causal, window, dtype):
+    q = jax.random.normal(k(20), (1, sq, h, hd), jnp.float32).astype(dtype)
+    kk = jax.random.normal(k(21), (1, skv, kvh, hd),
+                           jnp.float32).astype(dtype)
+    v = jax.random.normal(k(22), (1, skv, kvh, hd),
+                          jnp.float32).astype(dtype)
+    got = np.asarray(ops.flash_attention(q, kk, v, causal=causal,
+                                         window=window), np.float32)
+    want = np.asarray(ref.flash_attention(q, kk, v, causal=causal,
+                                          window=window), np.float32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)

@@ -1,0 +1,50 @@
+"""PrIM workload correctness vs oracles (single-bank mesh; the 8-bank
+cross-bank semantics run in test_prim_multibank.py's subprocess)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import prim
+
+KEY = jax.random.PRNGKey(3)
+
+SIZES = {"NW": 64, "MLP": 128, "BFS": 128, "GEMV": 256}
+
+
+def _inputs(name, mod):
+    n = SIZES.get(name, 1024)
+    if name == "HST-L":
+        return mod.make_inputs(n, KEY, bins=mod.BINS_L)
+    return mod.make_inputs(n, KEY)
+
+
+@pytest.mark.parametrize("name", sorted(prim.WORKLOADS))
+def test_workload_matches_oracle(name, bank_grid):
+    mod = prim.WORKLOADS[name]
+    inputs = _inputs(name, mod)
+    got = mod.run_pim(bank_grid, **inputs)
+    want = mod.ref(**inputs)
+    got_l, want_l = jax.tree.leaves(got), jax.tree.leaves(want)
+    assert len(got_l) == len(want_l)
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("name", sorted(prim.WORKLOADS))
+def test_counts_well_formed(name):
+    mod = prim.WORKLOADS[name]
+    c = mod.counts_l(1 << 16) if name == "HST-L" else mod.counts(1 << 16)
+    assert c.bytes_streamed > 0
+    assert c.flops_equiv > 0
+    assert c.interbank_bytes >= 0
+    assert all(v >= 0 for v in c.ops.values())
+    assert c.pim_suitable == mod.SUITABLE
+
+
+def test_fig4_grouping():
+    """10 of 16 benchmarks are in the paper's 'more suitable' group."""
+    assert len(prim.SUITABLE_SET) == 10
+    assert {"VA", "SEL", "UNI", "BS", "RED", "SCAN-SSA", "SCAN-RSS",
+            "TRNS", "HST-S", "HST-L"} == prim.SUITABLE_SET

@@ -1,0 +1,79 @@
+"""Cross-bank semantics: the full 16-workload check on an 8-bank mesh in a
+subprocess (xla_force_host_platform_device_count must be set before jax
+init, so it cannot run in this process)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.bank_parallel import BankGrid, make_bank_mesh
+from repro import prim
+
+grid = BankGrid(make_bank_mesh(8))
+key = jax.random.PRNGKey(42)
+sizes = {"NW": 128, "MLP": 256, "BFS": 256, "GEMV": 512}
+bad = []
+for name, mod in prim.WORKLOADS.items():
+    n = sizes.get(name, 1024)
+    k = jax.random.fold_in(key, abs(hash(name)) % 1000)
+    inputs = mod.make_inputs(n, k, bins=mod.BINS_L) if name == "HST-L" \
+        else mod.make_inputs(n, k)
+    got = mod.run_pim(grid, **inputs)
+    want = mod.ref(**inputs)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        if not np.array_equal(np.asarray(g), np.asarray(w)):
+            bad.append(name)
+            break
+assert not bad, f"multibank mismatches: {bad}"
+print("MULTIBANK_OK")
+"""
+
+
+@pytest.mark.slow
+def test_all_workloads_on_8_banks():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "MULTIBANK_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_phase_discipline_assert_local():
+    """assert_local flags a collective inside a 'bank-local' phase."""
+    script = r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core.bank_parallel import BankGrid, make_bank_mesh, assert_local
+
+grid = BankGrid(make_bank_mesh(8))
+x = jnp.arange(64, dtype=jnp.float32)
+
+legal = grid.local(lambda v: v * 2, in_specs=P(grid.axis),
+                   out_specs=P(grid.axis))
+assert_local(legal, x)      # must pass
+
+illegal = grid.local(lambda v: jax.lax.psum(v, grid.axis),
+                     in_specs=P(grid.axis), out_specs=P(grid.axis))
+try:
+    assert_local(illegal, x)
+    raise SystemExit("assert_local failed to catch a collective")
+except AssertionError:
+    print("DISCIPLINE_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=300,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "DISCIPLINE_OK" in r.stdout

@@ -1,0 +1,142 @@
+"""Hypothesis property tests on the system's invariants: cache slot math,
+compaction, scan/prefix structure, sharding-spec divisibility, optimizer
+algebra."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models.cache import slot_positions, write_decode
+from repro.models.sharding import Policy, Shardings
+from repro.prim.common import assemble_compact, local_compact
+from repro.train.optimizer import HParams, schedule
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+# --------------------------------------------------------------------- #
+# ring-cache slot math
+# --------------------------------------------------------------------- #
+
+@given(st.integers(1, 200), st.integers(1, 64))
+def test_slot_positions_invariants(count, width):
+    pos = np.asarray(slot_positions(jnp.int32(count), width))
+    # every reported position is either -1 or in [0, count)
+    assert ((pos == -1) | ((pos >= 0) & (pos < count))).all()
+    # the newest `min(count, width)` positions are all present
+    want = set(range(max(0, count - width), count))
+    assert set(pos[pos >= 0].tolist()) == want
+    # slot s holds a position congruent to s mod width
+    for s, p in enumerate(pos):
+        if p >= 0:
+            assert p % width == s
+
+
+@given(st.integers(2, 16), st.integers(1, 40), st.integers(2, 8))
+def test_write_decode_per_row_matches_scalar(width, index, batch):
+    """Vector index with equal entries == scalar index write."""
+    kvh, hd = 2, 4
+    kv = {"k": jnp.zeros((batch, width, kvh, hd)),
+          "v": jnp.zeros((batch, width, kvh, hd))}
+    k_new = jnp.ones((batch, 1, kvh, hd))
+    v_new = 2 * k_new
+    a = write_decode(kv, k_new, v_new, jnp.int32(index), width)
+    b = write_decode(kv, k_new, v_new,
+                     jnp.full((batch,), index, jnp.int32), width)
+    np.testing.assert_array_equal(np.asarray(a["k"]), np.asarray(b["k"]))
+    np.testing.assert_array_equal(np.asarray(a["v"]), np.asarray(b["v"]))
+
+
+# --------------------------------------------------------------------- #
+# compaction (SEL/UNI building blocks)
+# --------------------------------------------------------------------- #
+
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=64),
+       st.lists(st.booleans(), min_size=1, max_size=64))
+def test_local_compact_is_stable_filter(vals, keeps):
+    n = min(len(vals), len(keeps))
+    v = jnp.asarray(vals[:n], jnp.int32)
+    k = jnp.asarray(keeps[:n])
+    comp, cnt = local_compact(v, k)
+    want = [x for x, kk in zip(vals[:n], keeps[:n]) if kk]
+    assert int(cnt) == len(want)
+    assert np.asarray(comp)[:len(want)].tolist() == want
+
+
+@given(st.integers(1, 6), st.integers(1, 10))
+def test_assemble_compact_roundtrip(banks, per):
+    rng = np.random.RandomState(banks * 100 + per)
+    parts = rng.randint(0, 100, (banks, per)).astype(np.int32)
+    counts = rng.randint(0, per + 1, (banks,)).astype(np.int32)
+    total = int(counts.sum())
+    out = np.asarray(assemble_compact(jnp.asarray(parts),
+                                      jnp.asarray(counts), max(total, 1)))
+    want = np.concatenate([parts[i, :counts[i]] for i in range(banks)]) \
+        if total else np.zeros((1,), np.int32)
+    np.testing.assert_array_equal(out[:total], want[:total])
+
+
+# --------------------------------------------------------------------- #
+# sharding spec algebra
+# --------------------------------------------------------------------- #
+
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_spec_never_breaks_divisibility(dim, axis_size):
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeShd(Shardings):
+        def __init__(self):
+            super().__init__(mesh)
+            self._axis_size = {"model": axis_size}
+    shd = FakeShd()
+    spec = shd.spec((dim,), ("tp",), "t")
+    entries = tuple(spec)
+    if dim % axis_size != 0:
+        assert entries == () or entries[0] is None
+    # a sharded dim always divides
+    if entries and entries[0] is not None:
+        assert dim % axis_size == 0
+
+
+# --------------------------------------------------------------------- #
+# schedule / optimizer algebra
+# --------------------------------------------------------------------- #
+
+@given(st.integers(0, 10_000))
+def test_schedule_bounded(step):
+    hp = HParams(lr=1e-3, warmup_steps=100, total_steps=10_000)
+    v = float(schedule(step, hp))
+    assert 0.0 <= v <= hp.lr * (1 + 1e-6)
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=16))
+def test_clip_never_increases_norm(vals):
+    from repro.train.optimizer import clip_by_global_norm, global_norm
+    g = {"x": jnp.asarray(vals, jnp.float32)}
+    clipped, pre = clip_by_global_norm(g, 1.0)
+    post = float(global_norm(clipped))
+    assert post <= max(float(pre), 1.0) + 1e-4
+    assert post <= 1.0 + 1e-4
+
+
+# --------------------------------------------------------------------- #
+# prim phase structure: SSA == RSS == cumsum for any input
+# --------------------------------------------------------------------- #
+
+@given(st.lists(st.integers(-50, 50), min_size=1, max_size=128))
+def test_scan_variants_agree(vals):
+    from repro import prim
+    from repro.core.bank_parallel import BankGrid, make_bank_mesh
+    grid = BankGrid(make_bank_mesh())
+    x = jnp.asarray(vals, jnp.int32)
+    a = prim.WORKLOADS["SCAN-SSA"].run_pim(grid, x)
+    b = prim.WORKLOADS["SCAN-RSS"].run_pim(grid, x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.cumsum(vals))
