@@ -3,6 +3,8 @@
   microbench        Fig. 2 (throughput vs OI), Fig. 3 (op/dtype throughput)
   prim_bench        Table I (the 16 workloads) + Fig. 4 (cross-system)
   suitability_bench §II Key Takeaways 1-3 scoring (PrIM + LM steps)
+  scaling_bench     strong scaling vs #DPUs (full-paper §5.2)
+  dispatch_bench    pure-CPU vs pure-PIM vs hybrid offload plans
   roofline_bench    §Roofline 40-cell dry-run table (from runs/*.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [module ...]
@@ -38,13 +40,14 @@ class Report:
 
 
 def main(argv=None) -> int:
-    from . import (microbench, prim_bench, roofline_bench, scaling_bench,
-                   suitability_bench)
+    from . import (dispatch_bench, microbench, prim_bench, roofline_bench,
+                   scaling_bench, suitability_bench)
     modules = {
         "microbench": microbench,
         "prim_bench": prim_bench,
         "suitability_bench": suitability_bench,
         "scaling_bench": scaling_bench,
+        "dispatch_bench": dispatch_bench,
         "roofline_bench": roofline_bench,
     }
     names = (argv or sys.argv[1:]) or list(modules)

@@ -1,0 +1,58 @@
+"""Hybrid dispatch demo: plan -> schedule -> execute a mixed workload.
+
+Builds the mixed PrIM pipeline (streaming int phases around a
+transpose/rotate middle), lets `repro.dispatch` choose a per-operator
+placement over the CPU and the 2556-DPU system, prints the plan and the
+coalesced launch/transfer schedule, then actually executes the hybrid plan
+in JAX (PIM stages as BankGrid phases, host stages under jit) and checks
+the result against the single-device reference.
+
+    PYTHONPATH=src python examples/dispatch_demo.py [--m 512] [--model-m 4096]
+"""
+
+import argparse
+
+from repro.core.bank_parallel import BankGrid, make_bank_mesh
+from repro.dispatch import workloads
+from repro.dispatch.placement import compare_plans, plan
+from repro.dispatch.runtime import check_phase_discipline, execute
+from repro.dispatch.schedule import make_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=512,
+                    help="matrix side for the executed pipeline")
+    ap.add_argument("--model-m", type=int, default=4096,
+                    help="matrix side for the paper-scale modeled plan")
+    args = ap.parse_args()
+
+    # --- model at paper scale: the planner's three-way comparison --------
+    g = workloads.mixed_pipeline(m=args.model_m, concrete=False).graph()
+    print(f"== modeled at {args.model_m}x{args.model_m} int32 ==")
+    for name, p in compare_plans(g).items():
+        print(f"  {name:10s} {p.total_s * 1e3:9.3f}ms  "
+              f"devices={'+'.join(p.used_devices)}")
+    hybrid = plan(g)
+    print()
+    print(hybrid.render())
+    print()
+    print(make_schedule(g, hybrid).render())
+
+    # --- execute the paper-scale placement for real at a reduced size ----
+    # (at small sizes the planner rightly keeps everything on the host —
+    # launch overhead dominates — so we run the at-scale assignment to
+    # exercise both execution faces)
+    print(f"\n== executing hybrid plan at {args.m}x{args.m} ==")
+    pipe = workloads.mixed_pipeline(m=args.m, concrete=True)
+    grid = BankGrid(make_bank_mesh())
+    checked = check_phase_discipline(pipe, grid)
+    rep = execute(pipe, hybrid, grid)
+    print(f"  {checked} bank-local phases verified collective-free")
+    print(f"  stage placement: {rep.stage_devices}")
+    print(f"  result matches single-device reference: {rep.matches} "
+          f"(max |err| = {rep.max_abs_err:.3g})")
+
+
+if __name__ == "__main__":
+    main()

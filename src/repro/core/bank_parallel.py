@@ -29,6 +29,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax >= 0.5 exposes jax.shard_map(check_vma=...); 0.4.x has the
+# experimental path with the older check_rep spelling
+if hasattr(jax, "shard_map"):
+    _shard_map, _CHECK_KW = jax.shard_map, "check_vma"
+else:  # pragma: no cover - exercised on jax 0.4.x containers
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
 
 BANK_AXIS = "banks"
 
@@ -70,8 +78,8 @@ class BankGrid:
         """A bank-local phase: fn runs on each bank's shard. Collectives
         inside `fn` are a programming error (Takeaway 3) — use exchange
         phases instead; `assert_local` verifies."""
-        return jax.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_rep)
+        return _shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, **{_CHECK_KW: check_rep})
 
     def bank_map(self, fn: Callable) -> Callable:
         """Common case: every arg sharded on dim 0, every output too."""

@@ -64,20 +64,26 @@ TITAN_V = Machine("titan_v", 13.8e12, 324e9, 0.0, 12 * 2**30)
 
 #: software-routine cost of one arithmetic op, in pipeline instruction slots.
 #: Calibrated so that (a) INT32 add at 1 op/element sustains ~70 MOPS/DPU,
-#: matching the paper's measured ~58-70 MOPS band, and (b) mul/div/float are
-#: roughly an order of magnitude slower (paper Fig. 3).
+#: matching the paper's measured ~58-70 MOPS band, (b) mul/div are roughly an
+#: order of magnitude slower (paper Fig. 3), and (c) floating point lands in
+#: the measured single-digit-MOPS bands of the full characterization
+#: (arXiv:2105.03814 Fig. 3: FADD ~4 MOPS, FMUL ~2 MOPS, FDIV <1 MOPS/DPU —
+#: every FP op is a software routine on the int-only pipeline).
+#: "transc" is a software libm routine (exp/log/tanh/rsqrt...): range
+#: reduction + polynomial, i.e. a dozen-plus FP mul/adds.
 DPU_OP_COST = {
     ("add", "int32"): 1, ("sub", "int32"): 1,
-    ("add", "int64"): 2, ("sub", "int64"): 2,
     ("bitwise", "int32"): 1, ("bitwise", "int64"): 2,
     ("compare", "int32"): 1, ("compare", "int64"): 2,
+    ("add", "int64"): 2, ("sub", "int64"): 2,
     ("mul", "int32"): 32, ("mul", "int64"): 64,     # 8x8 HW multiplier only
     ("div", "int32"): 56, ("div", "int64"): 110,
-    ("add", "float"): 30, ("sub", "float"): 30,
-    ("mul", "float"): 42, ("div", "float"): 60,
-    ("add", "double"): 58, ("sub", "double"): 58,
-    ("mul", "double"): 90, ("div", "double"): 130,
-    ("compare", "float"): 20, ("compare", "double"): 36,
+    ("add", "float"): 90, ("sub", "float"): 90,
+    ("mul", "float"): 175, ("div", "float"): 700,
+    ("add", "double"): 180, ("sub", "double"): 180,
+    ("mul", "double"): 360, ("div", "double"): 1400,
+    ("compare", "float"): 45, ("compare", "double"): 80,
+    ("transc", "float"): 2500, ("transc", "double"): 5000,
 }
 
 #: bookkeeping instructions per streamed element (WRAM ld/st + loop control)

@@ -1,0 +1,26 @@
+"""repro.dispatch — heterogeneous offload planner + hybrid dispatch runtime.
+
+The paper's central finding is that PIM suitability is *per-operator*, not
+per-program (Takeaways 1-3, Fig. 4's two workload groups). This package
+turns the one-shot analyses of `repro.core` into an end-to-end pipeline:
+
+    graph      build an operator graph (flops / bytes / OI / op mix per op)
+    placement  assign every op to xeon / titan_v / upmem_* minimizing
+               modeled end-to-end latency, charging host<->DPU boundary
+               transfers (DP over chains, greedy over DAGs)
+    schedule   coalesce consecutive PIM stages into one launch, batch
+               parallel transfers, overlap compute with transfers
+    runtime    execute a plan in JAX: PIM stages as BankGrid local/exchange
+               phases, host stages under plain jit, validated vs reference
+    workloads  mixed PrIM pipelines + the LM decode chain as dispatchable
+               pipelines/graphs
+
+Everything later PRs serve or scale dispatches through this layer.
+"""
+
+from .graph import OpNode, OpGraph, node_from_fn, ops_from_hlo
+from .placement import (DEVICES, Plan, compare_plans, plan, pure_plan,
+                        node_time, transfer_time)
+from .schedule import LaunchGroup, Schedule, make_schedule
+from .runtime import Pipeline, Stage, execute, reference
+from . import workloads

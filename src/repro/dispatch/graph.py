@@ -1,0 +1,359 @@
+"""Operator graphs for offload planning.
+
+An `OpGraph` is the unit the placement planner works on: nodes carry the
+per-operator quantities the paper's takeaways are phrased in — flops, bytes
+moved, operational intensity, op mix (simple vs mul/div/float vs
+transcendental), and the inter-bank traffic the op would generate if it ran
+bank-parallel on PIM. Edges carry the bytes that flow between operators,
+i.e. what a host<->DPU boundary crossing costs if the two ends are placed
+on different devices.
+
+Two granularities:
+
+  * `OpGraph.from_hlo(text)` — one node per HLO instruction of a compiled
+    module's entry computation (fusions kept whole, costed by walking the
+    fused computation). Used for inspecting real compiled steps.
+  * `node_from_fn(name, fn, *args)` — one node per *stage* of a dispatch
+    pipeline (runtime.Stage), costed by compiling the stage alone and
+    running `core.hlo_analysis.analyze_hlo` over it. This is the
+    granularity the runtime can actually execute, so it is what the
+    planner and scheduler consume.
+
+Per-element op counts (`OpNode.ops`, keyed like `pim_model.DPU_OP_COST`)
+are extracted by `ops_from_hlo`, which walks the parsed `HloModule` and
+charges every arithmetic instruction at output-element granularity — the
+quantity `DPUModel.compute_time` wants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from collections import defaultdict
+from typing import Any, Callable, Iterable
+
+from ..core.hlo_analysis import (HloComputation, HloModule, HloOp,
+                                 _Accumulator, _dot_flops, analyze_hlo,
+                                 parse_hlo_text)
+from ..core.suitability import COMM_RATIO_THRESHOLD, COMPLEX_FRAC_THRESHOLD
+
+# ---------------------------------------------------------------------------
+# opcode -> (op-class, dtype-class) categorization
+# ---------------------------------------------------------------------------
+
+#: HLO opcode -> DPU_OP_COST op class. Anything unlisted is charged nothing
+#: (layout / control / pure data movement — it shows up in bytes, not ops).
+_OP_CLASS = {
+    "add": "add", "subtract": "sub", "negate": "sub",
+    "multiply": "mul", "divide": "div", "remainder": "div",
+    "and": "bitwise", "or": "bitwise", "xor": "bitwise", "not": "bitwise",
+    "shift-left": "bitwise", "shift-right-logical": "bitwise",
+    "shift-right-arithmetic": "bitwise",
+    "compare": "compare", "select": "compare", "maximum": "compare",
+    "minimum": "compare", "clamp": "compare", "abs": "compare",
+    "floor": "compare", "ceiling": "compare", "round-nearest-afz": "compare",
+    "round-nearest-even": "compare", "sign": "compare",
+    "exponential": "transc", "exponential-minus-one": "transc",
+    "log": "transc", "log-plus-one": "transc", "rsqrt": "transc",
+    "sqrt": "transc", "cbrt": "transc", "tanh": "transc",
+    "logistic": "transc", "sine": "transc", "cosine": "transc",
+    "tan": "transc", "erf": "transc", "power": "transc", "atan2": "transc",
+}
+
+_SIMPLE_CLASSES = {"add", "sub", "bitwise", "compare"}
+_COMPLEX_CLASSES = {"mul", "div", "transc"}
+
+
+def _dtype_class(dtype: str) -> str:
+    """HLO dtype -> DPU_OP_COST dtype class (Fig. 3's four columns)."""
+    if dtype in ("f64", "c128"):
+        return "double"
+    if dtype[0] in ("f", "b", "c"):      # f16/f32/bf16/f8*/c64
+        return "float"
+    if dtype in ("s64", "u64"):
+        return "int64"
+    return "int32"
+
+
+def _reduce_class(module: HloModule, op: HloOp) -> str:
+    """A reduce's per-element op is whatever its reducer computation does."""
+    reducer = module.computations.get((op.attr("to_apply") or "").lstrip("%"))
+    if reducer is not None:
+        for r_op in reducer.ops.values():
+            if r_op.opcode in _OP_CLASS:
+                return _OP_CLASS[r_op.opcode]
+    return "add"
+
+
+def ops_from_hlo(text_or_module: str | HloModule,
+                 trip_count_fallback: int = 1) -> dict[tuple[str, str], float]:
+    """Per-element arithmetic op counts {(op, dtype): n} for a compiled
+    module — the operand `DPUModel.compute_time` consumes. Dots are
+    decomposed into mul+add pairs over their contraction; while bodies are
+    multiplied by parsed trip counts (same convention as `analyze_hlo`)."""
+    module = (text_or_module if isinstance(text_or_module, HloModule)
+              else parse_hlo_text(text_or_module))
+    # reuse analyze_hlo's trip-count parser rather than re-deriving it
+    tc = _Accumulator(module, trip_count_fallback)
+    acc: dict[tuple[str, str], float] = defaultdict(float)
+
+    def visit(comp_name: str, mult: float):
+        comp = module.computations.get(comp_name)
+        if comp is None:
+            return
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            oc = op.opcode
+            if oc == "while":
+                visit((op.attr("body") or "").lstrip("%"),
+                      mult * tc.trip_count_of(op))
+            elif oc == "call":
+                visit((op.attr("to_apply") or "").lstrip("%"), mult)
+            elif oc == "fusion":
+                visit((op.attr("calls") or "").lstrip("%"), mult)
+            elif oc == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    visit((op.attr(key) or "").lstrip("%"), mult)
+            elif oc in ("dot", "convolution"):
+                shapes = op.out_shapes
+                if not shapes:
+                    continue
+                pairs = _dot_flops(op, comp) / 2.0 if oc == "dot" else \
+                    float(shapes[0].elements)
+                dt = _dtype_class(shapes[0].dtype)
+                acc[("mul", dt)] += pairs * mult
+                acc[("add", dt)] += pairs * mult
+            elif oc in ("reduce", "reduce-window"):
+                in_op = comp.ops.get(op.operands[0]) if op.operands else None
+                if in_op is not None and in_op.out_shapes:
+                    s = in_op.out_shapes[0]
+                    acc[(_reduce_class(module, op), _dtype_class(s.dtype))] \
+                        += float(s.elements) * mult
+            elif oc in _OP_CLASS:
+                if op.out_shapes:
+                    s = op.out_shapes[0]
+                    acc[(_OP_CLASS[oc], _dtype_class(s.dtype))] \
+                        += float(s.elements) * mult
+
+    visit(module.entry, 1.0)
+    return dict(acc)
+
+
+# ---------------------------------------------------------------------------
+# nodes and graphs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpNode:
+    """One schedulable operator: the quantities KT1-3 are phrased in."""
+    name: str
+    kind: str                          # opcode / stage kind label
+    flops: float                       # host-style flop count
+    hbm_bytes: float                   # device-local memory traffic
+    out_bytes: float                   # bytes handed to each consumer
+    ops: dict = dataclasses.field(default_factory=dict)
+    exchange_bytes: float = 0.0        # inter-bank bytes if run on PIM (KT3)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def oi(self) -> float:
+        """Operational intensity, flop/byte (KT1)."""
+        return self.flops / self.hbm_bytes if self.hbm_bytes else float("inf")
+
+    @property
+    def complex_frac(self) -> float:
+        """Fraction of arithmetic that is mul/div/transcendental (KT2)."""
+        simple = sum(n for (op, _), n in self.ops.items()
+                     if op in _SIMPLE_CLASSES)
+        cplx = sum(n for (op, _), n in self.ops.items()
+                   if op in _COMPLEX_CLASSES)
+        total = simple + cplx
+        return cplx / total if total else 0.0
+
+    @property
+    def comm_ratio(self) -> float:
+        """Inter-bank bytes per local byte (KT3)."""
+        return (self.exchange_bytes / self.hbm_bytes
+                if self.hbm_bytes else 0.0)
+
+    def pim_suitable(self, balance: float) -> bool:
+        """The paper's three-way verdict for this single operator."""
+        return (self.oi < balance
+                and self.complex_frac < COMPLEX_FRAC_THRESHOLD
+                and self.comm_ratio < COMM_RATIO_THRESHOLD)
+
+
+@dataclasses.dataclass
+class OpGraph:
+    """A DAG of OpNodes; edges carry the producer's out_bytes."""
+    name: str
+    nodes: dict[str, OpNode] = dataclasses.field(default_factory=dict)
+    edges: list[tuple[str, str]] = dataclasses.field(default_factory=list)
+    input_bytes: float = 0.0           # bytes entering the graph from host
+
+    def add(self, node: OpNode, *preds: str) -> OpNode:
+        self.nodes[node.name] = node
+        for p in preds:
+            self.edges.append((p, node.name))
+        return node
+
+    @property
+    def preds(self) -> dict[str, list[str]]:
+        d: dict[str, list[str]] = {n: [] for n in self.nodes}
+        for u, v in self.edges:
+            d[v].append(u)
+        return d
+
+    @property
+    def succs(self) -> dict[str, list[str]]:
+        d: dict[str, list[str]] = {n: [] for n in self.nodes}
+        for u, v in self.edges:
+            d[u].append(v)
+        return d
+
+    def topo_order(self) -> list[str]:
+        preds = {n: set(ps) for n, ps in self.preds.items()}
+        succs = self.succs
+        order, ready = [], [n for n in self.nodes if not preds[n]]
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for s in succs[n]:
+                preds[s].discard(n)
+                if not preds[s]:
+                    ready.append(s)
+        if len(order) != len(self.nodes):
+            raise ValueError(f"cycle in op graph {self.name}")
+        return order
+
+    @property
+    def is_chain(self) -> bool:
+        if len(self.edges) != len(self.nodes) - 1:
+            return False
+        return (all(len(p) <= 1 for p in self.preds.values())
+                and all(len(s) <= 1 for s in self.succs.values()))
+
+    def chain(self) -> list[str]:
+        assert self.is_chain, f"{self.name} is not a chain"
+        return self.topo_order()
+
+    @property
+    def total_flops(self) -> float:
+        return sum(n.flops for n in self.nodes.values())
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(n.hbm_bytes for n in self.nodes.values())
+
+    # -----------------------------------------------------------------
+    # builders
+    # -----------------------------------------------------------------
+
+    #: instruction-graph nodes we skip entirely (no work, no data of note)
+    _SKIP = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "copy",
+             "convert", "broadcast", "reshape", "transpose"}
+
+    @classmethod
+    def from_hlo(cls, text: str, name: str = "hlo",
+                 trip_count_fallback: int = 1) -> "OpGraph":
+        """Fine-grained graph: one node per entry-computation instruction
+        (fusions stay whole and are costed by walking their callee)."""
+        module = parse_hlo_text(text)
+        g = cls(name)
+        entry = module.computations[module.entry]
+        for op_name in entry.order:
+            op = entry.ops[op_name]
+            if op.opcode in cls._SKIP:
+                continue
+            node = _node_from_hlo_op(module, entry, op, trip_count_fallback)
+            # dedup: an operand used twice is one tensor crossing once
+            preds = [p for p in dict.fromkeys(op.operands) if p in g.nodes]
+            g.add(node, *preds)
+        g.input_bytes = sum(o.out_bytes for o in entry.ops.values()
+                            if o.opcode == "parameter")
+        return g
+
+
+def _node_from_hlo_op(module: HloModule, comp: HloComputation, op: HloOp,
+                      trip_fallback: int) -> OpNode:
+    """Cost one entry-computation instruction as an OpNode."""
+    ops: dict[tuple[str, str], float] = defaultdict(float)
+    flops = 0.0
+    if op.opcode == "dot":
+        pairs = _dot_flops(op, comp) / 2.0
+        dt = _dtype_class(op.out_shapes[0].dtype) if op.out_shapes else "float"
+        ops[("mul", dt)] += pairs
+        ops[("add", dt)] += pairs
+        flops = 2.0 * pairs
+    elif op.opcode in ("reduce", "reduce-window"):
+        in_op = comp.ops.get(op.operands[0]) if op.operands else None
+        if in_op is not None and in_op.out_shapes:
+            s = in_op.out_shapes[0]
+            ops[(_reduce_class(module, op), _dtype_class(s.dtype))] = \
+                float(s.elements)
+            flops = float(s.elements)
+    elif op.opcode == "fusion":
+        callee = (op.attr("calls") or "").lstrip("%")
+        sub = module.computations.get(callee)
+        if sub is not None:
+            sub_module = HloModule(callee, module.computations, callee)
+            for k, v in ops_from_hlo(sub_module, trip_fallback).items():
+                ops[k] += v
+        flops = sum(ops.values())
+    elif op.opcode in _OP_CLASS and op.out_shapes:
+        s = op.out_shapes[0]
+        ops[(_OP_CLASS[op.opcode], _dtype_class(s.dtype))] = float(s.elements)
+        flops = float(s.elements)
+    # bytes: operands + output (the planner only needs relative magnitude
+    # here; stage-level nodes get the full analyze_hlo traffic model)
+    nbytes = float(op.out_bytes)
+    for on in op.operands:
+        src = comp.ops.get(on)
+        if src is not None and src.opcode != "constant":
+            nbytes += src.out_bytes
+    return OpNode(name=op.name, kind=op.opcode, flops=flops,
+                  hbm_bytes=nbytes, out_bytes=float(op.out_bytes),
+                  ops=dict(ops))
+
+
+# ---------------------------------------------------------------------------
+# stage-level node builder (what the runtime executes)
+# ---------------------------------------------------------------------------
+
+def _struct_bytes(tree: Any) -> float:
+    import jax
+    return float(sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(tree)))
+
+
+def node_from_fn(name: str, fn: Callable, *example_args,
+                 kind: str = "stage", exchange_bytes: float = 0.0,
+                 trip_count_fallback: int = 1) -> OpNode:
+    """Compile `fn` on example args (arrays or ShapeDtypeStructs — nothing
+    is executed) and cost it as one OpNode via analyze_hlo + ops_from_hlo."""
+    import jax
+    compiled = jax.jit(fn).lower(*example_args).compile()
+    text = compiled.as_text()
+    analysis = analyze_hlo(text, trip_count_fallback=trip_count_fallback)
+    out = jax.eval_shape(fn, *example_args)
+    return OpNode(
+        name=name, kind=kind,
+        flops=analysis.flops,
+        hbm_bytes=analysis.hbm_bytes,
+        out_bytes=_struct_bytes(out),
+        ops=ops_from_hlo(text, trip_count_fallback),
+        exchange_bytes=exchange_bytes,
+        meta={"analysis": analysis},
+    )
+
+
+def chain_graph(name: str, nodes: Iterable[OpNode],
+                input_bytes: float = 0.0) -> OpGraph:
+    """Link nodes into a linear chain (the common pipeline shape)."""
+    g = OpGraph(name, input_bytes=input_bytes)
+    prev: str | None = None
+    for node in nodes:
+        g.add(node, *( [prev] if prev else [] ))
+        prev = node.name
+    return g

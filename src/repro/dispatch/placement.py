@@ -1,0 +1,300 @@
+"""Offload placement: assign every operator to a device, minimizing modeled
+end-to-end latency.
+
+Devices are the paper's measured systems (`core.pim_model`): the Xeon host,
+the Titan V, and one UPMEM system. Per-node costs come straight from the
+calibrated models — `DPUModel.compute_time`/`mram_time`/`interdpu_time` for
+PIM, the roofline `max(flops/peak, bytes/bw)` for host-class machines (the
+same arithmetic as `perf_model.time_on_pim`/`time_on_host`, at operator
+granularity). Crossing a device boundary charges the producer's `out_bytes`
+over the measured channel: the UPMEM parallel-transfer bandwidths for
+host<->DPU, PCIe for host<->GPU, and both hops for GPU<->DPU (all DPU
+traffic goes through the host — Takeaway 3).
+
+Entering a device also pays that device's launch overhead *unless the
+previous operator already ran there* — so the optimizer itself discovers
+the paper's launch-coalescing recommendation: consecutive PIM operators
+merge into one DPU launch.
+
+For chain graphs (every pipeline in `dispatch.workloads`) the planner runs
+exact dynamic programming over (node, device); for general DAGs it falls
+back to a greedy topological sweep. Weights/params are treated as
+device-resident (weight-stationary serving): only activations cross
+boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from ..core.pim_model import DPUModel, MACHINES, UPMEM_2556, UPMEM_640
+from .graph import OpGraph, OpNode
+
+#: every placeable device; at most one upmem_* system per plan
+DEVICES = ("xeon", "titan_v", "upmem_2556", "upmem_640")
+
+#: Titan V PCIe 3.0 x16 effective host<->GPU bandwidth
+PCIE_BW = 12e9
+
+#: fixed cost of starting work on a device when the previous operator ran
+#: elsewhere (kernel launch / DPU program launch + host sync)
+_HOST_LAUNCH_S = {"xeon": 0.0, "titan_v": 2e-5}
+
+_DPU_SYSTEMS = {"upmem_2556": UPMEM_2556, "upmem_640": UPMEM_640}
+
+
+def _is_pim(device: str) -> bool:
+    return device.startswith("upmem")
+
+
+def node_time(node: OpNode, device: str,
+              dpu: DPUModel | None = None) -> float:
+    """Modeled seconds for one operator on one device (no transfers)."""
+    if _is_pim(device):
+        d = dpu or _DPU_SYSTEMS[device]
+        per_dpu = {k: v / d.n_dpus for k, v in node.ops.items()}
+        t_c = d.compute_time(per_dpu)
+        t_m = d.mram_time(node.hbm_bytes / d.n_dpus)
+        # MRAM DMA overlaps compute across tasklets; inter-bank traffic
+        # serializes through the host channel (Takeaway 3)
+        return max(t_c, t_m) + d.interdpu_time(node.exchange_bytes)
+    m = MACHINES[device]
+    nbytes = node.hbm_bytes
+    if device == "xeon" and node.meta.get("bytes_cpu"):
+        nbytes = node.meta["bytes_cpu"]         # e.g. TRNS strided writes
+    if device == "titan_v" and node.meta.get("bytes_gpu"):
+        nbytes = node.meta["bytes_gpu"]
+    return max(node.flops / m.peak_flops, nbytes / m.hbm_bw)
+
+
+def transfer_time(src: str, dst: str, nbytes: float,
+                  dpu: DPUModel | None = None) -> float:
+    """Seconds to move nbytes from src's memory to dst's memory."""
+    if src == dst or nbytes <= 0:
+        return 0.0
+    d = dpu or UPMEM_2556
+    t = 0.0
+    if _is_pim(src):
+        t += nbytes / d.dpu_to_host_bw
+    if _is_pim(dst):
+        t += nbytes / d.host_to_dpu_bw
+    if "titan_v" in (src, dst):
+        t += nbytes / PCIE_BW
+    return t
+
+
+def launch_overhead(device: str, dpu: DPUModel | None = None) -> float:
+    if _is_pim(device):
+        return (dpu or _DPU_SYSTEMS[device]).launch_overhead_s
+    return _HOST_LAUNCH_S[device]
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Plan:
+    graph_name: str
+    assignment: dict[str, str]         # node name -> device
+    method: str                        # dp | greedy | pure
+    total_s: float
+    compute_s: float
+    transfer_s: float
+    launch_s: float
+    node_s: dict[str, float]
+
+    @property
+    def n_boundary_crossings(self) -> int:
+        return len({(u, v) for u, v in self._crossings})
+
+    _crossings: list = dataclasses.field(default_factory=list, repr=False)
+
+    def device_of(self, node: str) -> str:
+        return self.assignment[node]
+
+    @property
+    def used_devices(self) -> tuple[str, ...]:
+        return tuple(sorted(set(self.assignment.values())))
+
+    @property
+    def is_hybrid(self) -> bool:
+        return len(set(self.assignment.values())) > 1
+
+    def render(self) -> str:
+        lines = [f"plan[{self.graph_name}] method={self.method} "
+                 f"total={self.total_s * 1e3:.3f}ms  "
+                 f"(compute {self.compute_s * 1e3:.3f} + transfer "
+                 f"{self.transfer_s * 1e3:.3f} + launch "
+                 f"{self.launch_s * 1e3:.3f})"]
+        for node, dev in self.assignment.items():
+            lines.append(f"  {node:28s} -> {dev:12s} "
+                         f"{self.node_s[node] * 1e6:10.1f}us")
+        return "\n".join(lines)
+
+
+def evaluate(graph: OpGraph, assignment: dict[str, str],
+             dpu: DPUModel | None = None, source: str = "xeon",
+             sink: str = "xeon", method: str = "fixed") -> Plan:
+    """Cost a full assignment: node times + boundary transfers + launches.
+
+    This is the single source of truth the DP optimizes against — launches
+    are charged whenever the topological predecessor ran elsewhere (i.e.
+    consecutive same-device operators coalesce into one launch)."""
+    order = graph.topo_order()
+    preds = graph.preds
+    succs = graph.succs
+    node_s, compute = {}, 0.0
+    for n in order:
+        t = node_time(graph.nodes[n], assignment[n], dpu)
+        node_s[n] = t
+        compute += t
+
+    transfer, crossings = 0.0, []
+    roots = [n for n in order if not preds[n]]
+    for r in roots:
+        t = transfer_time(source, assignment[r],
+                          graph.input_bytes / max(len(roots), 1), dpu)
+        transfer += t
+        if t:
+            crossings.append((source, r))
+    # a producer's tensor crosses to a given device once, no matter how
+    # many ops consume it there
+    seen: set[tuple[str, str]] = set()
+    for u, v in graph.edges:
+        key = (u, assignment[v])
+        if key in seen:
+            continue
+        seen.add(key)
+        t = transfer_time(assignment[u], assignment[v],
+                          graph.nodes[u].out_bytes, dpu)
+        transfer += t
+        if t:
+            crossings.append((u, v))
+    for leaf in (n for n in order if not succs[n]):
+        t = transfer_time(assignment[leaf], sink,
+                          graph.nodes[leaf].out_bytes, dpu)
+        transfer += t
+        if t:
+            crossings.append((leaf, sink))
+
+    launch, prev_dev = 0.0, None
+    for n in order:
+        if assignment[n] != prev_dev:
+            launch += launch_overhead(assignment[n], dpu)
+        prev_dev = assignment[n]
+
+    return Plan(graph_name=graph.name, assignment=dict(assignment),
+                method=method, total_s=compute + transfer + launch,
+                compute_s=compute, transfer_s=transfer, launch_s=launch,
+                node_s=node_s, _crossings=crossings)
+
+
+def _resolve(devices: Iterable[str]) -> tuple[tuple[str, ...], DPUModel | None]:
+    devices = tuple(devices)
+    pim = [d for d in devices if _is_pim(d)]
+    if len(pim) > 1:
+        raise ValueError(f"at most one UPMEM system per plan, got {pim}")
+    for d in devices:
+        if d not in DEVICES:
+            raise ValueError(f"unknown device {d!r} (know {DEVICES})")
+    return devices, (_DPU_SYSTEMS[pim[0]] if pim else None)
+
+
+def plan(graph: OpGraph, devices: Iterable[str] = ("xeon", "upmem_2556"),
+         source: str = "xeon", sink: str = "xeon") -> Plan:
+    """Minimize modeled end-to-end latency over per-operator placements.
+
+    Exact DP over (position, device) when the graph is a chain — the cost
+    structure (node + boundary transfer + coalesced launch) only couples
+    adjacent operators, so the chain DP is optimal. Greedy topological
+    sweep otherwise."""
+    devices, dpu = _resolve(devices)
+    if graph.is_chain:
+        assignment = _plan_chain_dp(graph, devices, dpu, source, sink)
+        method = "dp"
+    else:
+        assignment = _plan_greedy(graph, devices, dpu, source)
+        method = "greedy"
+    return evaluate(graph, assignment, dpu, source, sink, method=method)
+
+
+def pure_plan(graph: OpGraph, device: str, source: str = "xeon",
+              sink: str = "xeon") -> Plan:
+    """Baseline: every operator on one device (one coalesced launch)."""
+    assignment = {n: device for n in graph.nodes}
+    return evaluate(graph, assignment, _DPU_SYSTEMS.get(device),
+                    source, sink, method="pure")
+
+
+def _plan_chain_dp(graph: OpGraph, devices: tuple[str, ...],
+                   dpu: DPUModel | None, source: str,
+                   sink: str) -> dict[str, str]:
+    order = graph.chain()
+    n0 = order[0]
+    cost = {d: transfer_time(source, d, graph.input_bytes, dpu)
+            + launch_overhead(d, dpu)
+            + node_time(graph.nodes[n0], d, dpu) for d in devices}
+    back: list[dict[str, str]] = []
+    for i in range(1, len(order)):
+        node, prev = graph.nodes[order[i]], graph.nodes[order[i - 1]]
+        nxt, choice = {}, {}
+        for d in devices:
+            t_node = node_time(node, d, dpu)
+            best, best_p = float("inf"), devices[0]
+            for p in devices:
+                c = cost[p] + transfer_time(p, d, prev.out_bytes, dpu) \
+                    + (launch_overhead(d, dpu) if d != p else 0.0) + t_node
+                if c < best:
+                    best, best_p = c, p
+            nxt[d], choice[d] = best, best_p
+        cost = nxt
+        back.append(choice)
+    last = graph.nodes[order[-1]]
+    final = {d: cost[d] + transfer_time(d, sink, last.out_bytes, dpu)
+             for d in devices}
+    d = min(final, key=final.get)
+    assignment = {order[-1]: d}
+    for i in range(len(order) - 1, 0, -1):
+        d = back[i - 1][d]
+        assignment[order[i - 1]] = d
+    return {n: assignment[n] for n in order}
+
+
+def _plan_greedy(graph: OpGraph, devices: tuple[str, ...],
+                 dpu: DPUModel | None, source: str) -> dict[str, str]:
+    """Topological sweep; each operator takes the device minimizing its own
+    time + incoming transfers + (launch if no predecessor is there)."""
+    assignment: dict[str, str] = {}
+    preds = graph.preds
+    for n in graph.topo_order():
+        node = graph.nodes[n]
+        best, best_d = float("inf"), devices[0]
+        for d in devices:
+            c = node_time(node, d, dpu)
+            if preds[n]:
+                for p in preds[n]:
+                    c += transfer_time(assignment[p], d,
+                                       graph.nodes[p].out_bytes, dpu)
+                if all(assignment[p] != d for p in preds[n]):
+                    c += launch_overhead(d, dpu)
+            else:
+                c += transfer_time(source, d, graph.input_bytes, dpu)
+                c += launch_overhead(d, dpu)
+            if c < best:
+                best, best_d = c, d
+        assignment[n] = best_d
+    return assignment
+
+
+def compare_plans(graph: OpGraph,
+                  devices: Iterable[str] = ("xeon", "upmem_2556"),
+                  pim: str = "upmem_2556") -> dict[str, Plan]:
+    """The paper's Fig.-4 question asked end-to-end: pure-CPU vs pure-PIM
+    vs the planner's hybrid, on one operator graph."""
+    return {
+        "pure_cpu": pure_plan(graph, "xeon"),
+        "pure_pim": pure_plan(graph, pim),
+        "hybrid": plan(graph, devices=devices),
+    }

@@ -1,0 +1,188 @@
+"""Hybrid dispatch runtime: execute a placement plan in JAX.
+
+A `Pipeline` is a chain of `Stage`s, each with two executable faces:
+
+  * `fn(x, *params)`    — host semantics, run under plain `jit` when the
+                          plan places the stage on xeon/titan_v;
+  * `pim(grid, x, ...)` — the bank-parallel face, run as BankGrid
+                          local/exchange phases when the plan places it on
+                          a UPMEM system. Defaults to `grid.bank_map(fn)`
+                          (the pure-streaming case); stages with
+                          communication provide their own, built from
+                          `grid.local` + `grid.exchange_*` exactly like
+                          the `repro.prim` workloads.
+
+Phase discipline is enforced the same way the PrIM suite enforces it: a
+stage's declared bank-local body must lower with zero collectives
+(`core.bank_parallel.assert_local`); inter-bank traffic must go through an
+exchange phase (Takeaway 3) and is what `Stage.exchange`/`exchange_bytes`
+charge in the cost model.
+
+`execute(pipeline, plan, grid)` runs every stage on its assigned device
+and `validate` checks the hybrid result against the single-device
+reference (`reference(pipeline)`) with `allclose` — the acceptance gate
+for every plan the benchmarks report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bank_parallel import BankGrid, assert_local
+from .graph import OpGraph, _struct_bytes as _nbytes, chain_graph, \
+    node_from_fn
+
+
+@dataclasses.dataclass
+class Stage:
+    """One dispatchable operator with host and bank-parallel faces."""
+    name: str
+    fn: Callable                       # fn(x, *params) -> y   (host face)
+    params: tuple = ()
+    pim: Callable | None = None        # pim(grid, x, *params) -> y
+    local_fn: Callable | None = None   # bank-local body, for assert_local
+    exchange: str | None = None        # exchange phase kind, if any (KT3)
+    exchange_bytes: float | None = None  # None + exchange -> out_bytes
+    hbm_bytes: float | None = None     # override analyze_hlo traffic (e.g.
+                                       # transposes, which XLA folds into
+                                       # zero-charged layout fusions)
+    kind: str = "stage"
+    _jit: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def run_host(self, x):
+        if self._jit is None:          # one trace cache per stage
+            self._jit = jax.jit(self.fn)
+        return self._jit(x, *self.params)
+
+    def run_pim(self, grid: BankGrid, x):
+        if self.pim is not None:
+            return self.pim(grid, x, *self.params)
+        return grid.bank_map(self.fn)(x, *self.params)
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """A chain of stages plus its example input — the executable twin of a
+    chain OpGraph."""
+    name: str
+    stages: list[Stage]
+    x: Any                             # input array (flows through stage 0)
+
+    def stage(self, name: str) -> Stage:
+        return next(s for s in self.stages if s.name == name)
+
+    # -----------------------------------------------------------------
+    def graph(self, shapes_only: bool = True) -> OpGraph:
+        """Lower every stage in isolation and cost it as an OpNode.
+        Params are explicit lowering arguments (never closed-over
+        constants) so weights show up as device-resident streams, while
+        only the flowing activation prices the stage boundary."""
+        def struct(a):
+            return jax.tree.map(
+                lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), a)
+        x = struct(self.x) if shapes_only else self.x
+        nodes, cache = [], {}
+        for s in self.stages:
+            args = (x, *(struct(p) if shapes_only else p for p in s.params))
+            out = jax.eval_shape(lambda x_, *p: s.fn(x_, *p), *args)
+            xb = _nbytes(out)
+            # repeated layers produce identical stage shapes: compile once;
+            # the cached prototype stays pristine, per-stage overrides only
+            # ever touch the copy
+            key = (_fn_key(s.fn), tuple((tuple(t.shape), str(t.dtype))
+                                        for t in jax.tree.leaves(args)))
+            if key not in cache:
+                cache[key] = node_from_fn(s.name, s.fn, *args, kind=s.kind)
+            node = dataclasses.replace(cache[key], name=s.name, kind=s.kind)
+            node.exchange_bytes = (s.exchange_bytes if s.exchange_bytes
+                                   is not None else (xb if s.exchange else 0.0))
+            if s.hbm_bytes is not None:
+                node.hbm_bytes = s.hbm_bytes
+            nodes.append(node)
+            x = out
+        return chain_graph(self.name, nodes, input_bytes=_nbytes(self.x))
+
+
+def _fn_key(fn) -> Any:
+    """Cache identity for a stage fn: per-layer lambdas/partials built at
+    the same source site share one compile."""
+    if isinstance(fn, functools.partial):
+        return ("partial", _fn_key(fn.func))
+    return getattr(fn, "__code__", fn)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def reference(pipeline: Pipeline):
+    """Single-device oracle: the whole chain under one jit."""
+    def chain(x, params):
+        for s, p in zip(pipeline.stages, params):
+            x = s.fn(x, *p)
+        return x
+    return jax.jit(chain)(pipeline.x, [s.params for s in pipeline.stages])
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    result: Any
+    reference: Any
+    matches: bool
+    max_abs_err: float
+    stage_devices: dict[str, str]
+
+
+def execute(pipeline: Pipeline, plan, grid: BankGrid, *,
+            validate: bool = True, rtol: float = 1e-4,
+            atol: float = 1e-4) -> ExecutionReport:
+    """Run the pipeline under a placement plan: PIM stages as BankGrid
+    phases, host stages under jit; optionally validate vs the reference."""
+    x = pipeline.x
+    devices = {}
+    for s in pipeline.stages:
+        dev = plan.assignment[s.name]
+        devices[s.name] = dev
+        x = s.run_pim(grid, x) if dev.startswith("upmem") else s.run_host(x)
+    ref = reference(pipeline) if validate else None
+    matches, err = True, 0.0
+    if validate:
+        a = jnp.asarray(x, dtype=jnp.result_type(ref, jnp.float32))
+        b = jnp.asarray(ref, dtype=a.dtype)
+        err = float(jnp.max(jnp.abs(a - b)))
+        matches = bool(jnp.allclose(a, b, rtol=rtol, atol=atol))
+        if not matches:
+            raise AssertionError(
+                f"hybrid execution of {pipeline.name} diverged from the "
+                f"single-device reference (max |err| = {err:.3g})")
+    return ExecutionReport(result=x, reference=ref, matches=matches,
+                           max_abs_err=err, stage_devices=devices)
+
+
+def check_phase_discipline(pipeline: Pipeline, grid: BankGrid) -> int:
+    """assert_local every declared bank-local body: lower it on per-bank
+    shard shapes and census for collectives (Takeaway 3's discipline,
+    same mechanism the PrIM tests use). Returns #stages checked."""
+    def shard_struct(t):
+        shape = tuple(t.shape)
+        if shape and shape[0] % grid.n_banks == 0:
+            shape = (shape[0] // grid.n_banks,) + shape[1:]
+        return jax.ShapeDtypeStruct(shape, t.dtype)
+
+    x = jax.tree.map(lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype),
+                     pipeline.x)
+    checked = 0
+    for s in pipeline.stages:
+        if s.local_fn is not None:
+            args = (jax.tree.map(shard_struct, x),
+                    *(jax.tree.map(shard_struct, p) for p in s.params))
+            assert_local(s.local_fn, *args)
+            checked += 1
+        x = jax.eval_shape(lambda x_, *p: s.fn(x_, *p), x, *s.params)
+    return checked

@@ -1,0 +1,277 @@
+"""Dispatchable workloads: mixed PrIM pipelines + the LM decode chain.
+
+Two pipeline families exercise the planner end-to-end:
+
+  * `mixed_pipeline` — a PrIM-style chain interleaving the paper's two
+    workload groups: streaming int phases (VA/SEL/TS/RED patterns — group
+    1, PIM-suitable) around a data-reorganization middle (TRNS transpose +
+    row rotation — exchange-heavy, the pattern group 2 loses on, KT3).
+    Pure PIM pays the host-mediated exchange for every shuffle; pure CPU
+    pays its thin memory bandwidth for every streaming pass; the hybrid
+    plan runs the streams bank-parallel and hands the reorganization to
+    the host, beating both.
+
+  * `decode_pipeline` — the serving decode step (`serve.engine`'s
+    workload) as a dispatchable chain: f32 weight GEMVs (qkv/o/up/down/
+    head), quantized-integer KV-cache attention, rmsnorm glue. Float
+    mul is a software routine on the DPU (KT2) so the weight GEMVs belong
+    on the host, while the int-dot attention over the bank-resident KV
+    cache is exactly the streaming pattern PIM wins — the hybrid split the
+    PIM-for-LLM literature converges on. Residual adds are elided to keep
+    the step a chain (the DP's exact case); this biases *against* the
+    hybrid (residuals would add PIM-friendly streaming), so the modeled
+    wins are conservative.
+
+Both builders take `concrete=False` to build shape-only pipelines (params
+as ShapeDtypeStructs): nothing is materialized or executed, but
+`Pipeline.graph()` still lowers/compiles every stage for costing — that is
+how the benchmarks model paper-scale inputs on the dev container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from ..core.perf_model import WorkloadCounts
+from ..prim import trns as prim_trns
+from .graph import OpGraph, OpNode, chain_graph
+from .runtime import Pipeline, Stage
+
+
+def _mk(key, shape, dtype, concrete: bool, lo=-100, hi=100):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, shape, lo, hi, dtype)
+    return (jax.random.normal(key, shape, dtype)
+            / (shape[-1] ** 0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# mixed PrIM pipeline (streaming -> reorganization -> streaming)
+# ---------------------------------------------------------------------------
+
+def _pim_roll(grid: BankGrid, x, shift: int):
+    """Global row rotation crosses banks: host-mediated gather, then each
+    bank takes its block of the rolled matrix (the re-scatter)."""
+    full = grid.exchange_gather(x)
+
+    def take(full_b):
+        rows = full_b.shape[0] // grid.n_banks
+        i = jax.lax.axis_index(grid.axis)
+        rolled = jnp.roll(full_b, shift, axis=0)
+        return jax.lax.dynamic_slice_in_dim(rolled, i * rows, rows, axis=0)
+
+    return grid.local(take, in_specs=P(), out_specs=P(grid.axis))(full)
+
+
+def mixed_pipeline(m: int = 2048, key=None, concrete: bool = True) -> Pipeline:
+    """Streaming int32 phases around a transpose/rotate/transpose middle,
+    on an (m, m) matrix; ends in a RED-style cross-bank sum."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    kx, kb, kc = jax.random.split(key, 3)
+    x = _mk(kx, (m, m), jnp.int32, concrete)
+    bias = _mk(kb, (m, m), jnp.int32, concrete)
+    bias2 = _mk(kc, (m, m), jnp.int32, concrete)
+    shift = m // 3
+    nbytes = float(m * m * 4)
+
+    def relu(v):
+        return jnp.maximum(v, 0)
+
+    def square(v):
+        return v * v
+
+    def total(v):
+        # int32 sum: modular addition is order-independent, so the
+        # bank-tree and the host reduction agree exactly
+        return jnp.sum(v)
+
+    def pim_sum(grid: BankGrid, v):
+        part = grid.local(lambda vb: jnp.sum(vb)[None],
+                          in_specs=P(grid.axis), out_specs=P(grid.axis))(v)
+        return grid.exchange_reduce(part, op="add")[0]
+
+    # cache-blocked host transpose still moves read+write (XLA folds it
+    # into a zero-charged layout fusion, so charge it explicitly)
+    stages = [
+        Stage("va.add", lambda v, b: v + b, params=(bias,),
+              local_fn=lambda v, b: v + b, kind="stream"),
+        Stage("va.add2", lambda v, b: v + b, params=(bias2,),
+              local_fn=lambda v, b: v + b, kind="stream"),
+        Stage("sel.relu", relu, local_fn=relu, kind="stream"),
+        Stage("trns.fwd", lambda v: v.T,
+              pim=lambda grid, v: prim_trns.run_pim(grid, v),
+              exchange="all_to_all", exchange_bytes=nbytes,
+              hbm_bytes=2 * nbytes, kind="shuffle"),
+        Stage("roll.rows", lambda v: jnp.roll(v, shift, axis=0),
+              pim=functools.partial(_pim_roll, shift=shift),
+              exchange="gather", exchange_bytes=nbytes, kind="shuffle"),
+        Stage("trns.back", lambda v: v.T,
+              pim=lambda grid, v: prim_trns.run_pim(grid, v),
+              exchange="all_to_all", exchange_bytes=nbytes,
+              hbm_bytes=2 * nbytes, kind="shuffle"),
+        Stage("ts.square", square, local_fn=square, kind="stream"),
+        Stage("red.sum", total, pim=pim_sum,
+              exchange="reduce", exchange_bytes=8.0 * 64, kind="reduce"),
+    ]
+    return Pipeline("prim-mixed", stages, x)
+
+
+# ---------------------------------------------------------------------------
+# LM decode step as a dispatchable chain
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeDims:
+    """Decode-step shape at serving time (KV cache length = seq)."""
+    d_model: int = 4096
+    n_heads: int = 32
+    head_dim: int = 128
+    d_ff: int = 16384
+    seq: int = 2048
+    vocab: int = 32000
+    n_layers: int = 32
+    batch: int = 2
+
+
+#: reduced dims for executable runtime tests (same graph structure)
+REDUCED_DIMS = DecodeDims(d_model=64, n_heads=4, head_dim=16, d_ff=128,
+                          seq=32, vocab=128, n_layers=2, batch=2)
+
+_Q_SCALE = 64.0          # activation quantization step for int attention
+
+
+def _rmsnorm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _gemv(x, w):
+    return x @ w
+
+
+def _pim_gemv(grid: BankGrid, x, w):
+    """Column-partitioned weight-stationary GEMV (the prim MLP layout):
+    each bank owns a column block of W; the activation is re-gathered for
+    the next stage through the host (KT3's per-layer cost)."""
+    return grid.local(_gemv, in_specs=(P(), P(None, grid.axis)),
+                      out_specs=P(None, grid.axis))(x, w)
+
+
+def _attend(qkv, kq, vq, dims: DecodeDims):
+    """Quantized-integer attention over the resident KV cache: int32 dot
+    products for scores and AV (DPU-native mul/add), float softmax.
+
+    The batch size comes from the input, not `dims`: under `_pim_attend`
+    this body runs on a per-bank shard of `dims.batch / n_banks` rows."""
+    h, dh = dims.n_heads, dims.head_dim
+    b = qkv.shape[0]
+    q = qkv.reshape(b, 3, h, dh)[:, 0]
+    qq = jnp.round(q * _Q_SCALE).astype(jnp.int32)
+    scores_i = jnp.einsum("bhd,shd->bhs", qq, kq)
+    scores = scores_i.astype(jnp.float32) / (_Q_SCALE * _Q_SCALE * dh ** 0.5)
+    w = jax.nn.softmax(scores, axis=-1)
+    wq = jnp.round(w * 256.0).astype(jnp.int32)
+    out_i = jnp.einsum("bhs,shd->bhd", wq, vq)
+    return out_i.astype(jnp.float32).reshape(b, h * dh) / (256.0 * _Q_SCALE)
+
+
+def _pim_attend(grid: BankGrid, qkv, kq, vq, dims: DecodeDims):
+    """Batch-partitioned attention: each bank holds its sequences' KV
+    cache shard (continuous batching across banks) — a pure local phase."""
+    f = functools.partial(_attend, dims=dims)
+    return grid.local(f, in_specs=(P(grid.axis), P(), P()),
+                      out_specs=P(grid.axis))(qkv, kq, vq)
+
+
+def decode_pipeline(dims: DecodeDims = REDUCED_DIMS, key=None,
+                    concrete: bool = True) -> Pipeline:
+    """The serving decode step as a stage chain: rmsnorm -> qkv GEMV ->
+    quantized KV attention -> o/up/down GEMVs per layer, then final norm
+    and the vocab head. Tokens enter from the host; logits return to the
+    host (the `serve.engine` sampling loop)."""
+    d = dims
+    key = key if key is not None else jax.random.PRNGKey(0)
+    keys = iter(jax.random.split(key, 8 * d.n_layers + 4))
+    f32, i32 = jnp.float32, jnp.int32
+
+    tokens = _mk(next(keys), (d.batch,), i32, concrete, 0, d.vocab)
+    table = _mk(next(keys), (d.vocab, d.d_model), f32, concrete)
+
+    def embed(t, tab):
+        return tab[t]
+
+    def pim_embed(grid, t, tab):
+        return grid.local(embed, in_specs=(P(grid.axis), P()),
+                          out_specs=P(grid.axis))(t, tab)
+
+    stages = [Stage("embed", embed, params=(table,), pim=pim_embed,
+                    kind="embed")]
+    act_bytes = float(d.batch * d.d_model * 4)
+    for i in range(d.n_layers):
+        wqkv = _mk(next(keys), (d.d_model, 3 * d.n_heads * d.head_dim), f32,
+                   concrete)
+        kq = _mk(next(keys), (d.seq, d.n_heads, d.head_dim), i32, concrete,
+                 -64, 64)
+        vq = _mk(next(keys), (d.seq, d.n_heads, d.head_dim), i32, concrete,
+                 -64, 64)
+        wo = _mk(next(keys), (d.n_heads * d.head_dim, d.d_model), f32,
+                 concrete)
+        wup = _mk(next(keys), (d.d_model, d.d_ff), f32, concrete)
+        wdown = _mk(next(keys), (d.d_ff, d.d_model), f32, concrete)
+        attend = functools.partial(_attend, dims=d)
+        stages += [
+            Stage(f"ln{i}", _rmsnorm, local_fn=_rmsnorm, kind="norm"),
+            Stage(f"qkv{i}", _gemv, params=(wqkv,), pim=_pim_gemv,
+                  exchange="gather", exchange_bytes=3 * act_bytes,
+                  kind="gemv_qkv"),
+            Stage(f"attn{i}", attend, params=(kq, vq),
+                  pim=functools.partial(_pim_attend, dims=d),
+                  kind="attn"),
+            Stage(f"o{i}", _gemv, params=(wo,), pim=_pim_gemv,
+                  exchange="gather", exchange_bytes=act_bytes,
+                  kind="gemv_o"),
+            Stage(f"up{i}", lambda x, w: jax.nn.gelu(x @ w), params=(wup,),
+                  pim=lambda grid, x, w: grid.local(
+                      lambda xx, ww: jax.nn.gelu(xx @ ww),
+                      in_specs=(P(), P(None, grid.axis)),
+                      out_specs=P(None, grid.axis))(x, w),
+                  exchange="gather",
+                  exchange_bytes=float(d.batch * d.d_ff * 4),
+                  kind="gemv_up"),
+            Stage(f"down{i}", _gemv, params=(wdown,), pim=_pim_gemv,
+                  exchange="gather", exchange_bytes=act_bytes,
+                  kind="gemv_down"),
+        ]
+    whead = _mk(next(keys), (d.d_model, d.vocab), f32, concrete)
+    stages += [
+        Stage("lnf", _rmsnorm, local_fn=_rmsnorm, kind="norm"),
+        Stage("head", _gemv, params=(whead,), pim=_pim_gemv,
+              exchange="gather", exchange_bytes=float(d.batch * d.vocab * 4),
+              kind="gemv_head"),
+    ]
+    return Pipeline("lm-decode", stages, tokens)
+
+
+# ---------------------------------------------------------------------------
+# the 16 PrIM workloads as one-operator graphs
+# ---------------------------------------------------------------------------
+
+def node_from_counts(c: WorkloadCounts) -> OpNode:
+    """Lift a PrIM workload's analytic counts into a single OpNode (the
+    whole workload is one operator — Fig. 4's granularity)."""
+    return OpNode(name=c.name, kind="prim", flops=c.flops_equiv,
+                  hbm_bytes=c.bytes_streamed, out_bytes=0.0,
+                  ops=dict(c.ops), exchange_bytes=c.interbank_bytes,
+                  meta={"pim_suitable": c.pim_suitable,
+                        "bytes_cpu": c.bytes_cpu, "bytes_gpu": c.bytes_gpu})
+
+
+def prim_graph(c: WorkloadCounts) -> OpGraph:
+    return chain_graph(c.name, [node_from_counts(c)])

@@ -6,6 +6,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# compile-bound: the whole arch zoo retraces here; tier-1 skips by default
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, REDUCED
 from repro.configs.shapes import ShapeConfig
 from repro.models import Shardings, forward, init_cache, init_params

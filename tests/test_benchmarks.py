@@ -1,0 +1,31 @@
+"""Smoke tests for the benchmarks/run.py modules, so the benches don't
+rot: each module's `run(report)` must complete and its own embedded
+assertions must hold. The compile-bound ones are `slow` (tier-1 skips
+them; CI's full job and the bench invocation itself cover them)."""
+
+import pytest
+
+from benchmarks.run import Report
+
+
+def test_scaling_bench_smoke(capsys):
+    from benchmarks import scaling_bench
+    scaling_bench.run(Report())
+    out = capsys.readouterr().out
+    assert "Strong scaling" in out and "VA" in out
+
+
+@pytest.mark.slow
+def test_suitability_bench_smoke(capsys):
+    from benchmarks import suitability_bench
+    suitability_bench.run(Report())
+    out = capsys.readouterr().out
+    assert "decode" in out
+
+
+@pytest.mark.slow
+def test_dispatch_bench_smoke(capsys):
+    from benchmarks import dispatch_bench
+    dispatch_bench.run(Report())
+    out = capsys.readouterr().out
+    assert "hybrid" in out and "allclose" in out.lower()

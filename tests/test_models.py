@@ -9,6 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# compile-bound: the whole arch zoo retraces here; tier-1 skips by default
+pytestmark = pytest.mark.slow
+
 from repro.configs import REDUCED
 from repro.models import Shardings, forward, init_cache, init_params
 from repro.models import layers as L

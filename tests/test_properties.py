@@ -2,7 +2,11 @@
 compaction, scan/prefix structure, sharding-spec divisibility, optimizer
 algebra."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
