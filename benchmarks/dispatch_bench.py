@@ -12,9 +12,13 @@ Three sweeps over `repro.dispatch`:
   3. The LM decode step (serve.engine's workload) at paper scale: weight
      GEMVs on the host (float mul is a software routine on DPUs, KT2),
      quantized KV-cache attention bank-parallel (streaming int dots, KT1).
+  4. The decode DAG (residual branches kept, KV-residency charged): the
+     exact frontier-DP plan must beat both steelmanned pure baselines
+     (pure CPU gets KV homed on the host) — the ISSUE-2 acceptance gate.
 
 Finally the reduced-scale pipelines are actually executed through
-`dispatch.runtime` and validated against the single-device reference.
+`dispatch.runtime` — and a dispatch-backed `ServeEngine` decode run is
+checked token-identical against the fused-jit engine.
 """
 
 from __future__ import annotations
@@ -86,6 +90,35 @@ def run(report):
                 "bank-parallel (the KV-cache attention); float-mul GEMVs "
                 "stay on the host (KT2)")
 
+    # -- sweep 4: decode DAG + KV residency (the serving planner) --------
+    report.section("Decode DAG (residuals kept, KV bank-resident), "
+                   "exact frontier-DP plan vs steelmanned pures")
+    dims = workloads.DecodeDims()
+    dag = workloads.decode_dag(dims)                  # KV homed on PIM
+    hybrid = plan(dag)
+    cpu = pure_plan(workloads.decode_dag(dims, kv_home="xeon"), "xeon")
+    pim = pure_plan(dag, "upmem_2556")
+    report.table([
+        {"plan": "pure_cpu (KV@host)", "modeled ms":
+            round(cpu.total_s * 1e3, 3),
+         "kv-migrate ms": round(cpu.migrate_s * 1e3, 3)},
+        {"plan": "pure_pim (KV@pim)", "modeled ms":
+            round(pim.total_s * 1e3, 3),
+         "kv-migrate ms": round(pim.migrate_s * 1e3, 3)},
+        {"plan": f"hybrid [{hybrid.method}]", "modeled ms":
+            round(hybrid.total_s * 1e3, 3),
+         "kv-migrate ms": round(hybrid.migrate_s * 1e3, 3)},
+    ])
+    # ISSUE-2 acceptance: dispatch-planned decode beats both pures at
+    # paper scale, each pure given its best-case KV residency
+    assert hybrid.total_s < cpu.total_s, "hybrid>=cpu on decode DAG"
+    assert hybrid.total_s < pim.total_s, "hybrid>=pim on decode DAG"
+    assert hybrid.method == "dag-dp", "decode DAG fell off the exact rung"
+    report.note(f"{len(dag.nodes)}-node DAG (frontier width "
+                f"{dag.max_frontier()}) planned exactly by the frontier "
+                "DP; attention pinned to the KV home, residual/GEMV "
+                "stream on the host")
+
     # -- execute the plans for real (reduced scale) ----------------------
     report.section("Runtime validation (reduced scale, real execution)")
     from repro.core.bank_parallel import BankGrid, make_bank_mesh
@@ -103,3 +136,34 @@ def run(report):
                      "local phases checked":
                          check_phase_discipline(pipe, grid)})
     report.table(rows)
+
+    # -- dispatch-backed serving: planner-routed == fused jit ------------
+    report.section("Dispatch-backed ServeEngine (reduced scale)")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import REDUCED
+    from repro.models import Shardings, init_params
+    from repro.serve import Request, ServeEngine
+    cfg = REDUCED["granite-3-8b"]
+    shd = Shardings(None)
+    params = init_params(jax.random.PRNGKey(0), cfg, shd)
+    key = jax.random.PRNGKey(7)
+    prompts = []
+    for _ in range(6):
+        key, k = jax.random.split(key)
+        plen = 3 + int(jax.random.randint(k, (), 0, 6))
+        prompts.append(jax.random.randint(k, (plen,), 0, cfg.vocab_size,
+                                          dtype=jnp.int32))
+    outs = {}
+    for engine in ("jit", "dispatch"):
+        eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=shd,
+                          engine=engine)
+        done = eng.serve([Request(i, p, 4) for i, p in enumerate(prompts)])
+        outs[engine] = {r.rid: r.out_tokens for r in done}
+    assert outs["jit"] == outs["dispatch"], \
+        "dispatch-backed decode diverged from the jit engine"
+    report.table([{"engine": e, "requests": len(outs[e]),
+                   "tokens": sum(len(t) for t in outs[e].values())}
+                  for e in outs])
+    report.note("dispatch-backed decode is token-identical to the "
+                "fused-jit engine over a continuous-batching run")

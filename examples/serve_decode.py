@@ -6,7 +6,14 @@ lengths share one batched KV cache (per-slot positions), new requests are
 admitted as slots free up, and the decode step itself is the bank-parallel
 workload (a batched GEMV against chip-resident weights).
 
+With `--engine dispatch` the decode step is routed through the offload
+planner instead of one fused jit: the decode DAG is planned over
+{xeon, upmem_2556} with the KV cache bank-resident, and each stage runs
+on its assigned device (host stages per-stage jit, PIM stages as BankGrid
+phases) — same tokens, planner-chosen execution.
+
     PYTHONPATH=src python examples/serve_decode.py [--arch rwkv6-3b]
+    PYTHONPATH=src python examples/serve_decode.py --engine dispatch
 """
 
 import argparse
@@ -28,6 +35,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--engine", choices=("jit", "dispatch"), default="jit",
+                    help="decode backend: fused jit, or planner-routed "
+                         "hybrid dispatch (dense-attention archs only)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=True)
@@ -35,7 +45,16 @@ def main():
     shd = Shardings(None)
     params = init_params(jax.random.PRNGKey(0), cfg, shd)
     engine = ServeEngine(cfg, params, batch_slots=args.slots, max_len=96,
-                         shd=shd, temperature=args.temperature, seed=7)
+                         shd=shd, temperature=args.temperature, seed=7,
+                         engine=args.engine)
+    if engine.dispatch_plan is not None:
+        p = engine.dispatch_plan
+        devs = {}
+        for dev in p.assignment.values():
+            devs[dev] = devs.get(dev, 0) + 1
+        print(f"dispatch plan [{p.method}]: {len(p.assignment)} stages -> "
+              + ", ".join(f"{d}:{n}" for d, n in sorted(devs.items()))
+              + f"; modeled {p.total_s * 1e3:.2f}ms/step at serving dims")
 
     key = jax.random.PRNGKey(1)
     reqs = []

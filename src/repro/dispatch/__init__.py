@@ -4,23 +4,31 @@ The paper's central finding is that PIM suitability is *per-operator*, not
 per-program (Takeaways 1-3, Fig. 4's two workload groups). This package
 turns the one-shot analyses of `repro.core` into an end-to-end pipeline:
 
-    graph      build an operator graph (flops / bytes / OI / op mix per op)
+    graph      build an operator graph (flops / bytes / OI / op mix per op,
+               KV-residency annotations on cache-reading nodes)
     placement  assign every op to xeon / titan_v / upmem_* minimizing
                modeled end-to-end latency, charging host<->DPU boundary
-               transfers (DP over chains, greedy over DAGs)
+               transfers and KV-cache migration off its home device.
+               Planner ladder: chain DP -> exact frontier DP (series-
+               parallel / out-tree DAGs) -> bounded branch-and-bound ->
+               greedy (see placement docstring)
     schedule   coalesce consecutive PIM stages into one launch, batch
-               parallel transfers, overlap compute with transfers
+               parallel transfers, overlap compute with transfers (the
+               GPU<->DPU host-relay hop stays serialized)
     runtime    execute a plan in JAX: PIM stages as BankGrid local/exchange
                phases, host stages under plain jit, validated vs reference
-    workloads  mixed PrIM pipelines + the LM decode chain as dispatchable
-               pipelines/graphs
+    workloads  mixed PrIM pipelines + the LM decode chain/DAG as
+               dispatchable pipelines/graphs
 
-Everything later PRs serve or scale dispatches through this layer.
+The serving engine dispatches decode through this layer
+(`repro.serve.dispatch_engine`, `ServeEngine(engine="dispatch")`).
 """
 
-from .graph import OpNode, OpGraph, node_from_fn, ops_from_hlo
-from .placement import (DEVICES, Plan, compare_plans, plan, pure_plan,
-                        node_time, transfer_time)
+from .graph import (OpNode, OpGraph, annotate_kv_residency, node_from_fn,
+                    ops_from_hlo)
+from .placement import (DEVICES, Plan, compare_plans, greedy_plan,
+                        kv_migration_time, node_time, placed_time, plan,
+                        pure_plan, transfer_hops, transfer_time)
 from .schedule import LaunchGroup, Schedule, make_schedule
-from .runtime import Pipeline, Stage, execute, reference
+from .runtime import Pipeline, Stage, bank_face, execute, reference
 from . import workloads

@@ -226,6 +226,37 @@ class OpGraph:
             raise ValueError(f"cycle in op graph {self.name}")
         return order
 
+    def last_use_positions(self, order: list[str] | None = None
+                           ) -> dict[str, int]:
+        """Topo-order position of each producer's last consumer (-1 for
+        leaves) — when the walk passes it, the producer's tensor is no
+        longer awaited. Shared bookkeeping between `max_frontier` and the
+        placement planner's frontier DP (`placement._DagWalk`), so the
+        reported width and the DP's actual state space cannot drift."""
+        order = order if order is not None else self.topo_order()
+        pos = {n: i for i, n in enumerate(order)}
+        return {u: max((pos[v] for v in ss), default=-1)
+                for u, ss in self.succs.items()}
+
+    def max_frontier(self) -> int:
+        """Largest number of already-visited producers still awaited by an
+        unvisited consumer at any point of the topological order. The
+        frontier DP's state space is exponential in this width — chains
+        and stars are 1, the decode DAG's residual braid is 2, wide
+        parallel compositions grow with their branch count."""
+        order = self.topo_order()
+        preds, succs = self.preds, self.succs
+        last_use = self.last_use_positions(order)
+        open_now, widest = set(), 0
+        for i, n in enumerate(order):
+            for u in preds[n]:
+                if last_use[u] == i:
+                    open_now.discard(u)
+            if succs[n]:
+                open_now.add(n)
+            widest = max(widest, len(open_now))
+        return widest
+
     @property
     def is_chain(self) -> bool:
         if len(self.edges) != len(self.nodes) - 1:
@@ -346,6 +377,17 @@ def node_from_fn(name: str, fn: Callable, *example_args,
         exchange_bytes=exchange_bytes,
         meta={"analysis": analysis},
     )
+
+
+def annotate_kv_residency(node: OpNode, kv_bytes: float,
+                          home: str) -> OpNode:
+    """Mark a node as reading `kv_bytes` of cache resident on `home`.
+    The planner (`placement.kv_migration_time`) charges moving those bytes
+    over the measured channel whenever the node is placed elsewhere —
+    the data-placement term of the decode DAG's objective."""
+    node.meta["kv_bytes"] = float(kv_bytes)
+    node.meta["kv_home"] = home
+    return node
 
 
 def chain_graph(name: str, nodes: Iterable[OpNode],

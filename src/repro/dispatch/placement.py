@@ -16,11 +16,25 @@ previous operator already ran there* — so the optimizer itself discovers
 the paper's launch-coalescing recommendation: consecutive PIM operators
 merge into one DPU launch.
 
-For chain graphs (every pipeline in `dispatch.workloads`) the planner runs
-exact dynamic programming over (node, device); for general DAGs it falls
-back to a greedy topological sweep. Weights/params are treated as
-device-resident (weight-stationary serving): only activations cross
-boundaries.
+Nodes that read a resident KV-cache shard (the decode attention) carry
+`meta["kv_bytes"]` / `meta["kv_home"]`: placing such a node on any device
+other than the cache's home charges migrating the slot's KV over the
+measured transfer channel (`kv_migration_time`) — the data-placement cost
+the decode DAG planner trades against compute. Weights/params stay
+device-resident (weight-stationary serving): only activations and migrated
+KV cross boundaries.
+
+Planner ladder (each rung exact for its class, the next a fallback):
+
+  1. chain DP over (position, device)         — chains (`is_chain`)
+  2. frontier DP over the topological order   — exact for ANY DAG whose
+     open-producer frontier stays small (series-parallel decompositions,
+     out-trees, the decode DAG's residual braid); aborts past a state
+     budget
+  3. bounded branch-and-bound                 — general DAGs; seeded with
+     the greedy incumbent and an admissible per-node lower bound, so its
+     answer is never worse than greedy and exact if the budget suffices
+  4. greedy topological sweep                 — the always-available floor
 """
 
 from __future__ import annotations
@@ -84,6 +98,44 @@ def transfer_time(src: str, dst: str, nbytes: float,
     return t
 
 
+def transfer_hops(src: str, dst: str, nbytes: float,
+                  dpu: DPUModel | None = None) -> tuple[float, float]:
+    """Split a transfer into (relay_s, final_hop_s).
+
+    GPU<->DPU traffic has no direct channel: it relays through host DRAM
+    (Takeaway 3), and the relay hop must complete before the final hop can
+    start streaming into the destination — the scheduler may only overlap
+    the *final* hop with destination compute. Single-hop paths have
+    relay_s == 0. The two components always sum to `transfer_time`."""
+    if src == dst or nbytes <= 0:
+        return 0.0, 0.0
+    d = dpu or UPMEM_2556
+    if _is_pim(src) and dst == "titan_v":
+        return nbytes / d.dpu_to_host_bw, nbytes / PCIE_BW
+    if src == "titan_v" and _is_pim(dst):
+        return nbytes / PCIE_BW, nbytes / d.host_to_dpu_bw
+    return 0.0, transfer_time(src, dst, nbytes, dpu)
+
+
+def kv_migration_time(node: OpNode, device: str,
+                      dpu: DPUModel | None = None) -> float:
+    """Cost of pulling the node's resident KV-cache bytes to `device` when
+    it is placed away from the cache's home (zero when at home or when the
+    node carries no residency annotation)."""
+    kv_bytes = float(node.meta.get("kv_bytes") or 0.0)
+    home = node.meta.get("kv_home")
+    if not kv_bytes or not home or home == device:
+        return 0.0
+    return transfer_time(home, device, kv_bytes, dpu)
+
+
+def placed_time(node: OpNode, device: str,
+                dpu: DPUModel | None = None) -> float:
+    """node_time plus the KV-residency migration charge — the per-(node,
+    device) additive term every planner rung optimizes against."""
+    return node_time(node, device, dpu) + kv_migration_time(node, device, dpu)
+
+
 def launch_overhead(device: str, dpu: DPUModel | None = None) -> float:
     if _is_pim(device):
         return (dpu or _DPU_SYSTEMS[device]).launch_overhead_s
@@ -98,12 +150,13 @@ def launch_overhead(device: str, dpu: DPUModel | None = None) -> float:
 class Plan:
     graph_name: str
     assignment: dict[str, str]         # node name -> device
-    method: str                        # dp | greedy | pure
+    method: str                        # dp | dag-dp | bnb | greedy | pure
     total_s: float
     compute_s: float
     transfer_s: float
     launch_s: float
     node_s: dict[str, float]
+    migrate_s: float = 0.0             # KV-residency migration charges
 
     @property
     def n_boundary_crossings(self) -> int:
@@ -127,7 +180,8 @@ class Plan:
                  f"total={self.total_s * 1e3:.3f}ms  "
                  f"(compute {self.compute_s * 1e3:.3f} + transfer "
                  f"{self.transfer_s * 1e3:.3f} + launch "
-                 f"{self.launch_s * 1e3:.3f})"]
+                 f"{self.launch_s * 1e3:.3f} + kv-migrate "
+                 f"{self.migrate_s * 1e3:.3f})"]
         for node, dev in self.assignment.items():
             lines.append(f"  {node:28s} -> {dev:12s} "
                          f"{self.node_s[node] * 1e6:10.1f}us")
@@ -145,11 +199,13 @@ def evaluate(graph: OpGraph, assignment: dict[str, str],
     order = graph.topo_order()
     preds = graph.preds
     succs = graph.succs
-    node_s, compute = {}, 0.0
+    node_s, compute, migrate = {}, 0.0, 0.0
     for n in order:
         t = node_time(graph.nodes[n], assignment[n], dpu)
-        node_s[n] = t
+        m = kv_migration_time(graph.nodes[n], assignment[n], dpu)
+        node_s[n] = t + m
         compute += t
+        migrate += m
 
     transfer, crossings = 0.0, []
     roots = [n for n in order if not preds[n]]
@@ -186,9 +242,10 @@ def evaluate(graph: OpGraph, assignment: dict[str, str],
         prev_dev = assignment[n]
 
     return Plan(graph_name=graph.name, assignment=dict(assignment),
-                method=method, total_s=compute + transfer + launch,
+                method=method,
+                total_s=compute + transfer + launch + migrate,
                 compute_s=compute, transfer_s=transfer, launch_s=launch,
-                node_s=node_s, _crossings=crossings)
+                node_s=node_s, migrate_s=migrate, _crossings=crossings)
 
 
 def _resolve(devices: Iterable[str]) -> tuple[tuple[str, ...], DPUModel | None]:
@@ -203,21 +260,37 @@ def _resolve(devices: Iterable[str]) -> tuple[tuple[str, ...], DPUModel | None]:
 
 
 def plan(graph: OpGraph, devices: Iterable[str] = ("xeon", "upmem_2556"),
-         source: str = "xeon", sink: str = "xeon") -> Plan:
+         source: str = "xeon", sink: str = "xeon", *,
+         state_budget: int = 200_000, bnb_budget: int = 200_000) -> Plan:
     """Minimize modeled end-to-end latency over per-operator placements.
 
-    Exact DP over (position, device) when the graph is a chain — the cost
-    structure (node + boundary transfer + coalesced launch) only couples
-    adjacent operators, so the chain DP is optimal. Greedy topological
-    sweep otherwise."""
+    The fallback ladder (module docstring): chain DP when the graph is a
+    chain; otherwise the exact frontier DP while its per-step state count
+    stays under `state_budget`; otherwise branch-and-bound limited to
+    `bnb_budget` node expansions, seeded with the greedy incumbent (so the
+    result is never worse than greedy)."""
     devices, dpu = _resolve(devices)
     if graph.is_chain:
         assignment = _plan_chain_dp(graph, devices, dpu, source, sink)
         method = "dp"
     else:
-        assignment = _plan_greedy(graph, devices, dpu, source)
-        method = "greedy"
+        assignment = _plan_dag_frontier_dp(graph, devices, dpu, source,
+                                           sink, state_budget)
+        method = "dag-dp"
+        if assignment is None:
+            assignment = _plan_dag_bnb(graph, devices, dpu, source, sink,
+                                       bnb_budget)
+            method = "bnb"
     return evaluate(graph, assignment, dpu, source, sink, method=method)
+
+
+def greedy_plan(graph: OpGraph,
+                devices: Iterable[str] = ("xeon", "upmem_2556"),
+                source: str = "xeon", sink: str = "xeon") -> Plan:
+    """The ladder's floor, exposed for bound tests and B&B seeding."""
+    devices, dpu = _resolve(devices)
+    assignment = _plan_greedy(graph, devices, dpu, source)
+    return evaluate(graph, assignment, dpu, source, sink, method="greedy")
 
 
 def pure_plan(graph: OpGraph, device: str, source: str = "xeon",
@@ -235,13 +308,13 @@ def _plan_chain_dp(graph: OpGraph, devices: tuple[str, ...],
     n0 = order[0]
     cost = {d: transfer_time(source, d, graph.input_bytes, dpu)
             + launch_overhead(d, dpu)
-            + node_time(graph.nodes[n0], d, dpu) for d in devices}
+            + placed_time(graph.nodes[n0], d, dpu) for d in devices}
     back: list[dict[str, str]] = []
     for i in range(1, len(order)):
         node, prev = graph.nodes[order[i]], graph.nodes[order[i - 1]]
         nxt, choice = {}, {}
         for d in devices:
-            t_node = node_time(node, d, dpu)
+            t_node = placed_time(node, d, dpu)
             best, best_p = float("inf"), devices[0]
             for p in devices:
                 c = cost[p] + transfer_time(p, d, prev.out_bytes, dpu) \
@@ -272,7 +345,7 @@ def _plan_greedy(graph: OpGraph, devices: tuple[str, ...],
         node = graph.nodes[n]
         best, best_d = float("inf"), devices[0]
         for d in devices:
-            c = node_time(node, d, dpu)
+            c = placed_time(node, d, dpu)
             if preds[n]:
                 for p in preds[n]:
                     c += transfer_time(assignment[p], d,
@@ -286,6 +359,153 @@ def _plan_greedy(graph: OpGraph, devices: tuple[str, ...],
                 best, best_d = c, d
         assignment[n] = best_d
     return assignment
+
+
+# ---------------------------------------------------------------------------
+# exact DAG planning: frontier DP + bounded branch-and-bound
+# ---------------------------------------------------------------------------
+
+class _DagWalk:
+    """Incremental evaluation of `evaluate`'s objective along the fixed
+    topological order. The walk state is the *frontier*: producers already
+    placed whose tensors are still awaited by an unprocessed consumer, each
+    carrying (device, set of devices already shipped to) — exactly the
+    information `evaluate`'s transfer dedup key `(producer, dest_device)`
+    needs. Summing `step` deltas over the order reproduces `evaluate`'s
+    total for the same assignment."""
+
+    def __init__(self, graph: OpGraph, dpu: DPUModel | None,
+                 source: str, sink: str):
+        self.graph = graph
+        self.dpu = dpu
+        self.source, self.sink = source, sink
+        self.order = graph.topo_order()
+        self.preds = graph.preds
+        self.succs = graph.succs
+        self.n_roots = max(sum(1 for n in self.order if not self.preds[n]), 1)
+        # when the walk passes a producer's last consumer it leaves the
+        # frontier (shared bookkeeping with OpGraph.max_frontier)
+        self.last_use = graph.last_use_positions(self.order)
+
+    def step(self, idx: int, d: str, prev: str | None,
+             open_map: dict[str, tuple[str, frozenset]],
+             ) -> tuple[float, dict[str, tuple[str, frozenset]]]:
+        """Cost of placing order[idx] on `d` given the frontier, and the
+        frontier after the step."""
+        v = self.order[idx]
+        node = self.graph.nodes[v]
+        c = placed_time(node, d, self.dpu)
+        if d != prev:
+            c += launch_overhead(d, self.dpu)
+        new_open = dict(open_map)
+        if not self.preds[v]:
+            c += transfer_time(self.source, d,
+                               self.graph.input_bytes / self.n_roots,
+                               self.dpu)
+        for u in self.preds[v]:
+            du, shipped = new_open[u]
+            if d not in shipped:
+                c += transfer_time(du, d, self.graph.nodes[u].out_bytes,
+                                   self.dpu)
+                new_open[u] = (du, shipped | {d})
+        if not self.succs[v]:
+            c += transfer_time(d, self.sink, node.out_bytes, self.dpu)
+        for u in self.preds[v]:
+            if self.last_use[u] == idx:
+                del new_open[u]
+        if self.succs[v]:
+            # pre-seed the producer's own device: shipping to it is free,
+            # so this merges cost-equivalent DP states instead of keeping
+            # ({}, {d}) duplicates that double the frontier state count
+            new_open[v] = (d, frozenset((d,)))
+        return c, new_open
+
+
+def _freeze(open_map: dict[str, tuple[str, frozenset]]) -> frozenset:
+    return frozenset((n, d, s) for n, (d, s) in open_map.items())
+
+
+def _plan_dag_frontier_dp(graph: OpGraph, devices: tuple[str, ...],
+                          dpu: DPUModel | None, source: str, sink: str,
+                          state_budget: int) -> dict[str, str] | None:
+    """Exact DP over (frontier state, previous device) along the topo
+    order. State count is ~ |devices|^frontier_width, so series-parallel /
+    out-tree-like graphs (decode DAG: width <= 2) stay tiny; returns None
+    when a step exceeds `state_budget` states (wide general DAGs)."""
+    walk = _DagWalk(graph, dpu, source, sink)
+    # layers[i]: state key -> (cost, previous key, device placed at step i-1)
+    start_key = (None, frozenset())
+    layers: list[dict[tuple, tuple[float, tuple | None, str | None]]] = [
+        {start_key: (0.0, None, None)}]
+    total_states = 1                   # budget caps the SUM across steps
+    for idx in range(len(walk.order)):
+        nxt: dict[tuple, tuple[float, tuple | None, str | None]] = {}
+        for key, (cost, _, _) in layers[-1].items():
+            prev, open_key = key
+            open_map = {n: (d, s) for n, d, s in open_key}
+            for d in devices:
+                dc, new_open = walk.step(idx, d, prev, open_map)
+                nk = (d, _freeze(new_open))
+                c = cost + dc
+                if nk not in nxt or c < nxt[nk][0]:
+                    nxt[nk] = (c, key, d)
+            if total_states + len(nxt) > state_budget:
+                return None            # every retained layer counts: the
+                                       # back-pointer tables are what the
+                                       # budget is actually bounding
+        total_states += len(nxt)
+        layers.append(nxt)
+    key = min(layers[-1], key=lambda k: layers[-1][k][0])
+    assignment: dict[str, str] = {}
+    for idx in range(len(walk.order), 0, -1):
+        _, prev_key, d = layers[idx][key]
+        assignment[walk.order[idx - 1]] = d
+        key = prev_key
+    return assignment
+
+
+def _plan_dag_bnb(graph: OpGraph, devices: tuple[str, ...],
+                  dpu: DPUModel | None, source: str, sink: str,
+                  bnb_budget: int) -> dict[str, str]:
+    """Depth-first branch-and-bound along the topo order.
+
+    Incumbent = the greedy sweep (so the returned assignment never costs
+    more than greedy's); lower bound = prefix cost + sum of each remaining
+    node's cheapest placed_time (admissible: transfers and launches are
+    non-negative). Stops refining after `bnb_budget` expansions."""
+    walk = _DagWalk(graph, dpu, source, sink)
+    n = len(walk.order)
+    suffix_lb = [0.0] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        node = graph.nodes[walk.order[i]]
+        suffix_lb[i] = suffix_lb[i + 1] + min(
+            placed_time(node, d, dpu) for d in devices)
+
+    best = _plan_greedy(graph, devices, dpu, source)
+    best_cost = evaluate(graph, best, dpu, source, sink).total_s
+    expansions = 0
+
+    # iterative DFS: (idx, prev device, frontier, prefix cost, assignment)
+    stack = [(0, None, {}, 0.0, {})]
+    while stack and expansions < bnb_budget:
+        idx, prev, open_map, cost, assign = stack.pop()
+        if idx == n:
+            if cost < best_cost:
+                best_cost, best = cost, assign
+            continue
+        children = []
+        for d in devices:
+            expansions += 1
+            dc, new_open = walk.step(idx, d, prev, open_map)
+            c = cost + dc
+            if c + suffix_lb[idx + 1] >= best_cost - 1e-15:
+                continue
+            children.append((c, (idx + 1, d, new_open, c,
+                                 {**assign, walk.order[idx]: d})))
+        # cheapest child explored first (LIFO: push in reverse)
+        for _, child in sorted(children, key=lambda t: t[0], reverse=True):
+            stack.append(child)
+    return best
 
 
 def compare_plans(graph: OpGraph,

@@ -32,10 +32,25 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..core.bank_parallel import BankGrid, assert_local
 from .graph import OpGraph, _struct_bytes as _nbytes, chain_graph, \
     node_from_fn
+
+
+def bank_face(grid: BankGrid, fn: Callable, batched: tuple[bool, ...],
+              n_out: int = 1) -> Callable:
+    """Build a stage's bank-parallel face from its host face: args flagged
+    True shard their leading (batch) dim over banks, others replicate to
+    every bank (weights / rope tables / scalars); every output is
+    batch-sharded. This is the continuous-batching-across-banks layout of
+    DESIGN.md §4 — each bank owns its slots' activations and KV rows, so
+    the body stays a pure local phase (Takeaway 3)."""
+    in_specs = tuple(P(grid.axis) if b else P() for b in batched)
+    out_specs = tuple(P(grid.axis) for _ in range(n_out)) if n_out > 1 \
+        else P(grid.axis)
+    return grid.local(fn, in_specs=in_specs, out_specs=out_specs)
 
 
 @dataclasses.dataclass

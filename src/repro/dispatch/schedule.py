@@ -16,6 +16,11 @@ The paper's programming recommendations, made mechanical:
     `max(compute, transfer)` instead of `compute + transfer` (dependent
     groups can never prefetch each other — only intra-group streaming
     overlaps, which is why the overlapped total still sums over groups).
+    GPU<->DPU tensors relay through host DRAM (Takeaway 3, both hops
+    charged by `placement.transfer_time`); only the *final* hop streams
+    into the group's device, so only it may hide under compute — the
+    host-relay hop (`LaunchGroup.relay_s`) is serialized in front of the
+    overlap window.
 
 `make_schedule(graph, plan)` emits the timeline; `Schedule.total_s` (and
 the optimistic `overlapped_s`) is the modeled wall-clock the benchmarks
@@ -29,7 +34,7 @@ import dataclasses
 from ..core.pim_model import DPUModel, UPMEM_2556
 from .graph import OpGraph
 from .placement import (Plan, _DPU_SYSTEMS, launch_overhead, node_time,
-                        transfer_time)
+                        transfer_hops, transfer_time)
 
 #: fixed cost of one host<->device transfer call (API + sync); batching N
 #: buffers into one parallel transfer pays this once instead of N times
@@ -49,6 +54,7 @@ class LaunchGroup:
     serial_transfer_s: float          # unbatched: per-tensor setup (for the
                                       # "what batching buys" delta)
     launch_s: float
+    relay_s: float = 0.0              # host-relay hop of GPU<->DPU inputs
 
     @property
     def serial_s(self) -> float:
@@ -56,8 +62,13 @@ class LaunchGroup:
 
     @property
     def overlapped_s(self) -> float:
-        """Streaming double-buffering: input chunks hide under compute."""
-        return max(self.compute_s, self.in_transfer_s) + self.launch_s
+        """Streaming double-buffering: input chunks hide under compute —
+        but the host-relay hop of a GPU<->DPU path finishes before the
+        final hop starts streaming, so it cannot hide under this group's
+        compute and is serialized in front of the overlap window."""
+        return (self.relay_s
+                + max(self.compute_s, self.in_transfer_s - self.relay_s)
+                + self.launch_s)
 
 
 @dataclasses.dataclass
@@ -120,7 +131,11 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
     # boundary transfers: every tensor entering a group is priced on its
     # producer's actual channel (data already resident on the group's
     # device crosses nothing); one batched transfer call per source
-    # channel amortizes the setup cost
+    # channel amortizes the setup cost. Migrated KV-cache shards are
+    # boundary transfers too: a member node whose KV home is not the
+    # group's device pulls its kv_bytes over the home's channel (the
+    # plan's migrate_s term, kept in the timeline so Schedule and Plan
+    # totals agree on KV-annotated graphs)
     for gi, g in enumerate(groups):
         crossing: list[tuple[str, float]] = []   # (src device, bytes)
         entered: set[str] = set()                # producers already shipped
@@ -131,12 +146,19 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                     entered.add(p)
                     crossing.append((plan.assignment[p],
                                      graph.nodes[p].out_bytes))
+            meta = graph.nodes[n].meta
+            kv_bytes = float(meta.get("kv_bytes") or 0.0)
+            kv_home = meta.get("kv_home")
+            if kv_bytes and kv_home and kv_home != g.device:
+                crossing.append((kv_home, kv_bytes))
         if gi == 0 and graph.input_bytes and g.device != source:
             crossing.append((source, graph.input_bytes))
         if crossing:
             g.in_bytes = sum(b for _, b in crossing)
             g.n_in_tensors = len(crossing)
             payload_s = sum(transfer_time(src, g.device, b, dpu)
+                            for src, b in crossing)
+            g.relay_s = sum(transfer_hops(src, g.device, b, dpu)[0]
                             for src, b in crossing)
             n_channels = len({src for src, _ in crossing})
             g.in_transfer_s = n_channels * TRANSFER_SETUP_S + payload_s

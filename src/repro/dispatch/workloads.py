@@ -40,7 +40,8 @@ from jax.sharding import PartitionSpec as P
 from ..core.bank_parallel import BankGrid
 from ..core.perf_model import WorkloadCounts
 from ..prim import trns as prim_trns
-from .graph import OpGraph, OpNode, chain_graph
+from .graph import (OpGraph, OpNode, annotate_kv_residency, chain_graph,
+                    node_from_fn)
 from .runtime import Pipeline, Stage
 
 
@@ -130,7 +131,14 @@ def mixed_pipeline(m: int = 2048, key=None, concrete: bool = True) -> Pipeline:
 
 @dataclasses.dataclass(frozen=True)
 class DecodeDims:
-    """Decode-step shape at serving time (KV cache length = seq)."""
+    """Decode-step shape at serving time (KV cache length = seq).
+
+    `n_kv_heads`/`kv_itemsize` size the *resident KV cache* (GQA caches
+    fewer heads; real caches may be wider than int32) — they feed the
+    migration charge. The modeled attention compute keeps the MHA int32
+    proxy regardless (conservative for GQA: it can only overstate PIM's
+    attention work, never understate the migration the planner trades it
+    against)."""
     d_model: int = 4096
     n_heads: int = 32
     head_dim: int = 128
@@ -139,6 +147,12 @@ class DecodeDims:
     vocab: int = 32000
     n_layers: int = 32
     batch: int = 2
+    n_kv_heads: int | None = None      # None -> n_heads (MHA)
+    kv_itemsize: int = 4
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
 
 
 #: reduced dims for executable runtime tests (same graph structure)
@@ -257,6 +271,99 @@ def decode_pipeline(dims: DecodeDims = REDUCED_DIMS, key=None,
               kind="gemv_head"),
     ]
     return Pipeline("lm-decode", stages, tokens)
+
+
+# ---------------------------------------------------------------------------
+# LM decode step as a DAG (residual branches + attention fan-out)
+# ---------------------------------------------------------------------------
+
+def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
+               kv_home: str | None = "upmem_2556") -> OpGraph:
+    """The full decode-step DAG the serving planner consumes.
+
+    Unlike `decode_pipeline` (which elides residuals to stay a chain, the
+    old DP's exact case), this keeps the real dataflow: each layer's
+    residual stream fans out to both the qkv projection and the post-
+    attention add, so the graph is series-parallel with frontier width 2 —
+    squarely inside the frontier DP's exact class. Node names match the
+    executable stages of `serve.dispatch_engine` ("embed", "qkv{i}",
+    "attn{i}", "o{i}", "mlp{i}", "head"), so a plan over this graph routes
+    that engine directly.
+
+    `kv_home` annotates every attention node with its layer's KV-cache
+    residency (`graph.annotate_kv_residency`): placing attn{i} away from
+    `kv_home` charges migrating the slot's KV over the measured transfer
+    channel. None disables residency (pure dataflow comparison).
+    """
+    d = dims
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    dm, hdh = d.d_model, d.n_heads * d.head_dim
+    act_bytes = float(d.batch * dm * 4)
+    # migrating a layer's cache off-home moves every slot's K and V rows
+    # at the cache's real width (GQA heads, real itemsize)
+    kv_bytes = 2.0 * d.batch * d.seq * d.kv_heads * d.head_dim \
+        * d.kv_itemsize
+
+    tokens = S((d.batch,), i32)
+    table = S((d.vocab, dm), f32)
+    x = S((d.batch, dm), f32)
+    qkv_out = S((d.batch, 3 * hdh), f32)
+    attn_out = S((d.batch, hdh), f32)
+    wqkv = S((dm, 3 * hdh), f32)
+    kq = S((d.seq, d.n_heads, d.head_dim), i32)
+    vq = S((d.seq, d.n_heads, d.head_dim), i32)
+    wo = S((hdh, dm), f32)
+    wup, wdown = S((dm, d.d_ff), f32), S((d.d_ff, dm), f32)
+    whead = S((dm, d.vocab), f32)
+
+    def f_embed(t, tab):
+        return tab[t]
+
+    def f_qkv(v, w):
+        return _rmsnorm(v) @ w
+
+    attend = functools.partial(_attend, dims=d)
+
+    def f_o(a, res, w):
+        return res + a @ w
+
+    def f_mlp(v, wu, wd):
+        return v + jax.nn.gelu(_rmsnorm(v) @ wu) @ wd
+
+    def f_head(v, w):
+        return _rmsnorm(v) @ w
+
+    # compile each distinct stage shape once; later layers are renamed copies
+    protos = {
+        "qkv": node_from_fn("qkv", f_qkv, x, wqkv, kind="gemv_qkv",
+                            exchange_bytes=3 * act_bytes),
+        "attn": node_from_fn("attn", attend, qkv_out, kq, vq, kind="attn"),
+        "o": node_from_fn("o", f_o, attn_out, x, wo, kind="gemv_o",
+                          exchange_bytes=act_bytes),
+        "mlp": node_from_fn("mlp", f_mlp, x, wup, wdown, kind="mlp",
+                            exchange_bytes=float(d.batch * d.d_ff * 4)
+                            + act_bytes),
+    }
+
+    g = OpGraph("lm-decode-dag", input_bytes=float(d.batch * 4))
+    g.add(node_from_fn("embed", f_embed, tokens, table, kind="embed"))
+    res = "embed"                      # the residual stream's producer
+    for i in range(d.n_layers):
+        def layer_node(kind, name):
+            return dataclasses.replace(protos[kind], name=name,
+                                       ops=dict(protos[kind].ops),
+                                       meta=dict(protos[kind].meta))
+        g.add(layer_node("qkv", f"qkv{i}"), res)
+        attn = g.add(layer_node("attn", f"attn{i}"), f"qkv{i}")
+        if kv_home is not None:
+            annotate_kv_residency(attn, kv_bytes, kv_home)
+        g.add(layer_node("o", f"o{i}"), f"attn{i}", res)
+        g.add(layer_node("mlp", f"mlp{i}"), f"o{i}")
+        res = f"mlp{i}"
+    g.add(node_from_fn("head", f_head, x, whead, kind="gemv_head",
+                       exchange_bytes=float(d.batch * d.vocab * 4)), res)
+    return g
 
 
 # ---------------------------------------------------------------------------

@@ -348,6 +348,16 @@ def _sinusoid(s, d):
 # full forward
 # --------------------------------------------------------------------- #
 
+def mask_vocab_padding(logits, cfg: ModelConfig):
+    """Mask Megatron-style vocab padding out of the softmax. Shared by
+    `forward` and the dispatch decode step (serve.dispatch_engine), whose
+    correctness contract is exact numerical agreement with forward."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+
+
 def forward(params, cfg: ModelConfig, shd: Shardings, *,
             tokens=None, embeds=None, positions=None, mrope_positions=None,
             cache=None, encoder_embeds=None):
@@ -398,10 +408,7 @@ def forward(params, cfg: ModelConfig, shd: Shardings, *,
     wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = jnp.einsum("bsd,vd->bsv", x, wv.astype(x.dtype))
     logits = shd.act(logits, "batch", None, "vocab")
-    if cfg.padded_vocab != cfg.vocab_size:
-        # mask Megatron-style vocab padding out of the softmax
-        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
-        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    logits = mask_vocab_padding(logits, cfg)
 
     new_cache = None
     if cache is not None:

@@ -1,4 +1,11 @@
-"""repro.serve — prefill/decode steps + batched serving engine."""
+"""repro.serve — prefill/decode steps + batched serving engine.
 
+Two decode backends share the continuous-batching loop: the fused-jit
+step (`engine="jit"`, default) and the dispatch-backed step
+(`engine="dispatch"`) that routes every decode-DAG stage to the device
+the offload planner chose (serve.dispatch_engine)."""
+
+from .dispatch_engine import (DispatchDecodeStep, dims_for_config,
+                              make_dispatch_decode_step)
 from .engine import (Request, ServeEngine, make_decode_step,
                      make_prefill_step, sample)

@@ -1,0 +1,231 @@
+"""Dispatch-backed decode: route the serving engine through planner plans.
+
+`DispatchDecodeStep` is a drop-in replacement for `ServeEngine`'s jitted
+decode callable (same `(params, cache, tokens, slot_pos, live_mask, key)`
+signature), selected with `ServeEngine(..., engine="dispatch")`. Instead of
+one fused jit, the decode step is decomposed into the stages of the decode
+DAG (`dispatch.workloads.decode_dag`) and each stage runs on the device the
+offload planner chose for it:
+
+  * host stages (`xeon` / `titan_v` in the model) run under per-stage jit,
+    one trace per stage *kind* — all layers share it;
+  * PIM stages run through `dispatch.runtime.bank_face`: batch slots are
+    sharded over banks (each bank owns its slots' activations and KV rows,
+    the continuous-batching-across-banks layout of DESIGN.md §4), weights
+    replicate, and the body is a pure bank-local phase.
+
+Every stage computes exactly what `models.forward`'s decode path computes
+for that slice of the step (same library calls: `_qkv`, `write_decode`,
+`cached_attention`, `mlp_forward`, ...), so the composed step is
+numerically equivalent to the single-jit engine — `tests/test_serve.py`
+pins token-for-token identity over a continuous-batching run.
+
+Planning happens once at engine construction: the model config is mapped
+to `DecodeDims`, the decode DAG is built with the KV cache homed on the
+PIM system (bank-resident KV), and `placement.plan` runs the exact ladder
+(the DAG's frontier width is 2, so the frontier DP is exact). The chosen
+assignment routes stages by name; `force_assignment` overrides it for
+tests and ablations.
+
+Scope: dense attention decoder LMs (every pattern position `attn`+`dense`,
+no cross-attention/MoE/SSM) with an unsharded host mesh — the dispatch
+layer does its own distribution through the BankGrid.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bank_parallel import BankGrid, make_bank_mesh
+from ..dispatch import workloads
+from ..dispatch.placement import Plan, plan as plan_placement
+from ..dispatch.runtime import bank_face
+from ..models import ModelConfig, Shardings
+from ..models import cache as cache_lib
+from ..models import layers as L
+
+
+def dims_for_config(cfg: ModelConfig, batch_slots: int,
+                    max_len: int) -> workloads.DecodeDims:
+    """Map a serving config onto the decode DAG's planning dims. The KV
+    cache is sized as the engine actually allocates it — GQA head count
+    and the config dtype's itemsize — so the migration charge matches the
+    bytes a real migration would move."""
+    return workloads.DecodeDims(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, head_dim=cfg.hd,
+        d_ff=cfg.d_ff, seq=cache_lib.cache_width(cfg, max_len),
+        vocab=cfg.padded_vocab, n_layers=cfg.n_layers, batch=batch_slots,
+        n_kv_heads=cfg.n_kv_heads,
+        kv_itemsize=jnp.dtype(cfg.dtype).itemsize)
+
+
+def _check_dispatchable(cfg: ModelConfig, shd: Shardings) -> None:
+    pattern = cfg.layer_pattern()
+    ok = (len(pattern) == 1 and pattern[0].kind == "attn"
+          and pattern[0].mlp == "dense" and not pattern[0].cross_attn
+          and not cfg.encoder_layers)
+    if not ok:
+        raise ValueError(
+            f"engine='dispatch' supports dense attention decoders; "
+            f"{cfg.name} has pattern {pattern}")
+    if shd.mesh is not None:
+        raise ValueError("engine='dispatch' distributes through the "
+                         "BankGrid; pass an unsharded Shardings")
+
+
+def make_dispatch_decode_step(cfg: ModelConfig, shd: Shardings,
+                              **kwargs) -> "DispatchDecodeStep":
+    """`make_decode_step`'s dispatch twin: plan the decode DAG and compile
+    the planner's chosen plan into an executable step (same call signature
+    as the engine's jitted `_decode`)."""
+    return DispatchDecodeStep(cfg, shd, **kwargs)
+
+
+class DispatchDecodeStep:
+    """Planner-routed decode step with the jit engine's call signature."""
+
+    def __init__(self, cfg: ModelConfig, shd: Shardings, *,
+                 batch_slots: int, max_len: int, temperature: float = 0.0,
+                 grid: BankGrid | None = None,
+                 devices: tuple[str, ...] = ("xeon", "upmem_2556"),
+                 kv_home: str | None = "upmem_2556",
+                 force_assignment: dict[str, str] | None = None):
+        _check_dispatchable(cfg, shd)
+        self.cfg, self.shd = cfg, shd
+        self.temperature = temperature
+        self.grid = grid or BankGrid(make_bank_mesh())
+        if batch_slots % self.grid.n_banks:
+            raise ValueError(f"batch_slots={batch_slots} must divide over "
+                             f"{self.grid.n_banks} bank(s)")
+        self.dag = workloads.decode_dag(
+            dims_for_config(cfg, batch_slots, max_len), kv_home=kv_home)
+        self.plan: Plan = plan_placement(self.dag, devices=devices)
+        self.assignment = dict(self.plan.assignment)
+        if force_assignment:
+            self.assignment.update(force_assignment)
+        # the executable stage names and the DAG's node names are the
+        # routing contract — any drift must fail loudly here, not fall
+        # back to host execution (which the token-identity tests could
+        # never distinguish from a correctly routed plan)
+        expected = {"embed", "head"}
+        for i in range(cfg.n_blocks):
+            expected |= {f"qkv{i}", f"attn{i}", f"o{i}", f"mlp{i}"}
+        missing = expected - set(self.assignment)
+        if missing:
+            raise ValueError(f"plan is missing stages {sorted(missing)}; "
+                             "decode_dag node names drifted from the "
+                             "executable stages")
+
+        #: host faces: one jit per stage kind, shared by all layers
+        self._host = {kind: jax.jit(fn) for kind, fn, _, _ in self._stages()}
+        self._pim: dict[str, Any] = {}   # built lazily (grid lowering)
+        self._sample = jax.jit(self._sample_fn)
+
+    # ------------------------------------------------------------- #
+    # stage bodies — each mirrors models.forward's decode path exactly
+    # ------------------------------------------------------------- #
+
+    def _stages(self):
+        """(kind, host_fn, batched-arg flags, n_outputs) for every stage."""
+        return [
+            ("embed", self._embed_fn, (False, True, True), 3),
+            ("qkv", self._qkv_fn, (True, True, True, False, False), 3),
+            ("attn", self._attn_fn, (True,) * 6, 3),
+            ("o", self._o_fn, (True, True, False), 1),
+            ("mlp", self._mlp_fn, (True, False, False), 1),
+            ("head", self._head_fn, (True, False, False), 1),
+        ]
+
+    def _embed_fn(self, table, tokens, slot_pos):
+        x = table[tokens].astype(self.cfg.dtype)
+        positions = slot_pos[:, None]
+        if self.cfg.rope == "none":
+            b = tokens.shape[0]
+            sin = cos = jnp.zeros((b, 1, self.cfg.hd // 2), jnp.float32)
+        else:
+            sin, cos = L.rope_sincos(positions, self.cfg)
+        return x, sin, cos
+
+    def _qkv_fn(self, x, sin, cos, ln1, attn_p):
+        h = L.apply_norm(x, ln1, self.cfg)
+        rs = None if self.cfg.rope == "none" else sin
+        rc = None if self.cfg.rope == "none" else cos
+        return L._qkv(h, attn_p, self.cfg, self.shd, rope_sin=rs,
+                      rope_cos=rc, heads_tp=False)
+
+    def _attn_fn(self, q, k, v, k_cache, v_cache, attn_index):
+        width = k_cache.shape[1]
+        new_kv = cache_lib.write_decode({"k": k_cache, "v": v_cache},
+                                        k, v, attn_index, width)
+        pos = cache_lib.slot_positions(attn_index + 1, width)
+        o = L.cached_attention(q, new_kv["k"], new_kv["v"], pos,
+                               attn_index, self.cfg, self.shd)
+        return o, new_kv["k"], new_kv["v"]
+
+    def _o_fn(self, x, o, attn_p):
+        return x + L.attn_out(o, attn_p, x.dtype, self.shd)
+
+    def _mlp_fn(self, x, ln2, mlp_p):
+        h = L.apply_norm(x, ln2, self.cfg)
+        x = x + L.mlp_forward(h, mlp_p, self.cfg, self.shd)
+        return self.shd.act(x, "batch", "seq", None)
+
+    def _head_fn(self, x, norm_p, wv):
+        from ..models.transformer import mask_vocab_padding
+        x = L.apply_norm(x, norm_p, self.cfg)
+        logits = jnp.einsum("bsd,vd->bsv", x, wv.astype(x.dtype))
+        return mask_vocab_padding(logits, self.cfg)
+
+    def _sample_fn(self, logits, tokens, slot_pos, live_mask, key):
+        from .engine import sample
+        nxt = sample(logits[:, -1], key, self.temperature)
+        nxt = jnp.where(live_mask, nxt, tokens[:, 0])
+        new_pos = jnp.where(live_mask, slot_pos + 1, slot_pos)
+        return nxt[:, None], new_pos
+
+    # ------------------------------------------------------------- #
+    def _run(self, name: str, kind: str, *args):
+        device = self.assignment[name]   # KeyError = name-contract break
+        if device.startswith("upmem"):
+            if kind not in self._pim:
+                _, fn, batched, n_out = next(
+                    s for s in self._stages() if s[0] == kind)
+                self._pim[kind] = jax.jit(
+                    bank_face(self.grid, fn, batched, n_out))
+            return self._pim[kind](*args)
+        return self._host[kind](*args)
+
+    def devices_used(self) -> dict[str, str]:
+        return dict(self.assignment)
+
+    def __call__(self, params, cache, tokens, slot_pos, live_mask, key):
+        cfg = self.cfg
+        index = cache["index"]
+        attn_index = slot_pos            # per-row positions (cont. batching)
+        x, sin, cos = self._run("embed", "embed",
+                                params["embed"], tokens, slot_pos)
+        stacked = params["layers"][0]
+        kv_stack = cache["layers"][0]
+        new_ks, new_vs = [], []
+        for i in range(cfg.n_blocks):
+            lp = jax.tree.map(lambda l: l[i], stacked)
+            q, k, v = self._run(f"qkv{i}", "qkv", x, sin, cos,
+                                lp["ln1"], lp["attn"])
+            o, nk, nv = self._run(f"attn{i}", "attn", q, k, v,
+                                  kv_stack["k"][i], kv_stack["v"][i],
+                                  attn_index)
+            x = self._run(f"o{i}", "o", x, o, lp["attn"])
+            x = self._run(f"mlp{i}", "mlp", x, lp["ln2"], lp["mlp"])
+            new_ks.append(nk)
+            new_vs.append(nv)
+        wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = self._run("head", "head", x, params["final_norm"], wv)
+        nxt, new_pos = self._sample(logits, tokens, slot_pos, live_mask, key)
+        new_layer = dict(kv_stack, k=jnp.stack(new_ks), v=jnp.stack(new_vs))
+        new_index = jnp.maximum(index + 1,
+                                jnp.max(slot_pos) + 1).astype(jnp.int32)
+        new_cache = dict(cache, index=new_index, layers=[new_layer])
+        return nxt, new_cache, new_pos

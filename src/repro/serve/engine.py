@@ -11,6 +11,9 @@ different lengths share one batch (continuous batching):
     argument of the model forward), so one decode step advances every live
     slot by one token regardless of length skew.
   * Greedy sampling by default; temperature knob for examples.
+  * Two decode backends share the loop: the fused-jit step (default) and
+    the planner-routed hybrid step (`engine="dispatch"`,
+    `serve.dispatch_engine`) — same signature, same tokens.
 """
 
 from __future__ import annotations
@@ -71,7 +74,11 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int,
                  max_len: int, shd: Shardings | None = None,
                  temperature: float = 0.0, eos_id: int | None = None,
-                 seed: int = 0):
+                 seed: int = 0, engine: str = "jit",
+                 dispatch_kwargs: dict | None = None):
+        if engine not in ("jit", "dispatch"):
+            raise ValueError(f"engine must be 'jit' or 'dispatch', "
+                             f"got {engine!r}")
         self.cfg = cfg
         self.shd = shd or Shardings(None)
         self.params = params
@@ -80,6 +87,7 @@ class ServeEngine:
         self.temperature = temperature
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
+        self.engine = engine
 
         # per-slot caches live stacked in one batched cache
         self.cache = init_cache(cfg, batch_slots, max_len, self.shd)
@@ -90,7 +98,19 @@ class ServeEngine:
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
 
-        self._decode = jax.jit(self._decode_step_fn)
+        if engine == "dispatch":
+            # decode routed through the offload planner's plan over the
+            # decode DAG: PIM stages run as BankGrid phases, host stages
+            # under per-stage jit (serve.dispatch_engine). Prefill stays
+            # on the jit path — it is compute-bound (DESIGN.md §5).
+            from .dispatch_engine import DispatchDecodeStep
+            self._decode = DispatchDecodeStep(
+                cfg, self.shd, batch_slots=batch_slots, max_len=max_len,
+                temperature=temperature, **(dispatch_kwargs or {}))
+            self.dispatch_plan = self._decode.plan
+        else:
+            self._decode = jax.jit(self._decode_step_fn)
+            self.dispatch_plan = None
         # retraces once per distinct prompt length (padded buckets in prod)
         self._prefill_one = jax.jit(self._prefill_one_fn)
 

@@ -12,9 +12,11 @@ import pytest
 
 from repro import prim
 from repro.dispatch import workloads
-from repro.dispatch.graph import OpGraph, OpNode, chain_graph, ops_from_hlo
-from repro.dispatch.placement import (compare_plans, evaluate, plan,
-                                      pure_plan)
+from repro.dispatch.graph import (OpGraph, OpNode, annotate_kv_residency,
+                                  chain_graph, ops_from_hlo)
+from repro.dispatch.placement import (compare_plans, evaluate, greedy_plan,
+                                      kv_migration_time, plan, pure_plan,
+                                      transfer_hops, transfer_time)
 from repro.dispatch.runtime import (Pipeline, Stage, check_phase_discipline,
                                     execute)
 from repro.dispatch.schedule import make_schedule
@@ -88,7 +90,12 @@ def test_chain_detection(mixed_graph, decode_graph):
     dag.add(OpNode("c", "x", 1e6, 1e6, 1e3), "a")
     dag.add(OpNode("d", "x", 1e6, 1e6, 1e3), "b", "c")
     assert not dag.is_chain
-    assert plan(dag).method == "greedy"
+    assert dag.max_frontier() == 2          # diamond: b and c stay open
+    # the ladder: DAGs get the exact frontier DP; a starved state budget
+    # falls through to branch-and-bound; chains keep the chain DP
+    assert plan(dag).method == "dag-dp"
+    assert plan(dag, state_budget=0).method == "bnb"
+    assert plan(dag).total_s <= plan(dag, state_budget=0).total_s + 1e-12
     assert plan(chain_graph("ch", [OpNode("e", "x", 1e6, 1e6, 1e3)])) \
         .method == "dp"
 
@@ -174,6 +181,94 @@ def test_decode_hybrid_strictly_beats_both_pures(decode_graph):
 
 
 # ------------------------------------------------------------------ #
+# decode DAG + KV residency
+# ------------------------------------------------------------------ #
+
+@pytest.fixture(scope="module")
+def decode_dag():
+    return workloads.decode_dag(workloads.DecodeDims())
+
+
+def test_decode_dag_structure(decode_dag):
+    d = workloads.DecodeDims()
+    assert len(decode_dag.nodes) == 4 * d.n_layers + 2
+    assert not decode_dag.is_chain
+    # residual braid: the stream fans out to qkv and the o-residual, so
+    # the frontier DP's width stays 2 — the exact class
+    assert decode_dag.max_frontier() == 2
+    preds = decode_dag.preds
+    assert sorted(preds["o0"]) == ["attn0", "embed"]
+    assert preds["qkv0"] == ["embed"] and preds["mlp0"] == ["o0"]
+    assert plan(decode_dag).method == "dag-dp"
+
+
+def test_decode_dag_kv_residency(decode_dag):
+    attn = decode_dag.nodes["attn0"]
+    assert attn.meta["kv_home"] == "upmem_2556"
+    assert attn.meta["kv_bytes"] > 0
+    # at home: free; elsewhere: the measured-channel charge
+    assert kv_migration_time(attn, "upmem_2556") == 0.0
+    off_home = kv_migration_time(attn, "xeon")
+    assert off_home == pytest.approx(
+        transfer_time("upmem_2556", "xeon", attn.meta["kv_bytes"]))
+    # evaluate books the migration: all-CPU pays it once per attn node
+    cpu = pure_plan(decode_dag, "xeon")
+    n_attn = workloads.DecodeDims().n_layers
+    assert cpu.migrate_s == pytest.approx(n_attn * off_home)
+    assert pure_plan(decode_dag, "upmem_2556").migrate_s == 0.0
+
+
+def test_decode_dag_planner_pins_attention_to_kv_home(decode_dag):
+    hyb = plan(decode_dag)
+    d = workloads.DecodeDims()
+    for i in range(d.n_layers):
+        assert hyb.assignment[f"attn{i}"] == "upmem_2556"
+        assert hyb.assignment[f"qkv{i}"] == "xeon"     # f32 mul: host (KT2)
+    # flipping the KV home flips where the planner keeps attention
+    g_cpu_kv = workloads.decode_dag(d, kv_home="xeon")
+    assert plan(g_cpu_kv).assignment["attn0"] == "xeon"
+
+
+def test_decode_dag_hybrid_beats_pures_steelmanned():
+    """Paper-scale acceptance, each baseline given its best-case KV
+    residency: pure CPU with KV on the host, pure PIM and the hybrid with
+    KV bank-resident."""
+    d = workloads.DecodeDims()
+    hybrid = plan(workloads.decode_dag(d))
+    cpu = pure_plan(workloads.decode_dag(d, kv_home="xeon"), "xeon")
+    pim = pure_plan(workloads.decode_dag(d), "upmem_2556")
+    assert hybrid.total_s < cpu.total_s
+    assert hybrid.total_s < pim.total_s
+    assert hybrid.is_hybrid
+
+
+def test_schedule_books_kv_migration(decode_dag):
+    """Schedule and Plan must agree on KV-annotated graphs: a group whose
+    device is not a member node's KV home pulls the migrated cache bytes
+    as a boundary transfer in the timeline."""
+    p = pure_plan(decode_dag, "xeon")
+    assert p.migrate_s > 0
+    sched = make_schedule(decode_dag, p)
+    d = workloads.DecodeDims()
+    kvb = decode_dag.nodes["attn0"].meta["kv_bytes"]
+    # single host group: input never crosses (source==device), so the
+    # incoming payload is exactly every layer's migrated KV
+    assert len(sched.groups) == 1
+    assert sched.groups[0].in_bytes == pytest.approx(d.n_layers * kvb)
+    assert sched.groups[0].in_transfer_s >= p.migrate_s
+    # at home (pure PIM) nothing migrates and nothing extra enters
+    pim_sched = make_schedule(decode_dag, pure_plan(decode_dag,
+                                                    "upmem_2556"))
+    assert pim_sched.groups[0].in_bytes == pytest.approx(
+        decode_dag.input_bytes)
+
+
+def test_planner_never_worse_than_greedy(decode_dag, mixed_graph):
+    for g in (decode_dag, mixed_graph):
+        assert plan(g).total_s <= greedy_plan(g).total_s + 1e-12
+
+
+# ------------------------------------------------------------------ #
 # scheduler
 # ------------------------------------------------------------------ #
 
@@ -198,6 +293,54 @@ def test_schedule_batches_parallel_transfers():
     assert pim_group.n_in_tensors == 2
     assert pim_group.in_transfer_s < pim_group.serial_transfer_s
     assert sched.total_s < sched.unbatched_s
+
+
+def test_transfer_hops_split_matches_transfer_time():
+    """GPU<->DPU splits into (relay, final); single-hop paths have no
+    relay; the two components always sum to the planner's charge."""
+    nbytes = 1e8
+    for src, dst in (("titan_v", "upmem_2556"), ("upmem_2556", "titan_v"),
+                     ("xeon", "upmem_2556"), ("upmem_2556", "xeon"),
+                     ("xeon", "titan_v"), ("xeon", "xeon")):
+        relay, last = transfer_hops(src, dst, nbytes)
+        assert relay + last == pytest.approx(transfer_time(src, dst, nbytes))
+        two_hop = "titan_v" in (src, dst) and "upmem" in src + dst
+        assert (relay > 0) == two_hop, (src, dst)
+
+
+def test_schedule_does_not_overlap_host_relay_with_dpu_compute():
+    """placement charges both hops of the GPU->DPU boundary; the overlap
+    model may hide only the final (host->DPU) hop under DPU compute — the
+    PCIe relay into host DRAM happens before any bytes reach the DPUs, so
+    it is serialized in front of the overlap window."""
+    g = OpGraph("relay", input_bytes=0.0)
+    g.add(OpNode("gpu_stage", "x", 1e9, 1e8, 2e8,
+                 ops={("mul", "float"): 1e6}))
+    g.add(OpNode("pim_stage", "x", 1e6, 2e8, 1e4,
+                 ops={("add", "int32"): 1e10}), "gpu_stage")
+    assignment = {"gpu_stage": "titan_v", "pim_stage": "upmem_2556"}
+    sched = make_schedule(g, evaluate(g, assignment))
+    pim_group = sched.groups[-1]
+    relay, last = transfer_hops("titan_v", "upmem_2556", 2e8)
+    assert pim_group.relay_s == pytest.approx(relay)
+    # pinned formula: relay serialized, only the final hop double-buffers
+    assert pim_group.overlapped_s == pytest.approx(
+        relay + max(pim_group.compute_s,
+                    pim_group.in_transfer_s - relay) + pim_group.launch_s)
+    # the relay is NOT hidden: overlapped strictly exceeds the naive
+    # max(compute, whole-transfer) model whenever compute dominates
+    assert pim_group.compute_s > pim_group.in_transfer_s - relay
+    naive = max(pim_group.compute_s, pim_group.in_transfer_s) \
+        + pim_group.launch_s
+    assert pim_group.overlapped_s > naive
+    # host-sourced transfers still have no relay component
+    host_g = OpGraph("noreplay", input_bytes=0.0)
+    host_g.add(OpNode("h", "x", 1e6, 1e8, 2e8))
+    host_g.add(OpNode("p", "x", 1e6, 2e8, 1e4,
+                      ops={("add", "int32"): 5e7}), "h")
+    sched2 = make_schedule(host_g, evaluate(
+        host_g, {"h": "xeon", "p": "upmem_2556"}))
+    assert sched2.groups[-1].relay_s == 0.0
 
 
 # ------------------------------------------------------------------ #

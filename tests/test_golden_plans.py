@@ -1,0 +1,112 @@
+"""Golden placement plans (ISSUE-2): planner regressions fail loudly.
+
+The planner's output used to be asserted only through aggregate
+inequalities (hybrid < pures), so a cost-model or planner change could
+silently shift every placement while the inequalities kept passing. These
+tests pin the exact plan — topo-ordered device sequence, stage boundaries,
+and method — for every `dispatch.workloads` pipeline, each of the 16 PrIM
+one-operator graphs, and the decode DAG.
+
+When a placement shift is *intended* (recalibration, planner upgrade),
+regenerate with:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_plans.py
+
+then review the diff of tests/golden_plans.json like any other code change.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro import prim
+from repro.dispatch import workloads
+from repro.dispatch.placement import plan
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_plans.json"
+REGEN = bool(os.environ.get("REGEN_GOLDEN"))
+
+#: name -> (graph builder, planner device set)
+TWO_DEV = ("xeon", "upmem_2556")
+THREE_DEV = ("xeon", "titan_v", "upmem_2556")
+
+
+def _cases():
+    cases = {
+        "prim-mixed": (
+            lambda: workloads.mixed_pipeline(m=4096, concrete=False).graph(),
+            TWO_DEV),
+        "lm-decode-chain": (
+            lambda: workloads.decode_pipeline(workloads.DecodeDims(),
+                                              concrete=False).graph(),
+            TWO_DEV),
+        "lm-decode-dag": (
+            lambda: workloads.decode_dag(workloads.DecodeDims()), TWO_DEV),
+        "lm-decode-dag-kv-on-host": (
+            lambda: workloads.decode_dag(workloads.DecodeDims(),
+                                         kv_home="xeon"), TWO_DEV),
+    }
+    for counts in prim.all_ref_counts():
+        cases[f"prim/{counts.name}"] = (
+            (lambda c=counts: workloads.prim_graph(c)), THREE_DEV)
+    return cases
+
+
+def _snapshot(graph, devices):
+    p = plan(graph, devices=devices)
+    order = graph.topo_order()
+    seq = [[n, p.assignment[n]] for n in order]
+    boundaries = [i for i in range(1, len(order))
+                  if p.assignment[order[i]] != p.assignment[order[i - 1]]]
+    return {"method": p.method, "devices": list(devices),
+            "placement": seq, "stage_boundaries": boundaries}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not GOLDEN_PATH.exists():
+        if REGEN:               # bootstrapping: regenerate from scratch
+            return {}
+        pytest.skip("golden_plans.json missing — run with REGEN_GOLDEN=1")
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(_cases()))
+def test_plan_matches_golden(name, golden, request):
+    build, devices = _cases()[name]
+    snap = _snapshot(build(), devices)
+    if REGEN:
+        golden[name] = snap
+        request.config._regen_golden = golden
+        return
+    assert name in golden, f"no golden entry for {name} (REGEN_GOLDEN=1)"
+    want = golden[name]
+    got_devs = dict(snap["placement"])
+    want_devs = dict(want["placement"])
+    moved = {n: (want_devs[n], got_devs[n]) for n in want_devs
+             if got_devs.get(n) != want_devs[n]}
+    assert not moved, (
+        f"{name}: placements shifted (old -> new): {moved}; if intended, "
+        "regenerate goldens and review the diff")
+    assert snap["method"] == want["method"]
+    assert snap["stage_boundaries"] == want["stage_boundaries"]
+    assert [n for n, _ in snap["placement"]] == \
+        [n for n, _ in want["placement"]]
+
+
+def test_goldens_cover_every_case(golden):
+    missing = sorted(set(_cases()) - set(golden))
+    assert not missing, f"stale golden file, missing: {missing}"
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _write_regenerated(request):
+    yield
+    regen = getattr(request.config, "_regen_golden", None)
+    if regen is not None:
+        GOLDEN_PATH.write_text(json.dumps(regen, indent=1, sort_keys=True)
+                               + "\n")

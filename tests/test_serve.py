@@ -60,6 +60,126 @@ def test_all_requests_complete(setup):
         assert r.done and len(r.out_tokens) == r.max_new_tokens
 
 
+# ------------------------------------------------------------------ #
+# dispatch-backed decode (ISSUE-2): planner-routed == fused jit
+# ------------------------------------------------------------------ #
+
+def _run_16_steps(eng, prompts):
+    """A fixed 16-step continuous-batching schedule with arrivals (admit
+    whenever a slot is free) and evictions (finished requests leave and
+    new ones take their slot mid-run). Returns {rid: tokens} including
+    still-inflight requests, so the trace is step-exact."""
+    reqs = [Request(i, p, 3 + i % 4) for i, p in enumerate(prompts)]
+    pending = list(reqs)
+    for _ in range(16):
+        while pending and eng.admit(pending[0]):
+            pending.pop(0)
+        eng.step()
+    return {r.rid: (list(r.out_tokens), r.done) for r in reqs}
+
+
+def test_dispatch_decode_token_identical_to_jit(setup):
+    """The tentpole gate: routing decode through the offload planner's
+    plan (per-stage jit + BankGrid faces) must be a pure execution-layer
+    change — token-for-token identical to the fused-jit engine over a
+    continuous-batching run with arrivals and evictions."""
+    cfg, params = setup
+    prompts = _prompts(cfg, 8, jax.random.PRNGKey(11))
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
+                          engine="dispatch")
+    assert dis_eng.dispatch_plan is not None
+    assert dis_eng.dispatch_plan.method == "dag-dp"
+    jit_trace = _run_16_steps(jit_eng, prompts)
+    dis_trace = _run_16_steps(dis_eng, prompts)
+    assert jit_trace == dis_trace
+
+
+def test_dispatch_decode_forced_hybrid_token_identical(setup, bank_grid):
+    """Force the attention stages onto the PIM face (BankGrid local
+    phases) regardless of what the planner picks at reduced scale — the
+    hybrid execution must still be token-identical."""
+    cfg, params = setup
+    prompts = _prompts(cfg, 6, jax.random.PRNGKey(13))
+    forced = {f"attn{i}": "upmem_2556" for i in range(cfg.n_blocks)}
+    forced["embed"] = "upmem_2556"
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(
+        cfg, params, batch_slots=2, max_len=48, shd=SHD, engine="dispatch",
+        dispatch_kwargs={"grid": bank_grid, "force_assignment": forced})
+    assert dis_eng._decode.assignment["attn0"] == "upmem_2556"
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+@pytest.mark.slow
+def test_dispatch_decode_two_banks_token_identical():
+    """Real multi-bank sharding (subprocess, dry-run isolation rule):
+    slots sharded 2-ways over banks, attention forced onto the BankGrid
+    face, f32 model — token-identical to the fused-jit engine. (bf16 can
+    flip a near-tie argmax across bank-shard tilings — an XLA rounding
+    artifact, so the cross-bank gate runs the f32 model.)"""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    code = (
+        "import dataclasses, jax, jax.numpy as jnp\n"
+        "from repro.configs import REDUCED\n"
+        "from repro.core.bank_parallel import BankGrid, make_bank_mesh\n"
+        "from repro.models import Shardings, init_params\n"
+        "from repro.serve import Request, ServeEngine\n"
+        "shd = Shardings(None)\n"
+        "cfg = dataclasses.replace(REDUCED['granite-3-8b'], dtype='float32')\n"
+        "params = init_params(jax.random.PRNGKey(0), cfg, shd)\n"
+        "grid = BankGrid(make_bank_mesh())\n"
+        "assert grid.n_banks == 2\n"
+        "key = jax.random.PRNGKey(3)\n"
+        "prompts = []\n"
+        "for _ in range(6):\n"
+        "    key, k = jax.random.split(key)\n"
+        "    plen = 3 + int(jax.random.randint(k, (), 0, 6))\n"
+        "    prompts.append(jax.random.randint(k, (plen,), 0,\n"
+        "                   cfg.vocab_size, dtype=jnp.int32))\n"
+        "forced = {f'attn{i}': 'upmem_2556' for i in range(cfg.n_blocks)}\n"
+        "forced['embed'] = 'upmem_2556'\n"
+        "outs = {}\n"
+        "for name, kw in (('jit', {}), ('dispatch', dict(\n"
+        "        engine='dispatch', dispatch_kwargs={'grid': grid,\n"
+        "        'force_assignment': forced}))):\n"
+        "    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,\n"
+        "                      shd=shd, **kw)\n"
+        "    done = eng.serve([Request(i, p, 5)\n"
+        "                      for i, p in enumerate(prompts)])\n"
+        "    outs[name] = {r.rid: r.out_tokens for r in done}\n"
+        "assert outs['jit'] == outs['dispatch'], outs\n"
+        "print('OK')\n")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=f"{root / 'src'}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_dispatch_engine_rejects_unsupported_configs(setup):
+    cfg, params = setup
+    from repro.configs import REDUCED
+    moe = REDUCED["mixtral-8x7b"]
+    with pytest.raises(ValueError, match="dense attention"):
+        ServeEngine(moe, init_params_for(moe), batch_slots=1, max_len=16,
+                    shd=SHD, engine="dispatch")
+    with pytest.raises(ValueError, match="engine must be"):
+        ServeEngine(cfg, params, batch_slots=1, max_len=16, shd=SHD,
+                    engine="nope")
+
+
+def init_params_for(cfg):
+    from repro.models import init_params
+    return init_params(jax.random.PRNGKey(0), cfg, SHD)
+
+
 def test_decode_step_shapes(setup):
     cfg, params = setup
     from repro.models import init_cache
