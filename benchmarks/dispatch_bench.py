@@ -15,10 +15,19 @@ Three sweeps over `repro.dispatch`:
   4. The decode DAG (residual branches kept, KV-residency charged): the
      exact frontier-DP plan must beat both steelmanned pure baselines
      (pure CPU gets KV homed on the host) — the ISSUE-2 acceptance gate.
+  5. The chunked prefill DAG (4 chunks at paper scale): serial- vs
+     overlapped-objective plans, and the cross-phase residency trade —
+     keeping the cache bank-resident for decode costs prefill only the
+     KV write-back traffic (ISSUE-3).
 
 Finally the reduced-scale pipelines are actually executed through
 `dispatch.runtime` — and a dispatch-backed `ServeEngine` decode run is
 checked token-identical against the fused-jit engine.
+
+`run(report, quick=True)` (the CI coverage job's
+`python -m benchmarks.run dispatch_bench --quick`) runs only a reduced
+prefill-DAG sweep: DAG build, both planner objectives, the
+overlapped<=serial gate, and the pure-baseline comparison.
 """
 
 from __future__ import annotations
@@ -27,6 +36,57 @@ from repro import prim
 from repro.dispatch import workloads
 from repro.dispatch.placement import compare_plans, plan, pure_plan
 from repro.dispatch.schedule import make_schedule
+
+
+def _prefill_sweep(report, dims, prefill_len, chunk, bnb_budget=20_000):
+    """Plan one chunked prefill DAG under both objectives; assert the
+    acceptance inequalities and report the residency trade."""
+    dag = workloads.prefill_dag(dims, prefill_len=prefill_len, chunk=chunk)
+    serial = plan(dag, bnb_budget=bnb_budget)
+    over = plan(dag, bnb_budget=bnb_budget, objective="overlapped")
+    serial_sched = make_schedule(dag, serial)
+    pim = pure_plan(dag, "upmem_2556")
+    cpu_kv_pim = pure_plan(dag, "xeon")
+    cpu_rehomed = pure_plan(
+        workloads.prefill_dag(dims, prefill_len=prefill_len, chunk=chunk,
+                              kv_home="xeon"), "xeon")
+    report.table([
+        {"plan": "pure_pim (KV@pim)",
+         "serial ms": round(pim.total_s * 1e3, 1),
+         "overlapped ms": round(make_schedule(dag, pim).overlapped_s
+                                * 1e3, 1)},
+        {"plan": "pure_cpu (KV@pim: migrate+writeback)",
+         "serial ms": round(cpu_kv_pim.total_s * 1e3, 1),
+         "overlapped ms": round(make_schedule(dag, cpu_kv_pim).overlapped_s
+                                * 1e3, 1)},
+        {"plan": "pure_cpu (KV re-homed to host)",
+         "serial ms": round(cpu_rehomed.total_s * 1e3, 1),
+         "overlapped ms": "-"},
+        {"plan": f"planned, objective=serial [{serial.method}]",
+         "serial ms": round(serial.total_s * 1e3, 1),
+         "overlapped ms": round(serial_sched.overlapped_s * 1e3, 1)},
+        {"plan": f"planned, objective=overlapped [{over.method}]",
+         "serial ms": round(over.total_s * 1e3, 1),
+         "overlapped ms": round(over.overlapped_s * 1e3, 1)},
+    ])
+    # ISSUE-3 acceptance: the planner never loses to a pure placement of
+    # the same graph, and the overlapped objective never schedules worse
+    # than the serial plan
+    assert serial.total_s <= pim.total_s and \
+        serial.total_s <= cpu_kv_pim.total_s, "planned prefill >= a pure"
+    assert over.overlapped_s <= serial_sched.overlapped_s + 1e-15, \
+        "overlapped objective scheduled worse than the serial plan"
+    writeback = sum(g.writeback_s for g in serial_sched.groups)
+    report.note(
+        f"{len(dag.nodes)}-node DAG (frontier {dag.max_frontier()}, "
+        f"method {serial.method}): prefill "
+        "is compute-dense (KT1) so the planner keeps it host-side and "
+        f"pays {serial.migrate_s * 1e3:.1f}ms of KV traffic "
+        f"({writeback * 1e3:.1f}ms write-back in the timeline) to keep "
+        "the cache bank-resident for decode; re-homing the cache to the "
+        f"host would save {(serial.total_s - cpu_rehomed.total_s) * 1e3:.1f}"
+        "ms of prefill but forfeit decode's at-home attention (sweep 4)")
+    return dag, serial, over
 
 
 def _three_way(report, graph, devices=("xeon", "upmem_2556")):
@@ -43,7 +103,16 @@ def _three_way(report, graph, devices=("xeon", "upmem_2556")):
     return plans, sched
 
 
-def run(report):
+def run(report, quick: bool = False):
+    if quick:
+        # CI smoke: the chunked prefill DAG at reduced scale, both
+        # objectives, acceptance gates asserted
+        report.section("QUICK: chunked prefill DAG (reduced dims, "
+                       "2 chunks), serial vs overlapped objective")
+        _prefill_sweep(report, workloads.REDUCED_DIMS, prefill_len=8,
+                       chunk=4)
+        return
+
     # -- sweep 1: the 16 PrIM workloads, one operator each ----------------
     report.section("PrIM workloads: planner device pick vs Fig.-4 grouping")
     rows, recovered = [], 0
@@ -119,6 +188,11 @@ def run(report):
                 "DP; attention pinned to the KV home, residual/GEMV "
                 "stream on the host")
 
+    # -- sweep 5: chunked prefill DAG, serial vs overlapped objective ----
+    report.section("Chunked prefill DAG (2048 tokens / 4x512 chunks, KV "
+                   "bank-resident), serial vs overlapped objective")
+    _prefill_sweep(report, dims, prefill_len=2048, chunk=512)
+
     # -- execute the plans for real (reduced scale) ----------------------
     report.section("Runtime validation (reduced scale, real execution)")
     from repro.core.bank_parallel import BankGrid, make_bank_mesh
@@ -156,8 +230,12 @@ def run(report):
                                           dtype=jnp.int32))
     outs = {}
     for engine in ("jit", "dispatch"):
+        # fused prefill here: this sweep demos decode-identity at the
+        # default dtype (the dispatch-prefill gate is f32, test_serve.py)
+        kw = ({"dispatch_kwargs": {"prefill_engine": "jit"}}
+              if engine == "dispatch" else {})
         eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=shd,
-                          engine=engine)
+                          engine=engine, **kw)
         done = eng.serve([Request(i, p, 4) for i, p in enumerate(prompts)])
         outs[engine] = {r.rid: r.out_tokens for r in done}
     assert outs["jit"] == outs["dispatch"], \

@@ -5,13 +5,19 @@
   suitability_bench §II Key Takeaways 1-3 scoring (PrIM + LM steps)
   scaling_bench     strong scaling vs #DPUs (full-paper §5.2)
   dispatch_bench    pure-CPU vs pure-PIM vs hybrid offload plans
+                    (decode + chunked prefill, serial vs overlapped)
   roofline_bench    §Roofline 40-cell dry-run table (from runs/*.json)
 
-Run: PYTHONPATH=src python -m benchmarks.run [module ...]
+Run: PYTHONPATH=src python -m benchmarks.run [module ...] [--quick]
+
+`--quick` runs a module's reduced smoke sweep when it offers one
+(dispatch_bench: the prefill-DAG planning sweep only — the CI coverage
+job's smoke).
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
@@ -50,14 +56,20 @@ def main(argv=None) -> int:
         "dispatch_bench": dispatch_bench,
         "roofline_bench": roofline_bench,
     }
-    names = (argv or sys.argv[1:]) or list(modules)
+    args = list(argv or sys.argv[1:])
+    quick = "--quick" in args
+    names = [a for a in args if not a.startswith("--")] or list(modules)
     report = Report()
     t0 = time.perf_counter()
     failed = []
     for name in names:
         print(f"\n{'=' * 72}\n= benchmarks.{name}\n{'=' * 72}")
         try:
-            modules[name].run(report)
+            run_fn = modules[name].run
+            if "quick" in inspect.signature(run_fn).parameters:
+                run_fn(report, quick=quick)
+            else:
+                run_fn(report)
         except Exception:  # keep the harness going, report at end
             import traceback
             traceback.print_exc()

@@ -6,14 +6,19 @@ lengths share one batched KV cache (per-slot positions), new requests are
 admitted as slots free up, and the decode step itself is the bank-parallel
 workload (a batched GEMV against chip-resident weights).
 
-With `--engine dispatch` the decode step is routed through the offload
-planner instead of one fused jit: the decode DAG is planned over
-{xeon, upmem_2556} with the KV cache bank-resident, and each stage runs
-on its assigned device (host stages per-stage jit, PIM stages as BankGrid
-phases) — same tokens, planner-chosen execution.
+With `--engine dispatch` BOTH serving phases route through the offload
+planner instead of one fused jit: decode over the decode DAG and prefill
+chunked over the prefill DAG (`--prefill-chunk` tokens per chunk), each
+planned over {xeon, upmem_2556} with the KV cache bank-resident, and each
+stage runs on its assigned device (host stages per-stage jit, PIM stages
+as BankGrid phases) — same tokens, planner-chosen execution. The prefill
+plan is optimized under the schedule-aware `overlapped` objective
+(DESIGN.md §10).
 
     PYTHONPATH=src python examples/serve_decode.py [--arch rwkv6-3b]
     PYTHONPATH=src python examples/serve_decode.py --engine dispatch
+    PYTHONPATH=src python examples/serve_decode.py --engine dispatch \
+        --prefill-chunk 4
 """
 
 import argparse
@@ -36,25 +41,38 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--engine", choices=("jit", "dispatch"), default="jit",
-                    help="decode backend: fused jit, or planner-routed "
-                         "hybrid dispatch (dense-attention archs only)")
+                    help="serving backend: fused jit, or planner-routed "
+                         "hybrid dispatch for BOTH prefill and decode "
+                         "(dense-attention archs only)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="dispatch engine: tokens per prefill chunk "
+                         "(default: one chunk per prompt)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=True)
     print(f"arch: {cfg.name} ({cfg.param_count() / 1e6:.1f}M reduced)")
     shd = Shardings(None)
     params = init_params(jax.random.PRNGKey(0), cfg, shd)
+    dispatch_kwargs = ({"prefill_chunk": args.prefill_chunk}
+                       if args.engine == "dispatch" else None)
     engine = ServeEngine(cfg, params, batch_slots=args.slots, max_len=96,
                          shd=shd, temperature=args.temperature, seed=7,
-                         engine=args.engine)
-    if engine.dispatch_plan is not None:
-        p = engine.dispatch_plan
+                         engine=args.engine,
+                         dispatch_kwargs=dispatch_kwargs)
+
+    def show(tag, p):
         devs = {}
         for dev in p.assignment.values():
             devs[dev] = devs.get(dev, 0) + 1
-        print(f"dispatch plan [{p.method}]: {len(p.assignment)} stages -> "
+        print(f"{tag} plan [{p.method}, objective={p.objective}]: "
+              f"{len(p.assignment)} stages -> "
               + ", ".join(f"{d}:{n}" for d, n in sorted(devs.items()))
               + f"; modeled {p.total_s * 1e3:.2f}ms/step at serving dims")
+
+    if engine.dispatch_plan is not None:
+        show("decode", engine.dispatch_plan)
+    if engine.prefill_plan is not None:
+        show("prefill", engine.prefill_plan)
 
     key = jax.random.PRNGKey(1)
     reqs = []

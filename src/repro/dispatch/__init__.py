@@ -5,27 +5,38 @@ per-program (Takeaways 1-3, Fig. 4's two workload groups). This package
 turns the one-shot analyses of `repro.core` into an end-to-end pipeline:
 
     graph      build an operator graph (flops / bytes / OI / op mix per op,
-               KV-residency annotations on cache-reading nodes)
+               KV-residency read AND write annotations on cache-touching
+               nodes)
     placement  assign every op to xeon / titan_v / upmem_* minimizing
-               modeled end-to-end latency, charging host<->DPU boundary
-               transfers and KV-cache migration off its home device.
-               Planner ladder: chain DP -> exact frontier DP (series-
-               parallel / out-tree DAGs) -> bounded branch-and-bound ->
-               greedy (see placement docstring)
+               modeled end-to-end latency (seconds), charging host<->DPU
+               boundary transfers and KV-cache migration/write-back off
+               its home device. Planner ladder: chain DP -> exact
+               frontier DP (series-parallel / out-tree DAGs) -> bounded
+               branch-and-bound -> greedy (see placement docstring). Two
+               objectives: the additive serial sum (default) or the
+               scheduler's overlapped wall-clock
+               (`plan(..., objective="overlapped")`)
     schedule   coalesce consecutive PIM stages into one launch, batch
                parallel transfers, overlap compute with transfers (the
-               GPU<->DPU host-relay hop stays serialized)
+               GPU<->DPU host-relay hop and KV write-backs stay
+               serialized)
     runtime    execute a plan in JAX: PIM stages as BankGrid local/exchange
                phases, host stages under plain jit, validated vs reference
-    workloads  mixed PrIM pipelines + the LM decode chain/DAG as
-               dispatchable pipelines/graphs
+    workloads  mixed PrIM pipelines + the LM decode chain/DAG + the
+               chunked prefill DAG as dispatchable pipelines/graphs
 
-The serving engine dispatches decode through this layer
-(`repro.serve.dispatch_engine`, `ServeEngine(engine="dispatch")`).
+Unit conventions across the package: every modeled cost is SECONDS
+(fields/locals suffixed `_s`), every payload is BYTES (`*_bytes`), and
+device names come from `placement.DEVICES` (`"xeon"`, `"titan_v"`,
+`"upmem_2556"`, `"upmem_640"`).
+
+The serving engine dispatches BOTH phases through this layer
+(`repro.serve.dispatch_engine`, `ServeEngine(engine="dispatch")`): decode
+over `workloads.decode_dag`, chunked prefill over `workloads.prefill_dag`.
 """
 
-from .graph import (OpNode, OpGraph, annotate_kv_residency, node_from_fn,
-                    ops_from_hlo)
+from .graph import (OpNode, OpGraph, annotate_kv_residency,
+                    annotate_kv_write, node_from_fn, ops_from_hlo)
 from .placement import (DEVICES, Plan, compare_plans, greedy_plan,
                         kv_migration_time, node_time, placed_time, plan,
                         pure_plan, transfer_hops, transfer_time)

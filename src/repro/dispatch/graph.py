@@ -192,39 +192,54 @@ class OpGraph:
     input_bytes: float = 0.0           # bytes entering the graph from host
 
     def add(self, node: OpNode, *preds: str) -> OpNode:
+        """Insert `node` with edges from the named predecessors."""
         self.nodes[node.name] = node
         for p in preds:
             self.edges.append((p, node.name))
         return node
 
-    @property
-    def preds(self) -> dict[str, list[str]]:
-        d: dict[str, list[str]] = {n: [] for n in self.nodes}
+    def _derived(self) -> dict:
+        """Adjacency/topo structures, memoized per (node, edge) count —
+        planners and the overlapped-objective search re-read these many
+        times per plan (do NOT mutate the returned dicts; `add` is the
+        only supported mutation and invalidates by changing the counts)."""
+        key = (len(self.nodes), len(self.edges))
+        cached = getattr(self, "_dcache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        preds: dict[str, list[str]] = {n: [] for n in self.nodes}
+        succs: dict[str, list[str]] = {n: [] for n in self.nodes}
         for u, v in self.edges:
-            d[v].append(u)
-        return d
-
-    @property
-    def succs(self) -> dict[str, list[str]]:
-        d: dict[str, list[str]] = {n: [] for n in self.nodes}
-        for u, v in self.edges:
-            d[u].append(v)
-        return d
-
-    def topo_order(self) -> list[str]:
-        preds = {n: set(ps) for n, ps in self.preds.items()}
-        succs = self.succs
-        order, ready = [], [n for n in self.nodes if not preds[n]]
+            preds[v].append(u)
+            succs[u].append(v)
+        pending = {n: set(ps) for n, ps in preds.items()}
+        order, ready = [], [n for n in self.nodes if not pending[n]]
         while ready:
             n = ready.pop(0)
             order.append(n)
             for s in succs[n]:
-                preds[s].discard(n)
-                if not preds[s]:
+                pending[s].discard(n)
+                if not pending[s]:
                     ready.append(s)
         if len(order) != len(self.nodes):
             raise ValueError(f"cycle in op graph {self.name}")
-        return order
+        d = {"preds": preds, "succs": succs, "topo": order}
+        self._dcache = (key, d)
+        return d
+
+    @property
+    def preds(self) -> dict[str, list[str]]:
+        """node name -> list of predecessor names (edge sources)."""
+        return self._derived()["preds"]
+
+    @property
+    def succs(self) -> dict[str, list[str]]:
+        """node name -> list of successor names (edge destinations)."""
+        return self._derived()["succs"]
+
+    def topo_order(self) -> list[str]:
+        """Kahn topological order (FIFO ties); raises on cycles."""
+        return list(self._derived()["topo"])
 
     def last_use_positions(self, order: list[str] | None = None
                            ) -> dict[str, int]:
@@ -259,21 +274,25 @@ class OpGraph:
 
     @property
     def is_chain(self) -> bool:
+        """True when the graph is a linear chain (the chain DP's case)."""
         if len(self.edges) != len(self.nodes) - 1:
             return False
         return (all(len(p) <= 1 for p in self.preds.values())
                 and all(len(s) <= 1 for s in self.succs.values()))
 
     def chain(self) -> list[str]:
+        """The chain's node order; asserts the graph IS a chain."""
         assert self.is_chain, f"{self.name} is not a chain"
         return self.topo_order()
 
     @property
     def total_flops(self) -> float:
+        """Sum of per-node host-style flop counts."""
         return sum(n.flops for n in self.nodes.values())
 
     @property
     def total_bytes(self) -> float:
+        """Sum of per-node device-local memory traffic (bytes)."""
         return sum(n.hbm_bytes for n in self.nodes.values())
 
     # -----------------------------------------------------------------
@@ -381,12 +400,25 @@ def node_from_fn(name: str, fn: Callable, *example_args,
 
 def annotate_kv_residency(node: OpNode, kv_bytes: float,
                           home: str) -> OpNode:
-    """Mark a node as reading `kv_bytes` of cache resident on `home`.
-    The planner (`placement.kv_migration_time`) charges moving those bytes
-    over the measured channel whenever the node is placed elsewhere —
-    the data-placement term of the decode DAG's objective."""
+    """Mark a node as reading `kv_bytes` (bytes) of cache resident on
+    `home` (a `placement.DEVICES` name). The planner
+    (`placement.kv_migration_time`) charges moving those bytes over the
+    measured channel whenever the node is placed elsewhere — the
+    data-placement term of the decode/prefill DAG objectives."""
     node.meta["kv_bytes"] = float(kv_bytes)
     node.meta["kv_home"] = home
+    return node
+
+
+def annotate_kv_write(node: OpNode, kv_bytes: float, home: str) -> OpNode:
+    """Mark a node as *writing* `kv_bytes` (bytes) of KV-cache rows whose
+    residency is `home` (a `placement.DEVICES` name). Placing the node on
+    any other device charges shipping the freshly produced rows back to the
+    home over the measured channel (`placement.kv_migration_time`'s
+    write-back term) — the cost a chunked prefill pays to keep the cache
+    bank-resident while its compute runs elsewhere."""
+    node.meta["kv_write_bytes"] = float(kv_bytes)
+    node.meta["kv_write_home"] = home
     return node
 
 

@@ -20,9 +20,19 @@ Nodes that read a resident KV-cache shard (the decode attention) carry
 `meta["kv_bytes"]` / `meta["kv_home"]`: placing such a node on any device
 other than the cache's home charges migrating the slot's KV over the
 measured transfer channel (`kv_migration_time`) — the data-placement cost
-the decode DAG planner trades against compute. Weights/params stay
-device-resident (weight-stationary serving): only activations and migrated
-KV cross boundaries.
+the decode DAG planner trades against compute. Nodes that *write* KV rows
+(a prefill chunk's attention) carry `meta["kv_write_bytes"]` /
+`meta["kv_write_home"]` symmetrically: running them off the cache's home
+charges shipping the fresh rows back. Weights/params stay device-resident
+(weight-stationary serving): only activations and migrated KV cross
+boundaries.
+
+Two objectives (the `objective` knob of `plan`): `"serial"` minimizes the
+additive end-to-end sum `evaluate` computes — the ladder below is exact
+for it; `"overlapped"` scores candidates by the scheduler's modeled
+wall-clock (`Schedule.overlapped_s`: batched transfers double-buffered
+under group compute, relay hops pinned serial) via a deterministic
+local search seeded with the serial plan (DESIGN.md §10).
 
 Planner ladder (each rung exact for its class, the next a fallback):
 
@@ -100,7 +110,7 @@ def transfer_time(src: str, dst: str, nbytes: float,
 
 def transfer_hops(src: str, dst: str, nbytes: float,
                   dpu: DPUModel | None = None) -> tuple[float, float]:
-    """Split a transfer into (relay_s, final_hop_s).
+    """Split a transfer into (relay_s, final_hop_s), both seconds.
 
     GPU<->DPU traffic has no direct channel: it relays through host DRAM
     (Takeaway 3), and the relay hop must complete before the final hop can
@@ -119,24 +129,37 @@ def transfer_hops(src: str, dst: str, nbytes: float,
 
 def kv_migration_time(node: OpNode, device: str,
                       dpu: DPUModel | None = None) -> float:
-    """Cost of pulling the node's resident KV-cache bytes to `device` when
-    it is placed away from the cache's home (zero when at home or when the
-    node carries no residency annotation)."""
+    """Seconds of KV-residency traffic for placing `node` on `device`.
+
+    Two terms, both zero when the node sits on the annotated home device:
+    reads (`meta["kv_bytes"]`/`meta["kv_home"]`, the decode attention's
+    resident cache) charge pulling the bytes *from* the home; writes
+    (`meta["kv_write_bytes"]`/`meta["kv_write_home"]`, a prefill chunk's
+    freshly produced KV rows) charge shipping the bytes back *to* the
+    home. Both move over the measured channel (`transfer_time`)."""
+    t = 0.0
     kv_bytes = float(node.meta.get("kv_bytes") or 0.0)
     home = node.meta.get("kv_home")
-    if not kv_bytes or not home or home == device:
-        return 0.0
-    return transfer_time(home, device, kv_bytes, dpu)
+    if kv_bytes and home and home != device:
+        t += transfer_time(home, device, kv_bytes, dpu)
+    wb_bytes = float(node.meta.get("kv_write_bytes") or 0.0)
+    wb_home = node.meta.get("kv_write_home")
+    if wb_bytes and wb_home and wb_home != device:
+        t += transfer_time(device, wb_home, wb_bytes, dpu)
+    return t
 
 
 def placed_time(node: OpNode, device: str,
                 dpu: DPUModel | None = None) -> float:
-    """node_time plus the KV-residency migration charge — the per-(node,
-    device) additive term every planner rung optimizes against."""
+    """node_time plus the KV-residency migration charge, in seconds — the
+    per-(node, device) additive term every planner rung optimizes
+    against."""
     return node_time(node, device, dpu) + kv_migration_time(node, device, dpu)
 
 
 def launch_overhead(device: str, dpu: DPUModel | None = None) -> float:
+    """Seconds to start work on `device` when the previous operator ran
+    elsewhere (DPU program launch / kernel launch + host sync)."""
     if _is_pim(device):
         return (dpu or _DPU_SYSTEMS[device]).launch_overhead_s
     return _HOST_LAUNCH_S[device]
@@ -148,6 +171,15 @@ def launch_overhead(device: str, dpu: DPUModel | None = None) -> float:
 
 @dataclasses.dataclass
 class Plan:
+    """A full placement and its cost breakdown.
+
+    `assignment` maps node name -> device name (the `DEVICES` vocabulary:
+    `"xeon"`, `"titan_v"`, `"upmem_2556"`, `"upmem_640"`). All `*_s`
+    fields are modeled seconds under the *serial* objective (the additive
+    sum `evaluate` computes); when the plan was optimized for the
+    schedule-aware objective, `objective == "overlapped"` and
+    `overlapped_s` holds the `Schedule.overlapped_s` score it was chosen
+    by (None for serial plans)."""
     graph_name: str
     assignment: dict[str, str]         # node name -> device
     method: str                        # dp | dag-dp | bnb | greedy | pure
@@ -157,25 +189,32 @@ class Plan:
     launch_s: float
     node_s: dict[str, float]
     migrate_s: float = 0.0             # KV-residency migration charges
+    objective: str = "serial"          # which objective picked this plan
+    overlapped_s: float | None = None  # Schedule score, overlapped plans
 
     @property
     def n_boundary_crossings(self) -> int:
+        """Number of distinct producer->consumer device crossings."""
         return len({(u, v) for u, v in self._crossings})
 
     _crossings: list = dataclasses.field(default_factory=list, repr=False)
 
     def device_of(self, node: str) -> str:
+        """Device name the plan assigns to `node`."""
         return self.assignment[node]
 
     @property
     def used_devices(self) -> tuple[str, ...]:
+        """Sorted device names the plan actually places operators on."""
         return tuple(sorted(set(self.assignment.values())))
 
     @property
     def is_hybrid(self) -> bool:
+        """True when the plan spans more than one device."""
         return len(set(self.assignment.values())) > 1
 
     def render(self) -> str:
+        """Multi-line human-readable plan listing (milliseconds per term)."""
         lines = [f"plan[{self.graph_name}] method={self.method} "
                  f"total={self.total_s * 1e3:.3f}ms  "
                  f"(compute {self.compute_s * 1e3:.3f} + transfer "
@@ -261,14 +300,29 @@ def _resolve(devices: Iterable[str]) -> tuple[tuple[str, ...], DPUModel | None]:
 
 def plan(graph: OpGraph, devices: Iterable[str] = ("xeon", "upmem_2556"),
          source: str = "xeon", sink: str = "xeon", *,
-         state_budget: int = 200_000, bnb_budget: int = 200_000) -> Plan:
-    """Minimize modeled end-to-end latency over per-operator placements.
+         state_budget: int = 200_000, bnb_budget: int = 200_000,
+         objective: str = "serial") -> Plan:
+    """Minimize modeled end-to-end latency (seconds) over per-operator
+    placements.
 
-    The fallback ladder (module docstring): chain DP when the graph is a
-    chain; otherwise the exact frontier DP while its per-step state count
-    stays under `state_budget`; otherwise branch-and-bound limited to
-    `bnb_budget` node expansions, seeded with the greedy incumbent (so the
-    result is never worse than greedy)."""
+    `objective="serial"` (default) minimizes the additive sum `evaluate`
+    computes, via the fallback ladder (module docstring): chain DP when
+    the graph is a chain; otherwise the exact frontier DP while its
+    per-step state count stays under `state_budget`; otherwise
+    branch-and-bound limited to `bnb_budget` node expansions, seeded with
+    the greedy incumbent (so the result is never worse than greedy).
+
+    `objective="overlapped"` scores candidate plans by the *scheduler's*
+    modeled wall-clock instead — `Schedule.overlapped_s`, which credits
+    batched parallel transfers double-buffering under each launch group's
+    compute (relay hops and KV write-backs stay serialized). The serial
+    ladder's plan seeds a deterministic coordinate-descent search over
+    single-node device moves, so the returned plan's `overlapped_s` is
+    never worse than scheduling the serial-objective plan (pinned in
+    tests/test_golden_plans.py)."""
+    if objective not in ("serial", "overlapped"):
+        raise ValueError(f"objective must be 'serial' or 'overlapped', "
+                         f"got {objective!r}")
     devices, dpu = _resolve(devices)
     if graph.is_chain:
         assignment = _plan_chain_dp(graph, devices, dpu, source, sink)
@@ -281,6 +335,9 @@ def plan(graph: OpGraph, devices: Iterable[str] = ("xeon", "upmem_2556"),
             assignment = _plan_dag_bnb(graph, devices, dpu, source, sink,
                                        bnb_budget)
             method = "bnb"
+    if objective == "overlapped":
+        return _refine_overlapped(graph, assignment, devices, dpu,
+                                  source, sink, method)
     return evaluate(graph, assignment, dpu, source, sink, method=method)
 
 
@@ -506,6 +563,73 @@ def _plan_dag_bnb(graph: OpGraph, devices: tuple[str, ...],
         for _, child in sorted(children, key=lambda t: t[0], reverse=True):
             stack.append(child)
     return best
+
+
+# ---------------------------------------------------------------------------
+# schedule-aware objective (objective="overlapped")
+# ---------------------------------------------------------------------------
+
+def _overlapped_score(graph: OpGraph, assignment: dict[str, str],
+                      dpu: DPUModel | None, source: str,
+                      sink: str) -> float:
+    """`Schedule.overlapped_s` (seconds) of an assignment: the scheduler's
+    modeled wall-clock with batched transfers double-buffered under each
+    launch group's compute. The scheduler reads only the assignment, so
+    the trial plan is a zero-cost stub — the coordinate descent calls
+    this O(passes * nodes * devices) times and a full `evaluate` per
+    trial would double its cost. Local import: schedule imports
+    placement."""
+    from .schedule import make_schedule
+    stub = Plan(graph_name=graph.name, assignment=assignment,
+                method="trial", total_s=0.0, compute_s=0.0,
+                transfer_s=0.0, launch_s=0.0, node_s={})
+    return make_schedule(graph, stub, dpu, source, sink).overlapped_s
+
+
+def _refine_overlapped(graph: OpGraph, seed: dict[str, str],
+                       devices: tuple[str, ...], dpu: DPUModel | None,
+                       source: str, sink: str, method: str,
+                       max_passes: int = 4) -> Plan:
+    """Pick the assignment minimizing `Schedule.overlapped_s`.
+
+    Candidates: the serial ladder's plan (`seed`), every pure placement,
+    and the greedy sweep; the best then seeds a deterministic coordinate
+    descent — sweep the topological order, move one node at a time to the
+    device that most improves the schedule score, until a full pass makes
+    no move (or `max_passes`). The seed is always in the candidate set,
+    so the result is never worse (under overlapped_s) than scheduling the
+    serial-objective plan. Exhaustive for one-operator graphs (the
+    Hamming-1 neighborhood is the whole space); a heuristic elsewhere —
+    the overlap max() couples non-adjacent operators, which breaks the DP
+    decompositions the serial ladder's exactness rests on (DESIGN §10)."""
+    candidates = [dict(seed), _plan_greedy(graph, devices, dpu, source)]
+    candidates += [{n: d for n in graph.nodes} for d in devices]
+    scored = [(_overlapped_score(graph, a, dpu, source, sink), i, a)
+              for i, a in enumerate(candidates)]
+    best_s, _, best = min(scored)
+
+    order = graph.topo_order()
+    for _ in range(max_passes):
+        moved = False
+        for n in order:
+            cur = best[n]
+            for d in devices:
+                if d == cur:
+                    continue
+                trial = dict(best)
+                trial[n] = d
+                s = _overlapped_score(graph, trial, dpu, source, sink)
+                if s < best_s - 1e-15:
+                    best_s, best, moved = s, trial, True
+                    cur = d
+        if not moved:
+            break
+
+    p = evaluate(graph, best, dpu, source, sink,
+                 method=f"{method}+overlap")
+    p.objective = "overlapped"
+    p.overlapped_s = best_s
+    return p
 
 
 def compare_plans(graph: OpGraph,

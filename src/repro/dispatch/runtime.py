@@ -71,11 +71,14 @@ class Stage:
         default=None, repr=False, compare=False)
 
     def run_host(self, x):
+        """Execute the host face under a cached per-stage jit."""
         if self._jit is None:          # one trace cache per stage
             self._jit = jax.jit(self.fn)
         return self._jit(x, *self.params)
 
     def run_pim(self, grid: BankGrid, x):
+        """Execute the bank-parallel face on `grid` (default: bank_map
+        of the host face — the pure-streaming case)."""
         if self.pim is not None:
             return self.pim(grid, x, *self.params)
         return grid.bank_map(self.fn)(x, *self.params)
@@ -90,6 +93,7 @@ class Pipeline:
     x: Any                             # input array (flows through stage 0)
 
     def stage(self, name: str) -> Stage:
+        """The stage with the given name (StopIteration if absent)."""
         return next(s for s in self.stages if s.name == name)
 
     # -----------------------------------------------------------------
@@ -147,6 +151,9 @@ def reference(pipeline: Pipeline):
 
 @dataclasses.dataclass
 class ExecutionReport:
+    """Outcome of a hybrid execution: the result, the single-device
+    reference, and the allclose verdict (`max_abs_err` in the output's
+    own units)."""
     result: Any
     reference: Any
     matches: bool

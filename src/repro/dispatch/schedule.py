@@ -24,7 +24,12 @@ The paper's programming recommendations, made mechanical:
 
 `make_schedule(graph, plan)` emits the timeline; `Schedule.total_s` (and
 the optimistic `overlapped_s`) is the modeled wall-clock the benchmarks
-report next to the plan's serial estimate.
+report next to the plan's serial estimate. `overlapped_s` is also the
+objective `placement.plan(..., objective="overlapped")` optimizes. KV
+rows written off their home device (a prefill chunk's attention,
+`graph.annotate_kv_write`) ship back as one batched transfer serialized
+after the group — later chunks read them from the home, so the write-back
+can never hide under this group's compute.
 """
 
 from __future__ import annotations
@@ -44,7 +49,8 @@ TRANSFER_SETUP_S = 2e-5
 @dataclasses.dataclass
 class LaunchGroup:
     """A maximal run of consecutive same-device operators: one launch, one
-    batched input transfer."""
+    batched input transfer. All `*_s` fields are modeled seconds; `*_bytes`
+    are bytes."""
     device: str
     nodes: list[str]
     compute_s: float                  # sum of member operator times
@@ -55,24 +61,35 @@ class LaunchGroup:
                                       # "what batching buys" delta)
     launch_s: float
     relay_s: float = 0.0              # host-relay hop of GPU<->DPU inputs
+    writeback_s: float = 0.0          # KV rows shipped back to their home
+    n_writebacks: int = 0             # member nodes writing KV off-home
 
     @property
     def serial_s(self) -> float:
-        return self.in_transfer_s + self.launch_s + self.compute_s
+        """Group seconds with no intra-group overlap (transfer + launch +
+        compute + KV write-back, summed)."""
+        return (self.in_transfer_s + self.launch_s + self.compute_s
+                + self.writeback_s)
 
     @property
     def overlapped_s(self) -> float:
-        """Streaming double-buffering: input chunks hide under compute —
-        but the host-relay hop of a GPU<->DPU path finishes before the
-        final hop starts streaming, so it cannot hide under this group's
-        compute and is serialized in front of the overlap window."""
+        """Group seconds with streaming double-buffering: input chunks
+        hide under compute — but the host-relay hop of a GPU<->DPU path
+        finishes before the final hop starts streaming, so it cannot hide
+        under this group's compute and is serialized in front of the
+        overlap window. KV write-backs are serialized after the group:
+        the cache home must hold the rows before any later consumer (the
+        next prefill chunk's attention) may read them."""
         return (self.relay_s
                 + max(self.compute_s, self.in_transfer_s - self.relay_s)
-                + self.launch_s)
+                + self.launch_s + self.writeback_s)
 
 
 @dataclasses.dataclass
 class Schedule:
+    """A plan's execution timeline: launch groups plus three modeled
+    wall-clock totals (seconds). `overlapped_s` is the objective the
+    planner's `objective="overlapped"` knob optimizes."""
     graph_name: str
     groups: list[LaunchGroup]
     out_transfer_s: float             # final retrieve to the sink
@@ -82,9 +99,11 @@ class Schedule:
 
     @property
     def n_launches(self) -> int:
+        """Number of launch groups (= device launches paid)."""
         return len(self.groups)
 
     def render(self, max_groups: int = 12) -> str:
+        """Multi-line human-readable timeline (ms totals, per-group rows)."""
         lines = [f"schedule[{self.graph_name}] {self.n_launches} launch "
                  f"group(s): total={self.total_s * 1e3:.3f}ms  "
                  f"overlapped={self.overlapped_s * 1e3:.3f}ms  "
@@ -151,6 +170,19 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
             kv_home = meta.get("kv_home")
             if kv_bytes and kv_home and kv_home != g.device:
                 crossing.append((kv_home, kv_bytes))
+            # KV rows written off their home ship back over the measured
+            # channel (the plan's write-back term, kept in the timeline so
+            # Schedule and Plan totals agree on prefill DAGs); batched into
+            # one transfer call per group, serialized after the group's
+            # compute (later chunks read them from the home)
+            wb_bytes = float(meta.get("kv_write_bytes") or 0.0)
+            wb_home = meta.get("kv_write_home")
+            if wb_bytes and wb_home and wb_home != g.device:
+                g.writeback_s += transfer_time(g.device, wb_home, wb_bytes,
+                                               dpu)
+                g.n_writebacks += 1
+        if g.n_writebacks:
+            g.writeback_s += TRANSFER_SETUP_S
         if gi == 0 and graph.input_bytes and g.device != source:
             crossing.append((source, graph.input_bytes))
         if crossing:
@@ -176,6 +208,8 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
     total = sum(g.serial_s for g in groups) + out_transfer
     overlapped = sum(g.overlapped_s for g in groups) + out_transfer
     unbatched = sum(g.serial_transfer_s + g.launch_s + g.compute_s
+                    + g.writeback_s
+                    + max(g.n_writebacks - 1, 0) * TRANSFER_SETUP_S
                     for g in groups) + out_transfer
     return Schedule(graph_name=graph.name, groups=groups,
                     out_transfer_s=out_transfer, total_s=total,

@@ -40,8 +40,8 @@ from jax.sharding import PartitionSpec as P
 from ..core.bank_parallel import BankGrid
 from ..core.perf_model import WorkloadCounts
 from ..prim import trns as prim_trns
-from .graph import (OpGraph, OpNode, annotate_kv_residency, chain_graph,
-                    node_from_fn)
+from .graph import (OpGraph, OpNode, annotate_kv_residency,
+                    annotate_kv_write, chain_graph, node_from_fn)
 from .runtime import Pipeline, Stage
 
 
@@ -152,6 +152,7 @@ class DecodeDims:
 
     @property
     def kv_heads(self) -> int:
+        """Cached KV head count (GQA when n_kv_heads is set, else MHA)."""
         return self.n_kv_heads or self.n_heads
 
 
@@ -367,6 +368,181 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
 
 
 # ---------------------------------------------------------------------------
+# chunked LM prefill as a DAG (per-chunk fan-out, KV write residency)
+# ---------------------------------------------------------------------------
+
+def _attend_prefill(qkv, kq, vq, dims: DecodeDims, t: int, q0: int):
+    """Costing proxy for one prefill chunk's attention: `t` query rows at
+    positions q0..q0+t-1 attend causally over the `prefix` keys written so
+    far (prior chunks + this one), with the same quantized-int dot /
+    float-softmax mix as the decode `_attend` — the op profile the DPU
+    cost model prices."""
+    h, dh = dims.n_heads, dims.head_dim
+    b = qkv.shape[0] // t
+    q = qkv.reshape(b, t, 3, h, dh)[:, :, 0]
+    qq = jnp.round(q * _Q_SCALE).astype(jnp.int32)
+    scores_i = jnp.einsum("bthd,shd->bhts", qq, kq)
+    scores = scores_i.astype(jnp.float32) / (_Q_SCALE * _Q_SCALE * dh ** 0.5)
+    q_pos = q0 + jnp.arange(t)
+    k_pos = jnp.arange(kq.shape[0])
+    mask = q_pos[:, None] >= k_pos[None, :]
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    wq = jnp.round(w * 256.0).astype(jnp.int32)
+    out_i = jnp.einsum("bhts,shd->bthd", wq, vq)
+    return (out_i.astype(jnp.float32).reshape(b * t, h * dh)
+            / (256.0 * _Q_SCALE))
+
+
+
+def prefill_chunk_splits(s_len: int, chunk: int) -> list[int]:
+    """Chunk lengths a `s_len`-token prompt is processed in: full `chunk`
+    slices plus a possibly ragged tail. The single source of truth for
+    both the prefill DAG's chunk grid and the executable chunking in
+    `serve.dispatch_engine.DispatchPrefillStep` — the
+    `"{stage}{layer}/c{chunk}"` routing contract depends on the two
+    agreeing. A prompt shorter than one chunk is a single ragged chunk."""
+    if chunk < 1 or s_len < 1:
+        raise ValueError(f"need chunk >= 1 and s_len >= 1, got "
+                         f"chunk={chunk}, s_len={s_len}")
+    splits = [chunk] * (s_len // chunk)
+    if s_len % chunk:
+        splits.append(s_len % chunk)
+    return splits
+
+
+def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
+                prefill_len: int | None = None, chunk: int | None = None,
+                batch: int = 1,
+                kv_home: str | None = "upmem_2556") -> OpGraph:
+    """Chunked prefill as the operator DAG the serving planner consumes.
+
+    The prompt (`prefill_len` tokens, default `dims.seq`) is split into
+    ceil(prefill_len/chunk) chunks (default 4 chunks; the last may be
+    ragged). Each chunk runs the per-layer stage ladder the decode DAG
+    uses — qkv -> attn -> o -> mlp with the residual stream fanning out to
+    both qkv and the post-attention add — and every chunk's qkv output
+    additionally *fans out across chunks* to all later chunks' attention
+    at the same layer: that edge is the freshly written KV rows the later
+    chunks read. Only the last chunk feeds the vocab head (the engine
+    samples from the prompt's final position); earlier chunks' terminal
+    residuals are retrieved to the sink (conservative — serving may
+    return prompt logprobs).
+
+    KV residency (`kv_home`, a `placement.DEVICES` name; None disables):
+    attention of chunk c *reads* the c prior chunks' rows resident at
+    `kv_home` (`annotate_kv_residency` — placing it elsewhere migrates
+    them) and *writes* its own chunk's rows (`annotate_kv_write` —
+    running it elsewhere ships them back). Node names follow
+    `"{stage}{layer}/c{chunk}"` (`"embed/c0"`, `"qkv3/c1"`, ...), the
+    routing contract `serve.dispatch_engine.DispatchPrefillStep` executes.
+
+    Planner note: the cross-chunk fan-in widens the topological frontier
+    to ~2*n_chunks+1, so DAGs beyond 2 chunks typically exceed the
+    frontier DP's default state budget and fall to branch-and-bound —
+    the ladder behaves as designed (DESIGN.md §10)."""
+    d = dims
+    S_len = prefill_len if prefill_len is not None else d.seq
+    c_len = chunk if chunk is not None else max(1, -(-S_len // 4))
+    splits = prefill_chunk_splits(S_len, c_len)
+
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    dm, hdh = d.d_model, d.n_heads * d.head_dim
+    kv_row_bytes = 2.0 * batch * d.kv_heads * d.head_dim * d.kv_itemsize
+
+    def f_embed(t, tab):
+        return tab[t]
+
+    def f_qkv(v, w):
+        return _rmsnorm(v) @ w
+
+    def f_o(a, res, w):
+        return res + a @ w
+
+    def f_mlp(v, wu, wd):
+        return v + jax.nn.gelu(_rmsnorm(v) @ wu) @ wd
+
+    def f_head(v, w):
+        return _rmsnorm(v) @ w
+
+    wqkv = S((dm, 3 * hdh), f32)
+    wo = S((hdh, dm), f32)
+    wup, wdown = S((dm, d.d_ff), f32), S((d.d_ff, dm), f32)
+    whead = S((dm, d.vocab), f32)
+    table = S((d.vocab, dm), f32)
+
+    # compile each distinct stage shape once; same-shape chunks share it
+    protos: dict[tuple, OpNode] = {}
+
+    def proto(kind, key, build):
+        if (kind, key) not in protos:
+            protos[(kind, key)] = build()
+        src = protos[(kind, key)]
+        return dataclasses.replace(src, ops=dict(src.ops),
+                                   meta=dict(src.meta))
+
+    g = OpGraph("lm-prefill-dag", input_bytes=float(batch * S_len * 4))
+    res: list[str | None] = [None] * len(splits)  # chunk residual producers
+    for c, t in enumerate(splits):
+        tokens = S((batch * t,), i32)
+        node = proto("embed", t, lambda: node_from_fn(
+            "embed", f_embed, tokens, table, kind="embed"))
+        g.add(dataclasses.replace(node, name=f"embed/c{c}"))
+        res[c] = f"embed/c{c}"
+    for i in range(d.n_layers):
+        qkv_names: list[str] = []
+        c0 = 0
+        for c, t in enumerate(splits):
+            rows = batch * t
+            prefix = c0 + t
+            x = S((rows, dm), f32)
+            qkv_out = S((rows, 3 * hdh), f32)
+            attn_out = S((rows, hdh), f32)
+            kq = S((prefix, d.n_heads, d.head_dim), i32)
+            vq = S((prefix, d.n_heads, d.head_dim), i32)
+            act_bytes = float(rows * dm * 4)
+
+            node = proto("qkv", t, lambda: node_from_fn(
+                "qkv", f_qkv, x, wqkv, kind="gemv_qkv",
+                exchange_bytes=3 * act_bytes))
+            qkv = g.add(dataclasses.replace(node, name=f"qkv{i}/c{c}"),
+                        res[c])
+            qkv_names.append(qkv.name)
+
+            attend = functools.partial(_attend_prefill, dims=d, t=t, q0=c0)
+            node = proto("attn", (t, prefix), lambda: node_from_fn(
+                "attn", attend, qkv_out, kq, vq, kind="attn"))
+            # fan-in: this chunk's qkv plus every earlier chunk's (their
+            # written KV rows), the cross-chunk edges of the DAG
+            attn = g.add(dataclasses.replace(node, name=f"attn{i}/c{c}"),
+                         *qkv_names)
+            if kv_home is not None:
+                if c0:
+                    annotate_kv_residency(attn, kv_row_bytes * c0, kv_home)
+                annotate_kv_write(attn, kv_row_bytes * t, kv_home)
+
+            node = proto("o", t, lambda: node_from_fn(
+                "o", f_o, attn_out, x, wo, kind="gemv_o",
+                exchange_bytes=act_bytes))
+            g.add(dataclasses.replace(node, name=f"o{i}/c{c}"),
+                  f"attn{i}/c{c}", res[c])
+            node = proto("mlp", t, lambda: node_from_fn(
+                "mlp", f_mlp, x, wup, wdown, kind="mlp",
+                exchange_bytes=float(rows * d.d_ff * 4) + act_bytes))
+            g.add(dataclasses.replace(node, name=f"mlp{i}/c{c}"),
+                  f"o{i}/c{c}")
+            res[c] = f"mlp{i}/c{c}"
+            c0 += t
+    t_last = splits[-1]
+    x_last = S((batch * t_last, dm), f32)
+    g.add(node_from_fn("head", f_head, x_last, whead, kind="gemv_head",
+                       exchange_bytes=float(batch * t_last * d.vocab * 4)),
+          res[-1])
+    return g
+
+
+# ---------------------------------------------------------------------------
 # the 16 PrIM workloads as one-operator graphs
 # ---------------------------------------------------------------------------
 
@@ -381,4 +557,5 @@ def node_from_counts(c: WorkloadCounts) -> OpNode:
 
 
 def prim_graph(c: WorkloadCounts) -> OpGraph:
+    """A PrIM workload as a one-node OpGraph (the planner's unit case)."""
     return chain_graph(c.name, [node_from_counts(c)])

@@ -1,11 +1,16 @@
 """repro.serve — prefill/decode steps + batched serving engine.
 
-Two decode backends share the continuous-batching loop: the fused-jit
-step (`engine="jit"`, default) and the dispatch-backed step
-(`engine="dispatch"`) that routes every decode-DAG stage to the device
-the offload planner chose (serve.dispatch_engine)."""
+Two backends share the continuous-batching loop: the fused-jit steps
+(`engine="jit"`, default) and the dispatch-backed steps
+(`engine="dispatch"`) that route every operator-DAG stage to the device
+the offload planner chose (`serve.dispatch_engine`). Under dispatch BOTH
+serving phases flow through the planner: decode over
+`dispatch.workloads.decode_dag` and prefill chunked over
+`dispatch.workloads.prefill_dag` (DESIGN.md §9-§10). Device names follow
+`dispatch.placement.DEVICES` (`"xeon"`, `"titan_v"`, `"upmem_2556"`,
+`"upmem_640"`); all modeled costs are seconds, all payloads bytes."""
 
-from .dispatch_engine import (DispatchDecodeStep, dims_for_config,
-                              make_dispatch_decode_step)
+from .dispatch_engine import (DispatchDecodeStep, DispatchPrefillStep,
+                              dims_for_config, make_dispatch_decode_step)
 from .engine import (Request, ServeEngine, make_decode_step,
                      make_prefill_step, sample)

@@ -1,31 +1,40 @@
-"""Dispatch-backed decode: route the serving engine through planner plans.
+"""Dispatch-backed serving: route prefill AND decode through planner plans.
 
 `DispatchDecodeStep` is a drop-in replacement for `ServeEngine`'s jitted
 decode callable (same `(params, cache, tokens, slot_pos, live_mask, key)`
-signature), selected with `ServeEngine(..., engine="dispatch")`. Instead of
-one fused jit, the decode step is decomposed into the stages of the decode
-DAG (`dispatch.workloads.decode_dag`) and each stage runs on the device the
-offload planner chose for it:
+signature) and `DispatchPrefillStep` replaces its jitted prefill-one
+callable (`(params, cache, tokens, slot) -> (last_logits, cache)`), both
+selected with `ServeEngine(..., engine="dispatch")`. Instead of one fused
+jit, each step is decomposed into the stages of its operator DAG
+(`dispatch.workloads.decode_dag` / `dispatch.workloads.prefill_dag`) and
+each stage runs on the device the offload planner chose for it:
 
   * host stages (`xeon` / `titan_v` in the model) run under per-stage jit,
     one trace per stage *kind* — all layers share it;
-  * PIM stages run through `dispatch.runtime.bank_face`: batch slots are
-    sharded over banks (each bank owns its slots' activations and KV rows,
-    the continuous-batching-across-banks layout of DESIGN.md §4), weights
-    replicate, and the body is a pure bank-local phase.
+  * PIM stages run through `dispatch.runtime.bank_face` (decode: batch
+    slots sharded over banks — each bank owns its slots' activations and
+    KV rows, the continuous-batching-across-banks layout of DESIGN.md §4)
+    or a sequence-sharded face (prefill: the chunk's token rows shard over
+    banks, weights and the KV prefix replicate); the body stays a pure
+    bank-local phase.
 
-Every stage computes exactly what `models.forward`'s decode path computes
-for that slice of the step (same library calls: `_qkv`, `write_decode`,
-`cached_attention`, `mlp_forward`, ...), so the composed step is
-numerically equivalent to the single-jit engine — `tests/test_serve.py`
-pins token-for-token identity over a continuous-batching run.
+Every stage computes exactly what `models.forward` computes for that slice
+of the step (same library calls: `_qkv`, `write_decode`/`write_prefill`,
+`cached_attention`, `mlp_forward`, ...). For decode the composed step is
+bit-identical to the single-jit engine; for prefill the per-stage
+decomposition changes XLA fusion boundaries, so agreement is
+ulp-level rather than bitwise (~1e-7 relative at f32) — the serving gates
+in `tests/test_serve.py` therefore pin decode token-identity on the
+default dtype and the mixed prefill+decode run on the f32 model (the same
+precedent as the two-bank decode gate, DESIGN.md §9/§10).
 
 Planning happens once at engine construction: the model config is mapped
-to `DecodeDims`, the decode DAG is built with the KV cache homed on the
-PIM system (bank-resident KV), and `placement.plan` runs the exact ladder
-(the DAG's frontier width is 2, so the frontier DP is exact). The chosen
-assignment routes stages by name; `force_assignment` overrides it for
-tests and ablations.
+to `DecodeDims`, the DAGs are built with the KV cache homed on the PIM
+system (bank-resident KV), and `placement.plan` runs the ladder — exact
+frontier DP for the decode DAG (width 2) and for prefill up to 2 chunks;
+wider chunked prefill falls to bounded branch-and-bound (DESIGN.md §10).
+The chosen assignment routes stages by name; `force_assignment` overrides
+it for tests and ablations.
 
 Scope: dense attention decoder LMs (every pattern position `attn`+`dense`,
 no cross-attention/MoE/SSM) with an unsharded host mesh — the dispatch
@@ -34,10 +43,12 @@ layer does its own distribution through the BankGrid.
 
 from __future__ import annotations
 
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..core.bank_parallel import BankGrid, make_bank_mesh
 from ..dispatch import workloads
@@ -92,6 +103,7 @@ class DispatchDecodeStep:
                  grid: BankGrid | None = None,
                  devices: tuple[str, ...] = ("xeon", "upmem_2556"),
                  kv_home: str | None = "upmem_2556",
+                 objective: str = "serial",
                  force_assignment: dict[str, str] | None = None):
         _check_dispatchable(cfg, shd)
         self.cfg, self.shd = cfg, shd
@@ -102,7 +114,8 @@ class DispatchDecodeStep:
                              f"{self.grid.n_banks} bank(s)")
         self.dag = workloads.decode_dag(
             dims_for_config(cfg, batch_slots, max_len), kv_home=kv_home)
-        self.plan: Plan = plan_placement(self.dag, devices=devices)
+        self.plan: Plan = plan_placement(self.dag, devices=devices,
+                                         objective=objective)
         self.assignment = dict(self.plan.assignment)
         if force_assignment:
             self.assignment.update(force_assignment)
@@ -199,6 +212,7 @@ class DispatchDecodeStep:
         return self._host[kind](*args)
 
     def devices_used(self) -> dict[str, str]:
+        """Stage name -> device name the step actually routes through."""
         return dict(self.assignment)
 
     def __call__(self, params, cache, tokens, slot_pos, live_mask, key):
@@ -229,3 +243,252 @@ class DispatchDecodeStep:
                                 jnp.max(slot_pos) + 1).astype(jnp.int32)
         new_cache = dict(cache, index=new_index, layers=[new_layer])
         return nxt, new_cache, new_pos
+
+
+# ------------------------------------------------------------------- #
+# planner-routed chunked prefill
+# ------------------------------------------------------------------- #
+
+class DispatchPrefillStep:
+    """Planner-routed chunked prefill with the engine's prefill-one
+    signature: `(params, cache, tokens, slot) -> (last_logits, new_cache)`.
+
+    The prompt is processed `chunk` tokens at a time; each chunk runs the
+    per-layer qkv -> attention -> o -> mlp stage ladder on the device the
+    planner assigned to the matching `workloads.prefill_dag` node
+    (`"qkv{layer}/c{chunk}"`, ...). Chunk attention attends each query row
+    causally over all K/V rows produced so far — the same math
+    `models.transformer._plain_attention` computes, with absolute
+    positions passed explicitly so a bank-sharded chunk masks correctly.
+    After the last chunk, the assembled K/V rows are written into the
+    batched cache at `slot` exactly like the fused engine's prefill
+    (`cache.write_prefill` + per-block scatter), and the head runs on the
+    final chunk only (the engine samples from the prompt's last position).
+
+    Planning happens once, on a canonical DAG of `planned_chunks` chunks
+    (prompts with more chunks reuse the last planned chunk's placement —
+    the `min(c, planned-1)` clamp; prompts with fewer just use a prefix).
+    The cross-chunk KV fan-in widens the DAG frontier to ~2*chunks+1, so
+    beyond 2 chunks the ladder's bounded branch-and-bound rung plans it
+    (budgets are constructor knobs; DESIGN.md §10). `objective` defaults
+    to `"overlapped"` — prefill is where batched chunk transfers have
+    compute to hide under.
+
+    PIM-assigned stages run as BankGrid local phases with the chunk's
+    token rows sharded over banks (weights and the KV prefix replicate);
+    a chunk length not divisible by the bank count falls back to the host
+    face for that call (single-bank dev containers always shard).
+
+    Numerics: every stage mirrors `models.forward`'s prefill path
+    library-call-for-library-call, but per-stage jit boundaries change
+    XLA fusion, so agreement with the fused engine is ulp-level, not
+    bitwise (module docstring); prompts at or above the fused path's
+    flash-attention threshold (2048 tokens) are out of scope."""
+
+    def __init__(self, cfg: ModelConfig, shd: Shardings, *,
+                 max_len: int, grid: BankGrid | None = None,
+                 devices: tuple[str, ...] = ("xeon", "upmem_2556"),
+                 kv_home: str | None = "upmem_2556",
+                 chunk: int | None = None, planned_chunks: int = 4,
+                 objective: str = "overlapped",
+                 state_budget: int = 200_000, bnb_budget: int = 20_000,
+                 force_assignment: dict[str, str] | None = None):
+        _check_dispatchable(cfg, shd)
+        self.cfg, self.shd = cfg, shd
+        self.grid = grid or BankGrid(make_bank_mesh())
+        self.max_len = max_len
+        self.chunk = int(chunk if chunk is not None else min(512, max_len))
+        if self.chunk < 1:
+            raise ValueError(f"prefill chunk must be >= 1, got {self.chunk}")
+        canonical = min(max_len, planned_chunks * self.chunk)
+        self.n_chunks_planned = len(
+            workloads.prefill_chunk_splits(canonical, self.chunk))
+        dims = dims_for_config(cfg, 1, max_len)
+        self.dag = workloads.prefill_dag(
+            dims, prefill_len=canonical, chunk=self.chunk, batch=1,
+            kv_home=kv_home)
+        self.plan: Plan = plan_placement(
+            self.dag, devices=devices, objective=objective,
+            state_budget=state_budget, bnb_budget=bnb_budget)
+        self.assignment = dict(self.plan.assignment)
+        if force_assignment:
+            self.assignment.update(force_assignment)
+        # routing contract: executable stage names == DAG node names
+        expected = {"head"}
+        for c in range(self.n_chunks_planned):
+            expected.add(f"embed/c{c}")
+            for i in range(cfg.n_blocks):
+                expected |= {f"qkv{i}/c{c}", f"attn{i}/c{c}",
+                             f"o{i}/c{c}", f"mlp{i}/c{c}"}
+        missing = expected - set(self.assignment)
+        if missing:
+            raise ValueError(f"plan is missing stages {sorted(missing)}; "
+                             "prefill_dag node names drifted from the "
+                             "executable stages")
+
+        self._host = {kind: jax.jit(fn)
+                      for kind, fn, _, _ in self._stages()}
+        self._pim: dict[str, Any] = {}   # built lazily (grid lowering)
+        self._scatter = jax.jit(self._scatter_fn)
+
+    # ------------------------------------------------------------- #
+    # stage bodies — each mirrors models.forward's prefill path exactly
+    # ------------------------------------------------------------- #
+
+    def _stages(self):
+        """(kind, host_fn, per-arg seq-shard axis or None, n_outputs):
+        axis 1 shards a chunk's token rows over banks, axis 0 shards a
+        1-D positions array, None replicates (weights, the KV prefix)."""
+        return [
+            ("embed", self._embed_fn, (None, 1, 1), 3),
+            ("qkv", self._qkv_fn, (1, 1, 1, None, None), 3),
+            ("attn", self._attn_fn, (1, None, None, 0), 1),
+            ("o", self._o_fn, (1, 1, None), 1),
+            ("mlp", self._mlp_fn, (1, None, None), 1),
+            ("head", self._head_fn, (1, None, None), 1),
+        ]
+
+    def _embed_fn(self, table, tokens, positions):
+        x = table[tokens].astype(self.cfg.dtype)
+        if self.cfg.rope == "none":
+            b, t = tokens.shape
+            sin = cos = jnp.zeros((b, t, self.cfg.hd // 2), jnp.float32)
+        else:
+            sin, cos = L.rope_sincos(positions, self.cfg)
+        return x, sin, cos
+
+    def _qkv_fn(self, x, sin, cos, ln1, attn_p):
+        h = L.apply_norm(x, ln1, self.cfg)
+        rs = None if self.cfg.rope == "none" else sin
+        rc = None if self.cfg.rope == "none" else cos
+        return L._qkv(h, attn_p, self.cfg, self.shd, rope_sin=rs,
+                      rope_cos=rc, heads_tp=True)
+
+    def _attn_fn(self, q, kp, vp, q_pos):
+        # _plain_attention with absolute q positions passed explicitly
+        # (bank-sharded chunks must not rebuild them from a local arange)
+        b, sq, h, hd = q.shape
+        skv, kvh = kp.shape[1], kp.shape[2]
+        if kvh != h:
+            kp = jnp.repeat(kp, h // kvh, axis=2)
+            vp = jnp.repeat(vp, h // kvh, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kp,
+                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        k_pos = jnp.arange(skv)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if self.cfg.sliding_window:
+            mask &= q_pos[:, None] - k_pos[None, :] < self.cfg.sliding_window
+        s = jnp.where(mask, s, -1e30)
+        a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", a, vp)
+
+    def _o_fn(self, x, o, attn_p):
+        return x + L.attn_out(o, attn_p, x.dtype, self.shd)
+
+    def _mlp_fn(self, x, ln2, mlp_p):
+        h = L.apply_norm(x, ln2, self.cfg)
+        x = x + L.mlp_forward(h, mlp_p, self.cfg, self.shd)
+        return self.shd.act(x, "batch", "seq", None)
+
+    def _head_fn(self, x, norm_p, wv):
+        from ..models.transformer import mask_vocab_padding
+        x = L.apply_norm(x, norm_p, self.cfg)
+        logits = jnp.einsum("bsd,vd->bsv", x, wv.astype(x.dtype))
+        return mask_vocab_padding(logits, self.cfg)
+
+    def _scatter_fn(self, cache, k_full, v_full, slot):
+        # mirror ServeEngine._prefill_one_fn: write the prompt's rows into
+        # a fresh zeroed slot-cache (ring semantics via write_prefill),
+        # then scatter that row into the batched cache at `slot`
+        kv_stack = cache["layers"][0]
+        s = k_full.shape[2]
+
+        def per_block(dst_k, dst_v, kf, vf):
+            one = {"k": jnp.zeros_like(dst_k[:1]),
+                   "v": jnp.zeros_like(dst_v[:1])}
+            one = cache_lib.write_prefill(one, kf, vf)
+            k = jax.lax.dynamic_update_slice_in_dim(
+                dst_k, one["k"].astype(dst_k.dtype), slot, axis=0)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                dst_v, one["v"].astype(dst_v.dtype), slot, axis=0)
+            return k, v
+
+        new_k, new_v = jax.vmap(per_block)(kv_stack["k"], kv_stack["v"],
+                                           k_full, v_full)
+        new_layer = dict(kv_stack, k=new_k, v=new_v)
+        new_index = jnp.maximum(cache["index"], jnp.int32(s))
+        return dict(cache, index=new_index, layers=[new_layer])
+
+    # ------------------------------------------------------------- #
+    def _run(self, name: str, kind: str, t: int, *args):
+        device = self.assignment[name]   # KeyError = name-contract break
+        if device.startswith("upmem") and t % self.grid.n_banks == 0:
+            if kind not in self._pim:
+                _, fn, axes, n_out = next(
+                    s for s in self._stages() if s[0] == kind)
+                in_specs = tuple(
+                    P() if ax is None
+                    else (P(self.grid.axis) if ax == 0
+                          else P(None, self.grid.axis))
+                    for ax in axes)
+                out = (tuple(P(None, self.grid.axis)
+                             for _ in range(n_out))
+                       if n_out > 1 else P(None, self.grid.axis))
+                self._pim[kind] = jax.jit(self.grid.local(
+                    fn, in_specs=in_specs, out_specs=out))
+            return self._pim[kind](*args)
+        return self._host[kind](*args)
+
+    def devices_used(self) -> dict[str, str]:
+        """Stage name -> device name the step actually routes through."""
+        return dict(self.assignment)
+
+    def chunk_splits(self, s_len: int) -> list[int]:
+        """Chunk lengths a prompt of `s_len` tokens is processed in (all
+        `self.chunk` long except a possibly ragged tail) — the same
+        split the planned DAG uses (`workloads.prefill_chunk_splits`)."""
+        return workloads.prefill_chunk_splits(s_len, self.chunk)
+
+    def __call__(self, params, cache, tokens, slot):
+        cfg = self.cfg
+        toks = tokens[None]              # (1, S) like the fused prefill
+        s_len = int(toks.shape[1])
+        stacked = params["layers"][0]
+        n = cfg.n_blocks
+        ks: list[list] = [[] for _ in range(n)]
+        vs: list[list] = [[] for _ in range(n)]
+        x = None
+        c0 = 0
+        for c, t in enumerate(self.chunk_splits(s_len)):
+            cc = min(c, self.n_chunks_planned - 1)
+            q_pos = jnp.arange(c0, c0 + t, dtype=jnp.int32)
+            positions = jnp.broadcast_to(q_pos[None, :], (1, t))
+            x, sin, cos = self._run(f"embed/c{cc}", "embed", t,
+                                    params["embed"], toks[:, c0:c0 + t],
+                                    positions)
+            for i in range(n):
+                lp = jax.tree.map(lambda l: l[i], stacked)
+                q, k, v = self._run(f"qkv{i}/c{cc}", "qkv", t, x, sin, cos,
+                                    lp["ln1"], lp["attn"])
+                ks[i].append(k)
+                vs[i].append(v)
+                kp = (ks[i][0] if len(ks[i]) == 1
+                      else jnp.concatenate(ks[i], axis=1))
+                vp = (vs[i][0] if len(vs[i]) == 1
+                      else jnp.concatenate(vs[i], axis=1))
+                o = self._run(f"attn{i}/c{cc}", "attn", t, q, kp, vp, q_pos)
+                x = self._run(f"o{i}/c{cc}", "o", t, x, o, lp["attn"])
+                x = self._run(f"mlp{i}/c{cc}", "mlp", t, x, lp["ln2"],
+                              lp["mlp"])
+            c0 += t
+        wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = self._run("head", "head", x.shape[1], x,
+                           params["final_norm"], wv)
+        k_full = jnp.stack([jnp.concatenate(ks[i], axis=1)
+                            if len(ks[i]) > 1 else ks[i][0]
+                            for i in range(n)])
+        v_full = jnp.stack([jnp.concatenate(vs[i], axis=1)
+                            if len(vs[i]) > 1 else vs[i][0]
+                            for i in range(n)])
+        new_cache = self._scatter(cache, k_full, v_full, slot)
+        return logits[0, -1], new_cache

@@ -11,9 +11,12 @@ different lengths share one batch (continuous batching):
     argument of the model forward), so one decode step advances every live
     slot by one token regardless of length skew.
   * Greedy sampling by default; temperature knob for examples.
-  * Two decode backends share the loop: the fused-jit step (default) and
-    the planner-routed hybrid step (`engine="dispatch"`,
-    `serve.dispatch_engine`) — same signature, same tokens.
+  * Two backends share the loop: the fused-jit steps (default) and the
+    planner-routed hybrid steps (`engine="dispatch"`,
+    `serve.dispatch_engine`) — same signatures, same tokens. Under
+    dispatch, BOTH phases flow through the offload planner: decode over
+    the decode DAG and prefill chunked over the prefill DAG (DESIGN.md
+    §9-§10).
 """
 
 from __future__ import annotations
@@ -45,6 +48,8 @@ def make_decode_step(cfg: ModelConfig, shd: Shardings):
 
 
 def sample(logits, key, temperature: float = 0.0):
+    """Greedy argmax (`temperature <= 0`) or temperature sampling over the
+    last axis of `logits`; returns int32 token ids."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
@@ -56,6 +61,8 @@ def sample(logits, key, temperature: float = 0.0):
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: an int32 prompt, a new-token budget, and the
+    tokens generated so far (`out_tokens`, filled by the engine)."""
     rid: int
     prompt: jnp.ndarray          # (S,) int32
     max_new_tokens: int
@@ -99,20 +106,48 @@ class ServeEngine:
         self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
 
         if engine == "dispatch":
-            # decode routed through the offload planner's plan over the
-            # decode DAG: PIM stages run as BankGrid phases, host stages
-            # under per-stage jit (serve.dispatch_engine). Prefill stays
-            # on the jit path — it is compute-bound (DESIGN.md §5).
-            from .dispatch_engine import DispatchDecodeStep
+            # both serving phases route through the offload planner
+            # (serve.dispatch_engine): decode over the decode DAG, prefill
+            # chunked over the prefill DAG — PIM stages run as BankGrid
+            # phases, host stages under per-stage jit. `prefill_*` keys of
+            # dispatch_kwargs configure the prefill step; the rest go to
+            # both steps.
+            from .dispatch_engine import (DispatchDecodeStep,
+                                          DispatchPrefillStep)
+            dk = dict(dispatch_kwargs or {})
+            pk = {"chunk": dk.pop("prefill_chunk", None),
+                  "objective": dk.pop("prefill_objective", "overlapped"),
+                  "force_assignment":
+                      dk.pop("prefill_force_assignment", None)}
+            # `prefill_engine="jit"` keeps prefill on the fused path —
+            # the dispatch prefill is ulp-close but not bitwise to it
+            # (per-stage jit changes XLA fusion), so decode-only bitwise
+            # identity gates need fused-prefilled caches
+            prefill_engine = dk.pop("prefill_engine", "dispatch")
+            if prefill_engine not in ("dispatch", "jit"):
+                raise ValueError(f"prefill_engine must be 'dispatch' or "
+                                 f"'jit', got {prefill_engine!r}")
             self._decode = DispatchDecodeStep(
                 cfg, self.shd, batch_slots=batch_slots, max_len=max_len,
-                temperature=temperature, **(dispatch_kwargs or {}))
+                temperature=temperature, **dk)
             self.dispatch_plan = self._decode.plan
+            if prefill_engine == "dispatch":
+                self._prefill_step = DispatchPrefillStep(
+                    cfg, self.shd, max_len=max_len, grid=self._decode.grid,
+                    devices=dk.get("devices", ("xeon", "upmem_2556")),
+                    kv_home=dk.get("kv_home", "upmem_2556"), **pk)
+                self.prefill_plan = self._prefill_step.plan
+                self._prefill_one = self._prefill_step
+            else:
+                self.prefill_plan = None
+                self._prefill_one = jax.jit(self._prefill_one_fn)
         else:
             self._decode = jax.jit(self._decode_step_fn)
             self.dispatch_plan = None
-        # retraces once per distinct prompt length (padded buckets in prod)
-        self._prefill_one = jax.jit(self._prefill_one_fn)
+            self.prefill_plan = None
+            # retraces once per distinct prompt length (padded buckets
+            # in prod)
+            self._prefill_one = jax.jit(self._prefill_one_fn)
 
     # ------------------------------------------------------------- #
     def _decode_step_fn(self, params, cache, tokens, slot_pos, live_mask,

@@ -29,3 +29,13 @@ def test_dispatch_bench_smoke(capsys):
     dispatch_bench.run(Report())
     out = capsys.readouterr().out
     assert "hybrid" in out and "allclose" in out.lower()
+    assert "overlapped" in out          # sweep 5: the prefill DAG
+
+
+def test_dispatch_bench_quick_smoke(capsys):
+    """The CI coverage job's `benchmarks.run dispatch_bench --quick`
+    path: the reduced prefill-DAG sweep with its acceptance asserts."""
+    from benchmarks import dispatch_bench
+    dispatch_bench.run(Report(), quick=True)
+    out = capsys.readouterr().out
+    assert "prefill" in out.lower() and "objective=overlapped" in out

@@ -269,6 +269,127 @@ def test_planner_never_worse_than_greedy(decode_dag, mixed_graph):
 
 
 # ------------------------------------------------------------------ #
+# prefill DAG: chunked fan-out + KV write residency (ISSUE-3)
+# ------------------------------------------------------------------ #
+
+@pytest.fixture(scope="module")
+def prefill_graph():
+    """Reduced 2-chunk prefill DAG (prefill_len=8, chunk=4)."""
+    return workloads.prefill_dag(workloads.REDUCED_DIMS, prefill_len=8,
+                                 chunk=4)
+
+
+def test_prefill_dag_structure(prefill_graph):
+    g = prefill_graph
+    d = workloads.REDUCED_DIMS
+    n_chunks = 2
+    # per chunk: embed + 4 stages/layer; one head on the last chunk
+    assert len(g.nodes) == n_chunks * (1 + 4 * d.n_layers) + 1
+    assert not g.is_chain
+    preds = g.preds
+    # cross-chunk fan-in: chunk 1's attention reads chunk 0's written KV
+    assert sorted(preds["attn0/c1"]) == ["qkv0/c0", "qkv0/c1"]
+    assert sorted(preds["o0/c0"]) == ["attn0/c0", "embed/c0"]
+    assert preds["head"] == [f"mlp{d.n_layers - 1}/c1"]
+    # residual streams + open qkv fan-outs stay narrow at 2 chunks:
+    # the exact frontier DP plans it
+    assert g.max_frontier() <= 2 * n_chunks + 1
+    assert plan(g).method == "dag-dp"
+
+
+def test_prefill_dag_ragged_tail_and_validation():
+    g = workloads.prefill_dag(workloads.REDUCED_DIMS, prefill_len=11,
+                              chunk=4)                 # chunks 4, 4, 3
+    assert "embed/c2" in g.nodes and "embed/c3" not in g.nodes
+    assert g.nodes["attn0/c2"].meta["kv_bytes"] > 0
+    with pytest.raises(ValueError, match="chunk"):
+        workloads.prefill_dag(workloads.REDUCED_DIMS, prefill_len=8,
+                              chunk=0)
+
+
+def test_prefill_dag_kv_read_and_write_annotations(prefill_graph):
+    d = workloads.REDUCED_DIMS
+    row_bytes = 2.0 * d.kv_heads * d.head_dim * d.kv_itemsize
+    first = prefill_graph.nodes["attn0/c0"]
+    later = prefill_graph.nodes["attn0/c1"]
+    # chunk 0 reads nothing resident (no prior rows), but writes its own
+    assert "kv_bytes" not in first.meta
+    assert first.meta["kv_write_bytes"] == pytest.approx(4 * row_bytes)
+    assert first.meta["kv_write_home"] == "upmem_2556"
+    # chunk 1 reads chunk 0's 4 rows and writes its own 4
+    assert later.meta["kv_bytes"] == pytest.approx(4 * row_bytes)
+    assert later.meta["kv_write_bytes"] == pytest.approx(4 * row_bytes)
+    # kv_home=None disables both annotations
+    bare = workloads.prefill_dag(workloads.REDUCED_DIMS, prefill_len=8,
+                                 chunk=4, kv_home=None)
+    assert "kv_write_bytes" not in bare.nodes["attn0/c0"].meta
+
+
+def test_kv_writeback_charge(prefill_graph):
+    """Placing a KV-writing node off the cache's home charges shipping the
+    fresh rows back over the measured channel; at home it is free."""
+    node = prefill_graph.nodes["attn0/c0"]
+    wb = node.meta["kv_write_bytes"]
+    assert kv_migration_time(node, "upmem_2556") == 0.0
+    assert kv_migration_time(node, "xeon") == pytest.approx(
+        transfer_time("xeon", "upmem_2556", wb))
+    # a later chunk off-home pays read migration AND write-back
+    later = prefill_graph.nodes["attn0/c1"]
+    assert kv_migration_time(later, "xeon") == pytest.approx(
+        transfer_time("upmem_2556", "xeon", later.meta["kv_bytes"])
+        + transfer_time("xeon", "upmem_2556", later.meta["kv_write_bytes"]))
+
+
+def test_schedule_books_kv_writeback(prefill_graph):
+    """A host group whose members write bank-resident KV ships the rows
+    back in one batched transfer, serialized after the group (Schedule and
+    Plan must agree on the write-back term)."""
+    p = pure_plan(prefill_graph, "xeon")
+    assert p.migrate_s > 0
+    sched = make_schedule(prefill_graph, p)
+    assert len(sched.groups) == 1
+    g = sched.groups[0]
+    assert g.n_writebacks == 2 * workloads.REDUCED_DIMS.n_layers
+    assert g.writeback_s > 0
+    assert g.serial_s == pytest.approx(g.in_transfer_s + g.launch_s
+                                       + g.compute_s + g.writeback_s)
+    assert g.overlapped_s >= g.writeback_s    # never hidden under compute
+    # at home nothing ships back
+    home = make_schedule(prefill_graph, pure_plan(prefill_graph,
+                                                  "upmem_2556"))
+    assert all(grp.n_writebacks == 0 for grp in home.groups)
+
+
+# ------------------------------------------------------------------ #
+# schedule-aware objective (objective="overlapped")
+# ------------------------------------------------------------------ #
+
+def test_overlapped_objective_never_worse(prefill_graph, decode_dag,
+                                          mixed_graph):
+    """The acceptance inequality, at unit scale: the overlapped-objective
+    plan's Schedule.overlapped_s is never worse than scheduling the
+    serial-objective plan (the serial plan seeds the candidate set).
+    The full 20-graph sweep lives in tests/test_golden_plans.py."""
+    for g in (prefill_graph, decode_dag, mixed_graph):
+        serial = plan(g)
+        over = plan(g, objective="overlapped")
+        assert over.objective == "overlapped"
+        assert over.method.endswith("+overlap")
+        assert over.overlapped_s is not None
+        assert over.overlapped_s <= \
+            make_schedule(g, serial).overlapped_s + 1e-15
+        # and the returned score is the schedule's score for the plan
+        assert over.overlapped_s == pytest.approx(
+            make_schedule(g, evaluate(g, over.assignment)).overlapped_s)
+
+
+def test_objective_validation(prefill_graph):
+    with pytest.raises(ValueError, match="objective"):
+        plan(prefill_graph, objective="nope")
+    assert plan(prefill_graph).objective == "serial"
+
+
+# ------------------------------------------------------------------ #
 # scheduler
 # ------------------------------------------------------------------ #
 

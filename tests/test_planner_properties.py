@@ -11,10 +11,12 @@ tests pin it against brute-force enumeration over every placement:
   * greedy stays within an asserted bound of exact (the construction
     bounds per-node cost ratios, so the bound is structural, not luck).
 
-The generators emit nodes with KV-residency annotations too, so the
-migration term is exercised through every rung. A deterministic seeded
-sweep always runs; when `hypothesis` is installed the same properties are
-additionally fuzzed over its search space.
+The generators emit nodes with KV-residency annotations too — both the
+read side (`kv_bytes`/`kv_home`, decode attention) and the write-back
+side (`kv_write_bytes`/`kv_write_home`, prefill chunk attention) — so
+the full migration term is exercised through every rung. A deterministic
+seeded sweep always runs; when `hypothesis` is installed the same
+properties are additionally fuzzed over its search space.
 """
 
 from __future__ import annotations
@@ -47,6 +49,9 @@ def _rand_node(rng: random.Random, name: str) -> OpNode:
     if rng.random() < 0.3:
         node.meta.update(kv_bytes=rng.uniform(1e6, 1e8),
                          kv_home=rng.choice(DEVICES))
+    if rng.random() < 0.3:
+        node.meta.update(kv_write_bytes=rng.uniform(1e6, 1e8),
+                         kv_write_home=rng.choice(DEVICES))
     return node
 
 

@@ -79,17 +79,23 @@ def _run_16_steps(eng, prompts):
 
 
 def test_dispatch_decode_token_identical_to_jit(setup):
-    """The tentpole gate: routing decode through the offload planner's
-    plan (per-stage jit + BankGrid faces) must be a pure execution-layer
-    change — token-for-token identical to the fused-jit engine over a
-    continuous-batching run with arrivals and evictions."""
+    """The PR-2 tentpole gate: routing decode through the offload
+    planner's plan (per-stage jit + BankGrid faces) must be a pure
+    execution-layer change — token-for-token identical to the fused-jit
+    engine over a continuous-batching run with arrivals and evictions.
+    Prefill stays fused here (`prefill_engine="jit"`): decode-only
+    *bitwise* identity at the default bf16 is only observable when both
+    engines decode from bitwise-identical prefilled caches; the dispatch
+    prefill path has its own gate below, on the f32 model."""
     cfg, params = setup
     prompts = _prompts(cfg, 8, jax.random.PRNGKey(11))
     jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
     dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
-                          engine="dispatch")
+                          engine="dispatch",
+                          dispatch_kwargs={"prefill_engine": "jit"})
     assert dis_eng.dispatch_plan is not None
     assert dis_eng.dispatch_plan.method == "dag-dp"
+    assert dis_eng.prefill_plan is None
     jit_trace = _run_16_steps(jit_eng, prompts)
     dis_trace = _run_16_steps(dis_eng, prompts)
     assert jit_trace == dis_trace
@@ -106,9 +112,83 @@ def test_dispatch_decode_forced_hybrid_token_identical(setup, bank_grid):
     jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
     dis_eng = ServeEngine(
         cfg, params, batch_slots=2, max_len=48, shd=SHD, engine="dispatch",
-        dispatch_kwargs={"grid": bank_grid, "force_assignment": forced})
+        dispatch_kwargs={"grid": bank_grid, "force_assignment": forced,
+                         "prefill_engine": "jit"})
     assert dis_eng._decode.assignment["attn0"] == "upmem_2556"
     assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+# ------------------------------------------------------------------ #
+# dispatch-backed prefill (ISSUE-3): chunked planner-routed prefill
+# ------------------------------------------------------------------ #
+
+@pytest.fixture(scope="module")
+def setup_f32():
+    """The f32 model for prefill gates: the per-stage prefill is ulp-close
+    but not bitwise to the fused forward (stage boundaries change XLA
+    fusion), so the token gates run at f32 where the residual is ~1e-7 —
+    the same precedent as the two-bank decode gate (DESIGN.md §9)."""
+    import dataclasses
+    cfg = dataclasses.replace(REDUCED["granite-3-8b"], dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg, SHD)
+    return cfg, params
+
+
+def test_dispatch_prefill_decode_token_identical(setup_f32):
+    """The ISSUE-3 tentpole gate: with BOTH phases planner-routed —
+    chunked prefill over the prefill DAG (prompts span 1-3 chunks with
+    ragged tails at chunk=4) and decode over the decode DAG — the engine
+    matches the fused-jit engine token-for-token over a 16-step
+    continuous-batching run with mid-run arrivals and evictions."""
+    cfg, params = setup_f32
+    prompts = _prompts(cfg, 8, jax.random.PRNGKey(11))
+    assert max(int(p.shape[0]) for p in prompts) > 4   # multi-chunk runs
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
+                          engine="dispatch",
+                          dispatch_kwargs={"prefill_chunk": 4})
+    assert dis_eng.prefill_plan is not None
+    assert dis_eng.prefill_plan.objective == "overlapped"
+    assert dis_eng._prefill_step.n_chunks_planned == 4
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+def test_dispatch_prefill_forced_pim_token_identical(setup_f32, bank_grid):
+    """Force every prefill chunk's embed + attention onto the PIM face
+    (sequence-sharded BankGrid local phases) regardless of the planner's
+    pick — the hybrid chunked prefill must stay token-identical."""
+    cfg, params = setup_f32
+    prompts = _prompts(cfg, 6, jax.random.PRNGKey(13))
+    forced = {}
+    for c in range(4):
+        forced[f"embed/c{c}"] = "upmem_2556"
+        for i in range(cfg.n_blocks):
+            forced[f"attn{i}/c{c}"] = "upmem_2556"
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(
+        cfg, params, batch_slots=2, max_len=48, shd=SHD, engine="dispatch",
+        dispatch_kwargs={"grid": bank_grid, "prefill_chunk": 4,
+                         "prefill_force_assignment": forced})
+    assert dis_eng._prefill_step.assignment["attn0/c0"] == "upmem_2556"
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+def test_dispatch_prefill_plan_routes_chunks(setup_f32):
+    """The prefill plan covers every planned chunk's stage ladder, longer
+    prompts clamp onto the last planned chunk, and the ragged tail reuses
+    the chunk grid."""
+    cfg, params = setup_f32
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
+                      engine="dispatch",
+                      dispatch_kwargs={"prefill_chunk": 4})
+    step = eng._prefill_step
+    for c in range(step.n_chunks_planned):
+        for i in range(cfg.n_blocks):
+            for stage in ("qkv", "attn", "o", "mlp"):
+                assert f"{stage}{i}/c{c}" in step.assignment
+    assert "head" in step.assignment
+    assert step.chunk_splits(11) == [4, 4, 3]
+    assert step.chunk_splits(4) == [4]
 
 
 @pytest.mark.slow
@@ -146,7 +226,8 @@ def test_dispatch_decode_two_banks_token_identical():
         "outs = {}\n"
         "for name, kw in (('jit', {}), ('dispatch', dict(\n"
         "        engine='dispatch', dispatch_kwargs={'grid': grid,\n"
-        "        'force_assignment': forced}))):\n"
+        "        'force_assignment': forced,\n"
+        "        'prefill_engine': 'jit'}))):\n"
         "    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,\n"
         "                      shd=shd, **kw)\n"
         "    done = eng.serve([Request(i, p, 5)\n"
