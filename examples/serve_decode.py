@@ -18,7 +18,7 @@ plan is optimized under the schedule-aware `overlapped` objective
     PYTHONPATH=src python examples/serve_decode.py [--arch rwkv6-3b]
     PYTHONPATH=src python examples/serve_decode.py --engine dispatch
     PYTHONPATH=src python examples/serve_decode.py --engine dispatch \
-        --prefill-chunk 4
+        --prefill-chunk 4 --show-schedule
 """
 
 import argparse
@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="dispatch engine: tokens per prefill chunk "
                          "(default: one chunk per prompt)")
+    ap.add_argument("--show-schedule", action="store_true",
+                    help="dispatch engine: print the executed timeline — "
+                         "the launch groups the unified executor walks, "
+                         "with serial/overlapped/pipelined wall-clocks")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=True)
@@ -69,10 +73,30 @@ def main():
               + ", ".join(f"{d}:{n}" for d, n in sorted(devs.items()))
               + f"; modeled {p.total_s * 1e3:.2f}ms/step at serving dims")
 
+    def show_schedule(tag, step):
+        from repro.dispatch.placement import evaluate
+        from repro.dispatch.schedule import make_schedule
+        # cost the executor's OWN assignment (includes any forced
+        # overrides), so the timeline shown is the timeline executed
+        sched = make_schedule(
+            step.dag, evaluate(step.dag, step.executor.assignment),
+            pipelined=True)
+        print(f"\n{tag} executed timeline (the launch groups the unified "
+              "executor walks, in order):")
+        print(sched.render(max_groups=8))
+        groups = step.executor.executed_order()
+        run = " -> ".join(f"{dev}:{len(nodes)}" for dev, nodes in groups[:10])
+        more = f" -> ... (+{len(groups) - 10} groups)" if len(groups) > 10 \
+            else ""
+        print(f"  executed group order: {run}{more}")
+
     if engine.dispatch_plan is not None:
         show("decode", engine.dispatch_plan)
     if engine.prefill_plan is not None:
         show("prefill", engine.prefill_plan)
+    if args.show_schedule and args.engine == "dispatch":
+        show_schedule("decode", engine._decode)
+        show_schedule("prefill", engine._prefill_step)
 
     key = jax.random.PRNGKey(1)
     reqs = []

@@ -19,9 +19,17 @@ turns the one-shot analyses of `repro.core` into an end-to-end pipeline:
     schedule   coalesce consecutive PIM stages into one launch, batch
                parallel transfers, overlap compute with transfers (the
                GPU<->DPU host-relay hop and KV write-backs stay
-               serialized)
-    runtime    execute a plan in JAX: PIM stages as BankGrid local/exchange
-               phases, host stages under plain jit, validated vs reference
+               serialized); two execution disciplines over one timeline:
+               serial groups (`overlapped_s`) and the dependency-aware
+               pipeline (`pipelined_s`, `make_schedule(...,
+               pipelined=True)`)
+    executor   the ONE execution loop for any plan: walk the Schedule's
+               launch groups in timeline order — host stages per-kind
+               jits, PIM stages BankGrid faces, boundary tensors staged
+               ahead of each PIM group (double-buffered slots)
+    runtime    execute a chain Pipeline in JAX: PIM stages as BankGrid
+               local/exchange phases, host stages under plain jit,
+               validated vs reference
     workloads  mixed PrIM pipelines + the LM decode chain/DAG + the
                chunked prefill DAG as dispatchable pipelines/graphs
 
@@ -41,5 +49,6 @@ from .placement import (DEVICES, Plan, compare_plans, greedy_plan,
                         kv_migration_time, node_time, placed_time, plan,
                         pure_plan, transfer_hops, transfer_time)
 from .schedule import LaunchGroup, Schedule, make_schedule
+from .executor import FaceCache, PlanExecutor, StageDef
 from .runtime import Pipeline, Stage, bank_face, execute, reference
 from . import workloads

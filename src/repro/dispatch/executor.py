@@ -1,0 +1,224 @@
+"""Unified plan executor: run the planner's Schedule, not a serial loop.
+
+The planner chooses a `Plan`, the scheduler turns it into a `Schedule`
+timeline of launch groups — and until this module existed, the serving
+steps ignored both and re-ran their own private serial stage loops, so
+the overlap the planner optimized (`Schedule.overlapped_s`) never shaped
+what actually executed. `PlanExecutor` closes that gap: it is the ONE
+execution loop for any plan over any operator DAG, and it walks the
+schedule's launch groups in timeline order.
+
+Three pieces:
+
+  * `StageDef` — one stage *kind* (e.g. `"qkv"`): the host body plus the
+    per-argument/per-output bank-shard axes that define its PIM face
+    (`None` replicates — weights, the KV prefix; an integer shards that
+    axis over banks — decode shards batch slots on axis 0, prefill shards
+    a chunk's token rows on axis 1).
+  * `FaceCache` — compiled faces per kind, shared across executors: host
+    faces are per-stage jits (one trace per kind, all layers/chunks share
+    it), PIM faces are jitted `shard_map` local phases over the BankGrid
+    (built lazily — grid lowering). Sharing the cache is what keeps a
+    ragged prompt's per-split executors from re-tracing every stage.
+  * `PlanExecutor` — binds a graph + assignment to the `Schedule` group
+    timeline and runs it: for each group, consume staged inputs, dispatch
+    every member stage on the group's device, then *stage the next
+    group's boundary tensors* (`LaunchGroup.in_producers`) while this
+    group's async dispatch is still in flight — the batched transfer
+    issued ahead of the group that consumes it, double-buffered through
+    two staging slots whose previous buffers are dropped (donated) on
+    reuse. Relay hops and KV write-backs keep the serialization
+    `schedule.py` books for them — the executor never reorders nodes
+    across their graph dependencies, it only follows the timeline.
+
+The caller supplies a `bind(name, env)` callback mapping a node name and
+the environment of prior results to the stage's argument tuple — that is
+the whole workload-specific surface, which is why
+`serve.dispatch_engine`'s decode and prefill steps are thin adapters over
+this module (DESIGN.md §11). Executing the timeline is a pure
+reordering of independent stages, so results are bitwise identical to
+any serial execution of the same faces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..core.bank_parallel import BankGrid
+from .graph import OpGraph
+from .placement import Plan
+from .schedule import Schedule, make_schedule
+from .workloads import stage_kind
+
+
+@dataclasses.dataclass(frozen=True)
+class StageDef:
+    """One executable stage kind: host body + PIM-face shard axes.
+
+    `arg_banks` / `out_banks` give, per argument / per output, the axis
+    that shards over the BankGrid's banks (`None` replicates). The PIM
+    face is usable for a call only when every sharded argument's axis
+    length divides the bank count — otherwise the executor falls back to
+    the host face (ragged prefill tails)."""
+    kind: str
+    fn: Callable
+    arg_banks: tuple[int | None, ...]
+    out_banks: tuple[int | None, ...]
+
+    @property
+    def n_out(self) -> int:
+        """Number of outputs the stage body returns."""
+        return len(self.out_banks)
+
+
+def _axis_spec(axis: int | None, grid: BankGrid) -> P:
+    """PartitionSpec placing the bank axis at `axis` (None = replicate)."""
+    if axis is None:
+        return P()
+    return P(*([None] * axis + [grid.axis]))
+
+
+class FaceCache:
+    """Compiled per-kind stage faces, shared across `PlanExecutor`s.
+
+    Host faces are plain per-stage jits; PIM faces are jitted BankGrid
+    local phases built from the `StageDef`'s shard axes. One cache per
+    serving step keeps distinct prompt shapes from re-tracing stages."""
+
+    def __init__(self, stages: Sequence[StageDef], grid: BankGrid):
+        self.grid = grid
+        self.stages = {s.kind: s for s in stages}
+        self._host = {k: jax.jit(s.fn) for k, s in self.stages.items()}
+        self._pim: dict[str, Callable] = {}      # lazy: grid lowering
+
+    def host(self, kind: str) -> Callable:
+        """The jitted host face for a stage kind."""
+        return self._host[kind]
+
+    def pim(self, kind: str) -> Callable:
+        """The jitted bank-parallel face for a stage kind (built lazily)."""
+        if kind not in self._pim:
+            s = self.stages[kind]
+            in_specs = tuple(_axis_spec(a, self.grid) for a in s.arg_banks)
+            out = tuple(_axis_spec(a, self.grid) for a in s.out_banks)
+            out_specs = out if s.n_out > 1 else out[0]
+            self._pim[kind] = jax.jit(self.grid.local(
+                s.fn, in_specs=in_specs, out_specs=out_specs))
+        return self._pim[kind]
+
+    def pim_ok(self, kind: str, args: tuple) -> bool:
+        """True when every bank-sharded argument axis divides the bank
+        count — the predicate for routing a call to the PIM face."""
+        n = self.grid.n_banks
+        for arg, axis in zip(args, self.stages[kind].arg_banks):
+            if axis is None:
+                continue
+            for leaf in jax.tree.leaves(arg):
+                if leaf.shape[axis] % n:
+                    return False
+        return True
+
+
+class PlanExecutor:
+    """Execute a placement over an operator DAG in Schedule timeline order.
+
+    Built once per (graph, assignment): the timeline is
+    `make_schedule`'s launch-group sequence for the (possibly
+    force-overridden) assignment, so the executed group order is exactly
+    the order the golden schedules pin. `run(bind)` walks it; `bind`
+    supplies each node's argument tuple from the environment of already-
+    computed results."""
+
+    def __init__(self, graph: OpGraph, assignment: dict[str, str],
+                 faces: FaceCache, *, kind_of: Callable[[str], str]
+                 = stage_kind, source: str = "xeon", sink: str = "xeon"):
+        self.graph = graph
+        self.assignment = dict(assignment)
+        self.faces = faces
+        self.kind_of = kind_of
+        missing = [n for n in graph.nodes
+                   if kind_of(n) not in faces.stages]
+        if missing:
+            raise ValueError(f"no StageDef for nodes {sorted(missing)[:6]}; "
+                             "stage kinds drifted from the DAG's node names")
+        stub = Plan(graph_name=graph.name, assignment=self.assignment,
+                    method="executor", total_s=0.0, compute_s=0.0,
+                    transfer_s=0.0, launch_s=0.0, node_s={})
+        self.schedule: Schedule = make_schedule(graph, stub, source=source,
+                                                sink=sink)
+        self.timeline = [(g.device, tuple(g.nodes), tuple(g.in_producers))
+                         for g in self.schedule.groups]
+        # last group that reads each node's output (its own group for
+        # leaves): run() frees dead entries past this point, keeping the
+        # live environment at the serial loops' O(frontier) footprint
+        member = {n: k for k, (_, nodes, _) in enumerate(self.timeline)
+                  for n in nodes}
+        self._dead_after: list[list[str]] = [[] for _ in self.timeline]
+        for n, succs in graph.succs.items():
+            last = max((member[s] for s in succs), default=member[n])
+            self._dead_after[last].append(n)
+
+    def executed_order(self) -> list[tuple[str, list[str]]]:
+        """The (device, member nodes) launch groups in execution order —
+        the contract the golden schedules pin against executor drift."""
+        return [(dev, list(nodes)) for dev, nodes, _ in self.timeline]
+
+    def devices_used(self) -> dict[str, str]:
+        """Node name -> device name the executor routes it through."""
+        return dict(self.assignment)
+
+    def _dispatch(self, name: str, device: str, args: tuple) -> Any:
+        kind = self.kind_of(name)
+        if device.startswith("upmem") and self.faces.pim_ok(kind, args):
+            return self.faces.pim(kind)(*args)
+        return self.faces.host(kind)(*args)
+
+    def _stage_in(self, producers: tuple[str, ...], env: dict,
+                  slot: dict) -> None:
+        """Issue the next group's boundary transfers into a staging slot:
+        producer outputs are placed replicated over the grid mesh (the
+        batched host->bank push) while the current group's async dispatch
+        is still in flight. Clearing the slot first drops the previous
+        round's buffers — the double-buffer donation."""
+        slot.clear()
+        placement = self.faces.grid.replicated()
+        for p in producers:
+            if p in env:
+                slot[p] = jax.tree.map(
+                    lambda x: jax.device_put(x, placement), env[p])
+
+    def run(self, bind: Callable[[str, dict], tuple],
+            env: dict | None = None,
+            keep: Iterable[str] = ()) -> dict:
+        """Execute every launch group in timeline order; returns the
+        environment mapping node name -> stage output(s). `bind(name,
+        env)` must return the argument tuple for `name`'s stage kind —
+        the only workload-specific logic. Entries are freed once their
+        last GRAPH-EDGE consumer's group has dispatched (the serial
+        loops' live-set footprint) — so `bind` may only read a node's
+        edge-declared predecessors from `env`; any off-graph read (e.g.
+        rotary tables every layer re-reads) and every output the caller
+        reads after the run (a KV assembly, the head's logits) must be
+        pinned by name in `keep`."""
+        env = dict(env or {})
+        keep = set(keep)
+        staging: list[dict] = [{}, {}]           # double-buffered slots
+        for k, (device, nodes, _) in enumerate(self.timeline):
+            for p, v in staging[k % 2].items():
+                env[p] = v                       # consume staged inputs
+            for name in nodes:
+                env[name] = self._dispatch(name, device, bind(name, env))
+            if k + 1 < len(self.timeline):
+                nxt_dev, _, nxt_producers = self.timeline[k + 1]
+                if nxt_dev.startswith("upmem"):
+                    self._stage_in(nxt_producers, env, staging[(k + 1) % 2])
+                else:
+                    staging[(k + 1) % 2].clear()
+            for name in self._dead_after[k]:
+                if name not in keep:
+                    env.pop(name, None)
+        return env

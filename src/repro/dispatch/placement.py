@@ -31,8 +31,12 @@ Two objectives (the `objective` knob of `plan`): `"serial"` minimizes the
 additive end-to-end sum `evaluate` computes — the ladder below is exact
 for it; `"overlapped"` scores candidates by the scheduler's modeled
 wall-clock (`Schedule.overlapped_s`: batched transfers double-buffered
-under group compute, relay hops pinned serial) via a deterministic
-local search seeded with the serial plan (DESIGN.md §10).
+under group compute, relay hops pinned serial). For CHAIN graphs the
+overlapped objective is planned *exactly* by a DP over launch-group
+aggregates (`_plan_chain_overlapped_dp`, method `"dp-overlap"` — the
+group boundary resets the overlap max()'s running sums, restoring the
+decomposition); general DAGs fall to a deterministic local search seeded
+with the serial plan (DESIGN.md §10-§11).
 
 Planner ladder (each rung exact for its class, the next a fallback):
 
@@ -315,15 +319,20 @@ def plan(graph: OpGraph, devices: Iterable[str] = ("xeon", "upmem_2556"),
     `objective="overlapped"` scores candidate plans by the *scheduler's*
     modeled wall-clock instead — `Schedule.overlapped_s`, which credits
     batched parallel transfers double-buffering under each launch group's
-    compute (relay hops and KV write-backs stay serialized). The serial
-    ladder's plan seeds a deterministic coordinate-descent search over
-    single-node device moves, so the returned plan's `overlapped_s` is
-    never worse than scheduling the serial-objective plan (pinned in
+    compute (relay hops and KV write-backs stay serialized). Chains are
+    planned exactly (DP over launch-group aggregates, method
+    `"dp-overlap"`); elsewhere the serial ladder's plan seeds a
+    deterministic coordinate-descent search over single-node device
+    moves, so the returned plan's `overlapped_s` is never worse than
+    scheduling the serial-objective plan (pinned in
     tests/test_golden_plans.py)."""
     if objective not in ("serial", "overlapped"):
         raise ValueError(f"objective must be 'serial' or 'overlapped', "
                          f"got {objective!r}")
     devices, dpu = _resolve(devices)
+    if objective == "overlapped" and graph.is_chain:
+        # exact rung: the serial ladder's assignment would be discarded
+        return _plan_chain_overlapped_dp(graph, devices, dpu, source, sink)
     if graph.is_chain:
         assignment = _plan_chain_dp(graph, devices, dpu, source, sink)
         method = "dp"
@@ -629,6 +638,102 @@ def _refine_overlapped(graph: OpGraph, seed: dict[str, str],
                  method=f"{method}+overlap")
     p.objective = "overlapped"
     p.overlapped_s = best_s
+    return p
+
+
+def _plan_chain_overlapped_dp(graph: OpGraph, devices: tuple[str, ...],
+                              dpu: DPUModel | None, source: str,
+                              sink: str) -> Plan:
+    """EXACT overlapped-objective planning for chain graphs: DP over
+    launch-group aggregates.
+
+    The overlap `max(compute, transfer - relay)` couples every operator
+    inside a launch group, which is what breaks the serial chain DP
+    (its per-position state cannot carry an unbounded group's running
+    sums). But a *group boundary* resets those sums — so for a chain the
+    DP can walk group extents instead of single nodes: `best[j][d]` is
+    the cheapest schedule of the first `j` operators whose last group
+    runs on `d`, and a transition extends a candidate group `[i, j)` on
+    `d != p` one node at a time, maintaining the group's aggregates
+    (compute, batched-transfer payload + per-channel setups, relay,
+    KV write-backs) in O(1) — exactly the algebra `make_schedule` books
+    per `LaunchGroup`, so the DP's objective IS `Schedule.overlapped_s`
+    (asserted in tests against both the scheduler and brute force).
+    O(n^2 * |devices|^2) over the chain length; method `"dp-overlap"`."""
+    # local import: schedule imports placement (same pattern as
+    # _overlapped_score)
+    from .schedule import TRANSFER_SETUP_S
+    order = graph.chain()
+    n = len(order)
+    INF = float("inf")
+    # best[j]: device of the group ending at j-1 -> (cost, back-pointer);
+    # the back-pointer is (group start i, previous group's device)
+    best: list[dict[str | None, float]] = [{} for _ in range(n + 1)]
+    back: list[dict[str | None, tuple[int, str | None]]] = \
+        [{} for _ in range(n + 1)]
+    best[0] = {None: 0.0}
+    for i in range(n):                     # group start position
+        for p, base in best[i].items():
+            if i and p is None:
+                continue
+            for d in devices:
+                if d == p:                 # maximal runs: groups alternate
+                    continue
+                compute = payload = relay = wb = 0.0
+                srcs: set[str] = set()
+                n_wb = 0
+                if i == 0:
+                    if graph.input_bytes and d != source:
+                        payload += transfer_time(source, d,
+                                                 graph.input_bytes, dpu)
+                        relay += transfer_hops(source, d,
+                                               graph.input_bytes, dpu)[0]
+                        srcs.add(source)
+                else:
+                    prev = graph.nodes[order[i - 1]]
+                    payload += transfer_time(p, d, prev.out_bytes, dpu)
+                    relay += transfer_hops(p, d, prev.out_bytes, dpu)[0]
+                    srcs.add(p)
+                launch = launch_overhead(d, dpu)
+                for j in range(i, n):      # extend the group to order[j]
+                    node = graph.nodes[order[j]]
+                    compute += node_time(node, d, dpu)
+                    kv_b = float(node.meta.get("kv_bytes") or 0.0)
+                    kv_h = node.meta.get("kv_home")
+                    if kv_b and kv_h and kv_h != d:
+                        payload += transfer_time(kv_h, d, kv_b, dpu)
+                        relay += transfer_hops(kv_h, d, kv_b, dpu)[0]
+                        srcs.add(kv_h)
+                    wb_b = float(node.meta.get("kv_write_bytes") or 0.0)
+                    wb_h = node.meta.get("kv_write_home")
+                    if wb_b and wb_h and wb_h != d:
+                        wb += transfer_time(d, wb_h, wb_b, dpu)
+                        n_wb += 1
+                    in_transfer = len(srcs) * TRANSFER_SETUP_S + payload
+                    group_s = relay + max(compute, in_transfer - relay) \
+                        + launch + wb + (TRANSFER_SETUP_S if n_wb else 0.0)
+                    c = base + group_s
+                    if c < best[j + 1].get(d, INF):
+                        best[j + 1][d] = c
+                        back[j + 1][d] = (i, p)
+    last = graph.nodes[order[-1]]
+    final: dict[str, float] = {}
+    for d, c in best[n].items():
+        t = transfer_time(d, sink, last.out_bytes, dpu)
+        final[d] = c + (t + TRANSFER_SETUP_S if t else 0.0)
+    d = min(sorted(final), key=final.get)
+    score = final[d]
+    assignment: dict[str, str] = {}
+    pos = n
+    while pos > 0:
+        i, p = back[pos][d]
+        for k in range(i, pos):
+            assignment[order[k]] = d
+        pos, d = i, p
+    p = evaluate(graph, {m: assignment[m] for m in order}, dpu, source,
+                 sink, method="dp-overlap")
+    p.objective = "overlapped"
+    p.overlapped_s = score
     return p
 
 

@@ -1,4 +1,11 @@
-"""Hybrid dispatch runtime: execute a placement plan in JAX.
+"""Hybrid dispatch runtime for chain pipelines: execute a plan in JAX.
+
+This module executes CHAIN-shaped workloads (`Pipeline`: the mixed PrIM
+chain, the decode chain) stage-by-stage. Operator-DAG workloads — the
+serving decode/prefill DAGs — execute through the unified plan executor
+instead (`dispatch.executor.PlanExecutor`), which walks the scheduler's
+launch-group timeline; `bank_face` here is the leading-axis (batch)
+special case of the `StageDef` shard-axis faces that executor builds.
 
 A `Pipeline` is a chain of `Stage`s, each with two executable faces:
 

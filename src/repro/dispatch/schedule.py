@@ -30,6 +30,21 @@ rows written off their home device (a prefill chunk's attention,
 `graph.annotate_kv_write`) ship back as one batched transfer serialized
 after the group — later chunks read them from the home, so the write-back
 can never hide under this group's compute.
+
+Two execution disciplines are modeled over the same group timeline:
+
+  * **serial groups** (`total_s` / `overlapped_s`) — groups run one after
+    another, each paying its own (optionally overlapped) cost; this is
+    what a serial stage loop over the plan costs.
+  * **pipelined groups** (`pipelined_s`, `make_schedule(...,
+    pipelined=True)`) — a dependency-aware event simulation: each device
+    is a serial resource, all host<->device traffic shares one transfer
+    channel, a group starts when its crossing producers are done (and,
+    for KV readers, when the rows they read have landed at their home —
+    `meta["kv_writers"]`), and KV write-backs occupy only the channel, so
+    later groups' compute runs under them. This is the discipline
+    `dispatch.executor.PlanExecutor` executes, and the number
+    `benchmarks/dispatch_bench.py` reports against the serial chunk loop.
 """
 
 from __future__ import annotations
@@ -63,6 +78,13 @@ class LaunchGroup:
     relay_s: float = 0.0              # host-relay hop of GPU<->DPU inputs
     writeback_s: float = 0.0          # KV rows shipped back to their home
     n_writebacks: int = 0             # member nodes writing KV off-home
+    #: producer node names whose tensors cross into this group — what the
+    #: executor stages ahead of the group (the batched input transfer)
+    in_producers: list[str] = dataclasses.field(default_factory=list)
+    #: (member node, seconds) of each off-home KV write-back, in member
+    #: order — the pipelined simulation issues them as the node finishes
+    node_writebacks: list[tuple[str, float]] = dataclasses.field(
+        default_factory=list, repr=False)
 
     @property
     def serial_s(self) -> float:
@@ -96,6 +118,8 @@ class Schedule:
     total_s: float                    # batched, serial groups
     overlapped_s: float               # batched + intra-group overlap
     unbatched_s: float                # per-tensor transfers (the bad API)
+    pipelined_s: float | None = None  # dependency-aware group pipeline
+                                      # (make_schedule(..., pipelined=True))
 
     @property
     def n_launches(self) -> int:
@@ -104,9 +128,11 @@ class Schedule:
 
     def render(self, max_groups: int = 12) -> str:
         """Multi-line human-readable timeline (ms totals, per-group rows)."""
+        pipe = ("" if self.pipelined_s is None
+                else f"pipelined={self.pipelined_s * 1e3:.3f}ms  ")
         lines = [f"schedule[{self.graph_name}] {self.n_launches} launch "
                  f"group(s): total={self.total_s * 1e3:.3f}ms  "
-                 f"overlapped={self.overlapped_s * 1e3:.3f}ms  "
+                 f"overlapped={self.overlapped_s * 1e3:.3f}ms  {pipe}"
                  f"(unbatched transfers would be "
                  f"{self.unbatched_s * 1e3:.3f}ms)"]
         shown = self.groups[:max_groups]
@@ -125,15 +151,30 @@ class Schedule:
 
 
 def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
-                  source: str = "xeon", sink: str = "xeon") -> Schedule:
+                  source: str = "xeon", sink: str = "xeon", *,
+                  pipelined: bool = False,
+                  order: list[str] | None = None) -> Schedule:
     """Group a plan's topological order into launch groups and model the
     batched/overlapped timeline. `source`/`sink` must match the ones the
-    plan was evaluated with for the two totals to correspond."""
+    plan was evaluated with for the two totals to correspond. With
+    `pipelined=True` the dependency-aware event simulation also runs and
+    fills `Schedule.pipelined_s` (off by default: the overlapped-objective
+    coordinate descent calls this many times per plan). `order` costs an
+    alternative linearization (must be a valid topological order of
+    `graph`) — how `benchmarks/dispatch_bench.py` prices the old
+    chunk-serial prefill loop against the executor's pipelined timeline."""
     pim_dev = next((d for d in plan.assignment.values()
                     if d.startswith("upmem")), None)
     dpu = dpu or (_DPU_SYSTEMS[pim_dev] if pim_dev else UPMEM_2556)
-    order = graph.topo_order()
     preds = graph.preds
+    if order is None:
+        order = graph.topo_order()
+    else:                               # an invalid linearization would
+        pos = {n: i for i, n in enumerate(order)}   # silently mis-group
+        if len(order) != len(graph.nodes) or set(pos) != set(graph.nodes) \
+                or any(pos[p] >= pos[n] for n in order for p in preds[n]):
+            raise ValueError(f"order is not a topological order of "
+                             f"{graph.name}")
 
     groups: list[LaunchGroup] = []
     members: dict[str, int] = {}      # node -> group index
@@ -163,6 +204,7 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                 if members[p] != gi and plan.assignment[p] != g.device \
                         and p not in entered:
                     entered.add(p)
+                    g.in_producers.append(p)
                     crossing.append((plan.assignment[p],
                                      graph.nodes[p].out_bytes))
             meta = graph.nodes[n].meta
@@ -178,9 +220,10 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
             wb_bytes = float(meta.get("kv_write_bytes") or 0.0)
             wb_home = meta.get("kv_write_home")
             if wb_bytes and wb_home and wb_home != g.device:
-                g.writeback_s += transfer_time(g.device, wb_home, wb_bytes,
-                                               dpu)
+                wb_s = transfer_time(g.device, wb_home, wb_bytes, dpu)
+                g.writeback_s += wb_s
                 g.n_writebacks += 1
+                g.node_writebacks.append((n, wb_s))
         if g.n_writebacks:
             g.writeback_s += TRANSFER_SETUP_S
         if gi == 0 and graph.input_bytes and g.device != source:
@@ -211,6 +254,84 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                     + g.writeback_s
                     + max(g.n_writebacks - 1, 0) * TRANSFER_SETUP_S
                     for g in groups) + out_transfer
-    return Schedule(graph_name=graph.name, groups=groups,
-                    out_transfer_s=out_transfer, total_s=total,
-                    overlapped_s=overlapped, unbatched_s=unbatched)
+    sched = Schedule(graph_name=graph.name, groups=groups,
+                     out_transfer_s=out_transfer, total_s=total,
+                     overlapped_s=overlapped, unbatched_s=unbatched)
+    if pipelined:
+        sched.pipelined_s = _pipelined_total(graph, plan, groups, dpu, sink)
+    return sched
+
+
+def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
+                     dpu: DPUModel | None, sink: str) -> float:
+    """Event-simulate the group timeline with pipelined resources.
+
+    Resources: every device is a serial executor (groups on it run in
+    timeline order), and all host<->device traffic — batched group inputs,
+    KV write-backs, the final retrieve — shares ONE transfer channel (all
+    DPU traffic relays through the host, Takeaway 3). A group's batched
+    input transfer starts once its crossing producers have finished and
+    the channel is free; the relay hop is still serialized in front of the
+    group and the final hop still double-buffers under the group's compute
+    (the same per-group algebra as `LaunchGroup.overlapped_s`). KV
+    write-backs are issued as each writing member finishes and occupy only
+    the channel — the device moves on to its next group, which is what
+    lets chunk i+1's qkv ladder run under chunk i's write-back. A KV
+    *reader* (a node whose `meta["kv_writers"]` names earlier writers)
+    cannot start its group before those writers' rows have landed at the
+    home. Returns the makespan in seconds; never exceeds the serial-group
+    `overlapped_s` total (the serial timeline is this event system with
+    every resource globally serialized)."""
+    done: dict[str, float] = {}
+    wb_done: dict[str, float] = {}
+    dev_free: dict[str, float] = {}
+    chan_free = 0.0
+    member = {n: gi for gi, g in enumerate(groups) for n in g.nodes}
+    for gi, g in enumerate(groups):
+        ready = 0.0
+        for p in g.in_producers:
+            ready = max(ready, done[p])
+        for n in g.nodes:
+            for w in graph.nodes[n].meta.get("kv_writers", ()):
+                if member[w] == gi:    # same-group writers stay local
+                    continue
+                if w in wb_done:       # rows shipped back to the home
+                    ready = max(ready, wb_done[w])
+                elif w in done:        # writer ran AT the home: no ship
+                    ready = max(ready, done[w])
+                else:                  # reader scheduled before writer —
+                    raise ValueError(  # a physically impossible timeline
+                        f"{n} reads KV rows of {w}, which the timeline "
+                        "has not executed yet")
+        if g.in_transfer_s:
+            tx_start = max(chan_free, ready)
+            chan_free = tx_start + g.in_transfer_s
+            start = max(dev_free.get(g.device, 0.0),
+                        tx_start + g.relay_s)
+        else:
+            start = max(dev_free.get(g.device, 0.0), ready)
+        compute_start = start + g.launch_s
+        span = max(g.compute_s, g.in_transfer_s - g.relay_s)
+        dev_free[g.device] = compute_start + span
+        # member finish times stretch over the overlap window so the last
+        # member lands exactly at the group end (the serial-group algebra)
+        cum = 0.0
+        for n in g.nodes:
+            cum += node_time(graph.nodes[n], g.device, dpu)
+            frac = cum / g.compute_s if g.compute_s else 1.0
+            done[n] = compute_start + frac * span
+        first_wb = True
+        for n, wb_s in g.node_writebacks:
+            wb_start = max(chan_free, done[n])
+            chan_free = wb_start + wb_s \
+                + (TRANSFER_SETUP_S if first_wb else 0.0)
+            first_wb = False
+            wb_done[n] = chan_free
+    succs = graph.succs
+    for leaf in (n for n in graph.topo_order() if not succs[n]):
+        t = transfer_time(plan.assignment[leaf], sink,
+                          graph.nodes[leaf].out_bytes, dpu)
+        if t:
+            chan_free = max(chan_free, done[leaf]) + t + TRANSFER_SETUP_S
+    return max([chan_free] + list(dev_free.values())
+               + list(wb_done.values()) + list(done.values()))

@@ -395,6 +395,47 @@ def _attend_prefill(qkv, kq, vq, dims: DecodeDims, t: int, q0: int):
 
 
 
+def parse_stage_name(name: str) -> tuple[str, int | None, int | None]:
+    """Split a planner/executor stage name into (kind, layer, chunk).
+
+    The routing contract between DAG builders and the serving steps:
+    decode names are `"{kind}{layer}"` (`"qkv3"` -> `("qkv", 3, None)`),
+    prefill names append the chunk (`"attn2/c1"` -> `("attn", 2, 1)`),
+    and the unnumbered stages parse as `("embed", None, ...)` /
+    `("head", None, None)`."""
+    base, _, c = name.partition("/c")
+    kind = base.rstrip("0123456789")
+    layer = int(base[len(kind):]) if len(base) > len(kind) else None
+    return kind, layer, (int(c) if c else None)
+
+
+def stage_kind(name: str) -> str:
+    """The stage *kind* of a planner/executor node name (`"qkv3/c1"` ->
+    `"qkv"`) — the key into the executor's per-kind stage library."""
+    return parse_stage_name(name)[0]
+
+
+def prefill_serial_order(graph: OpGraph) -> list[str]:
+    """The chunk-major linearization of a prefill DAG's nodes — chunk 0's
+    full ladder, then chunk 1's, ... — i.e. the strictly serial chunk
+    loop the dispatch prefill executed before the unified executor.
+    Derived from the graph itself (a stable sort of its topological
+    order by chunk index, un-chunked nodes like the head last), so it
+    can never drift from the builder's node names. A valid topological
+    order: intra-chunk relative order is preserved and cross-chunk edges
+    only ever point to later chunks. Used by
+    `benchmarks/dispatch_bench.py` as the baseline
+    `make_schedule(..., order=...)` prices the pipelined timeline
+    against."""
+    order = graph.topo_order()
+    pos = {n: i for i, n in enumerate(order)}
+
+    def key(name):
+        chunk = parse_stage_name(name)[2]
+        return (chunk if chunk is not None else len(order), pos[name])
+    return sorted(order, key=key)
+
+
 def prefill_chunk_splits(s_len: int, chunk: int) -> list[int]:
     """Chunk lengths a `s_len`-token prompt is processed in: full `chunk`
     slices plus a possibly ragged tail. The single source of truth for
@@ -413,8 +454,8 @@ def prefill_chunk_splits(s_len: int, chunk: int) -> list[int]:
 
 def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
                 prefill_len: int | None = None, chunk: int | None = None,
-                batch: int = 1,
-                kv_home: str | None = "upmem_2556") -> OpGraph:
+                batch: int = 1, kv_home: str | None = "upmem_2556",
+                costed: bool = True) -> OpGraph:
     """Chunked prefill as the operator DAG the serving planner consumes.
 
     The prompt (`prefill_len` tokens, default `dims.seq`) is split into
@@ -440,7 +481,15 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
     Planner note: the cross-chunk fan-in widens the topological frontier
     to ~2*n_chunks+1, so DAGs beyond 2 chunks typically exceed the
     frontier DP's default state budget and fall to branch-and-bound —
-    the ladder behaves as designed (DESIGN.md §10)."""
+    the ladder behaves as designed (DESIGN.md §10).
+
+    `costed=False` builds the same node names / edges / insertion order
+    with zero-cost nodes and no stage compilation — the structural
+    skeleton `dispatch.executor.PlanExecutor` groups a ragged prompt's
+    execution timeline from (DESIGN.md §11). Attention readers also carry
+    `meta["kv_writers"]` (the earlier same-layer chunks' attention names):
+    the pipelined timeline may not start a reader before those writers'
+    KV write-backs have landed at the home."""
     d = dims
     S_len = prefill_len if prefill_len is not None else d.seq
     c_len = chunk if chunk is not None else max(1, -(-S_len // 4))
@@ -476,8 +525,12 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
     protos: dict[tuple, OpNode] = {}
 
     def proto(kind, key, build):
+        if not costed:                 # structural skeleton: names/edges
+            key = "struct"             # only, no stage compilation
         if (kind, key) not in protos:
-            protos[(kind, key)] = build()
+            protos[(kind, key)] = build() if costed else OpNode(
+                name=kind, kind=kind, flops=0.0, hbm_bytes=0.0,
+                out_bytes=0.0)
         src = protos[(kind, key)]
         return dataclasses.replace(src, ops=dict(src.ops),
                                    meta=dict(src.meta))
@@ -520,6 +573,11 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
             if kv_home is not None:
                 if c0:
                     annotate_kv_residency(attn, kv_row_bytes * c0, kv_home)
+                    # the rows this chunk reads from the home were written
+                    # by the earlier chunks' attention — the pipelined
+                    # timeline waits for their write-backs to land
+                    attn.meta["kv_writers"] = [f"attn{i}/c{j}"
+                                               for j in range(c)]
                 annotate_kv_write(attn, kv_row_bytes * t, kv_home)
 
             node = proto("o", t, lambda: node_from_fn(
@@ -536,9 +594,11 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
             c0 += t
     t_last = splits[-1]
     x_last = S((batch * t_last, dm), f32)
-    g.add(node_from_fn("head", f_head, x_last, whead, kind="gemv_head",
-                       exchange_bytes=float(batch * t_last * d.vocab * 4)),
-          res[-1])
+    head = (node_from_fn("head", f_head, x_last, whead, kind="gemv_head",
+                         exchange_bytes=float(batch * t_last * d.vocab * 4))
+            if costed else OpNode(name="head", kind="gemv_head", flops=0.0,
+                                  hbm_bytes=0.0, out_bytes=0.0))
+    g.add(head, res[-1])
     return g
 
 

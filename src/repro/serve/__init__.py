@@ -4,9 +4,12 @@ Two backends share the continuous-batching loop: the fused-jit steps
 (`engine="jit"`, default) and the dispatch-backed steps
 (`engine="dispatch"`) that route every operator-DAG stage to the device
 the offload planner chose (`serve.dispatch_engine`). Under dispatch BOTH
-serving phases flow through the planner: decode over
-`dispatch.workloads.decode_dag` and prefill chunked over
-`dispatch.workloads.prefill_dag` (DESIGN.md §9-§10). Device names follow
+serving phases flow through the planner — decode over
+`dispatch.workloads.decode_dag`, prefill chunked over
+`dispatch.workloads.prefill_dag` — and both execute through the unified
+plan executor (`dispatch.executor.PlanExecutor`), which walks the
+schedule's launch groups in timeline order and pipelines chunked prefill
+across chunks (DESIGN.md §9-§11). Device names follow
 `dispatch.placement.DEVICES` (`"xeon"`, `"titan_v"`, `"upmem_2556"`,
 `"upmem_640"`); all modeled costs are seconds, all payloads bytes."""
 

@@ -7,16 +7,24 @@ callable (`(params, cache, tokens, slot) -> (last_logits, cache)`), both
 selected with `ServeEngine(..., engine="dispatch")`. Instead of one fused
 jit, each step is decomposed into the stages of its operator DAG
 (`dispatch.workloads.decode_dag` / `dispatch.workloads.prefill_dag`) and
-each stage runs on the device the offload planner chose for it:
+handed to the unified plan executor (`dispatch.executor.PlanExecutor`),
+which runs the planner's `Schedule` launch groups in timeline order:
 
   * host stages (`xeon` / `titan_v` in the model) run under per-stage jit,
     one trace per stage *kind* — all layers share it;
-  * PIM stages run through `dispatch.runtime.bank_face` (decode: batch
-    slots sharded over banks — each bank owns its slots' activations and
-    KV rows, the continuous-batching-across-banks layout of DESIGN.md §4)
-    or a sequence-sharded face (prefill: the chunk's token rows shard over
-    banks, weights and the KV prefix replicate); the body stays a pure
-    bank-local phase.
+  * PIM stages run as BankGrid local phases (decode: batch slots sharded
+    over banks — each bank owns its slots' activations and KV rows, the
+    continuous-batching-across-banks layout of DESIGN.md §4; prefill: the
+    chunk's token rows shard over banks, weights and the KV prefix
+    replicate), with boundary tensors staged ahead of each PIM group;
+  * the executed group order IS the schedule's group order, so a chunked
+    prefill runs *pipelined across chunks* — chunk i+1's qkv ladder is
+    issued under chunk i's KV write-back instead of a serial chunk loop
+    (DESIGN.md §11).
+
+Neither step owns a stage-execution loop: each contributes only its stage
+bodies (`StageDef`s) and a `bind(name, env)` callback mapping DAG node
+names to argument tuples — the executor does the walking.
 
 Every stage computes exactly what `models.forward` computes for that slice
 of the step (same library calls: `_qkv`, `write_decode`/`write_prefill`,
@@ -34,7 +42,8 @@ system (bank-resident KV), and `placement.plan` runs the ladder — exact
 frontier DP for the decode DAG (width 2) and for prefill up to 2 chunks;
 wider chunked prefill falls to bounded branch-and-bound (DESIGN.md §10).
 The chosen assignment routes stages by name; `force_assignment` overrides
-it for tests and ablations.
+it for tests and ablations (the executor regroups its timeline around the
+override).
 
 Scope: dense attention decoder LMs (every pattern position `attn`+`dense`,
 no cross-attention/MoE/SSM) with an unsharded host mesh — the dispatch
@@ -43,17 +52,16 @@ layer does its own distribution through the BankGrid.
 
 from __future__ import annotations
 
+import collections
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from ..core.bank_parallel import BankGrid, make_bank_mesh
 from ..dispatch import workloads
+from ..dispatch.executor import FaceCache, PlanExecutor, StageDef
 from ..dispatch.placement import Plan, plan as plan_placement
-from ..dispatch.runtime import bank_face
 from ..models import ModelConfig, Shardings
 from ..models import cache as cache_lib
 from ..models import layers as L
@@ -96,7 +104,8 @@ def make_dispatch_decode_step(cfg: ModelConfig, shd: Shardings,
 
 
 class DispatchDecodeStep:
-    """Planner-routed decode step with the jit engine's call signature."""
+    """Planner-routed decode step with the jit engine's call signature —
+    a thin workload adapter over `dispatch.executor.PlanExecutor`."""
 
     def __init__(self, cfg: ModelConfig, shd: Shardings, *,
                  batch_slots: int, max_len: int, temperature: float = 0.0,
@@ -132,24 +141,26 @@ class DispatchDecodeStep:
                              "decode_dag node names drifted from the "
                              "executable stages")
 
-        #: host faces: one jit per stage kind, shared by all layers
-        self._host = {kind: jax.jit(fn) for kind, fn, _, _ in self._stages()}
-        self._pim: dict[str, Any] = {}   # built lazily (grid lowering)
+        #: one compiled face per stage kind (host jit / BankGrid phase),
+        #: shared by all layers; the executor walks the schedule timeline
+        self.faces = FaceCache(self._stage_defs(), self.grid)
+        self.executor = PlanExecutor(self.dag, self.assignment, self.faces)
         self._sample = jax.jit(self._sample_fn)
 
     # ------------------------------------------------------------- #
     # stage bodies — each mirrors models.forward's decode path exactly
     # ------------------------------------------------------------- #
 
-    def _stages(self):
-        """(kind, host_fn, batched-arg flags, n_outputs) for every stage."""
+    def _stage_defs(self):
+        """StageDefs for the decode DAG: batch slots shard on axis 0 of
+        every flowing tensor, weights replicate."""
         return [
-            ("embed", self._embed_fn, (False, True, True), 3),
-            ("qkv", self._qkv_fn, (True, True, True, False, False), 3),
-            ("attn", self._attn_fn, (True,) * 6, 3),
-            ("o", self._o_fn, (True, True, False), 1),
-            ("mlp", self._mlp_fn, (True, False, False), 1),
-            ("head", self._head_fn, (True, False, False), 1),
+            StageDef("embed", self._embed_fn, (None, 0, 0), (0, 0, 0)),
+            StageDef("qkv", self._qkv_fn, (0, 0, 0, None, None), (0, 0, 0)),
+            StageDef("attn", self._attn_fn, (0,) * 6, (0, 0, 0)),
+            StageDef("o", self._o_fn, (0, 0, None), (0,)),
+            StageDef("mlp", self._mlp_fn, (0, None, None), (0,)),
+            StageDef("head", self._head_fn, (0, None, None), (0,)),
         ]
 
     def _embed_fn(self, table, tokens, slot_pos):
@@ -200,44 +211,58 @@ class DispatchDecodeStep:
         return nxt[:, None], new_pos
 
     # ------------------------------------------------------------- #
-    def _run(self, name: str, kind: str, *args):
-        device = self.assignment[name]   # KeyError = name-contract break
-        if device.startswith("upmem"):
-            if kind not in self._pim:
-                _, fn, batched, n_out = next(
-                    s for s in self._stages() if s[0] == kind)
-                self._pim[kind] = jax.jit(
-                    bank_face(self.grid, fn, batched, n_out))
-            return self._pim[kind](*args)
-        return self._host[kind](*args)
+    def _bind(self, params, cache, tokens, slot_pos, attn_index):
+        """The executor's workload surface: map a decode-DAG node name to
+        its stage argument tuple, reading prior results from `env`."""
+        cfg = self.cfg
+        stacked = params["layers"][0]
+        kv_stack = cache["layers"][0]
+        lp = [jax.tree.map(lambda l, i=i: l[i], stacked)
+              for i in range(cfg.n_blocks)]
+        wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
 
-    def devices_used(self) -> dict[str, str]:
-        """Stage name -> device name the step actually routes through."""
-        return dict(self.assignment)
+        def residual(env, i):
+            return env[f"mlp{i - 1}"] if i else env["embed"][0]
+
+        def bind(name, env):
+            kind, i, _ = workloads.parse_stage_name(name)
+            if kind == "embed":
+                return params["embed"], tokens, slot_pos
+            if kind == "qkv":
+                _, sin, cos = env["embed"]
+                return (residual(env, i), sin, cos,
+                        lp[i]["ln1"], lp[i]["attn"])
+            if kind == "attn":
+                q, k, v = env[f"qkv{i}"]
+                return (q, k, v, kv_stack["k"][i], kv_stack["v"][i],
+                        attn_index)
+            if kind == "o":
+                return residual(env, i), env[f"attn{i}"][0], lp[i]["attn"]
+            if kind == "mlp":
+                return env[f"o{i}"], lp[i]["ln2"], lp[i]["mlp"]
+            if kind == "head":
+                return (env[f"mlp{cfg.n_blocks - 1}"],
+                        params["final_norm"], wv)
+            raise KeyError(f"unknown decode stage {name!r}")
+        return bind
 
     def __call__(self, params, cache, tokens, slot_pos, live_mask, key):
         cfg = self.cfg
         index = cache["index"]
         attn_index = slot_pos            # per-row positions (cont. batching)
-        x, sin, cos = self._run("embed", "embed",
-                                params["embed"], tokens, slot_pos)
-        stacked = params["layers"][0]
-        kv_stack = cache["layers"][0]
-        new_ks, new_vs = [], []
-        for i in range(cfg.n_blocks):
-            lp = jax.tree.map(lambda l: l[i], stacked)
-            q, k, v = self._run(f"qkv{i}", "qkv", x, sin, cos,
-                                lp["ln1"], lp["attn"])
-            o, nk, nv = self._run(f"attn{i}", "attn", q, k, v,
-                                  kv_stack["k"][i], kv_stack["v"][i],
-                                  attn_index)
-            x = self._run(f"o{i}", "o", x, o, lp["attn"])
-            x = self._run(f"mlp{i}", "mlp", x, lp["ln2"], lp["mlp"])
-            new_ks.append(nk)
-            new_vs.append(nv)
-        wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
-        logits = self._run("head", "head", x, params["final_norm"], wv)
+        # keep: outputs read after the run (head, the attn KV updates) and
+        # off-graph binds — every layer's qkv reads embed's sin/cos, but
+        # the DAG only edges embed->qkv0/o0, so embed must be pinned or
+        # the executor frees it after layer 0's group
+        env = self.executor.run(
+            self._bind(params, cache, tokens, slot_pos, attn_index),
+            keep={"head", "embed",
+                  *(f"attn{i}" for i in range(cfg.n_blocks))})
+        logits = env["head"]
+        new_ks = [env[f"attn{i}"][1] for i in range(cfg.n_blocks)]
+        new_vs = [env[f"attn{i}"][2] for i in range(cfg.n_blocks)]
         nxt, new_pos = self._sample(logits, tokens, slot_pos, live_mask, key)
+        kv_stack = cache["layers"][0]
         new_layer = dict(kv_stack, k=jnp.stack(new_ks), v=jnp.stack(new_vs))
         new_index = jnp.maximum(index + 1,
                                 jnp.max(slot_pos) + 1).astype(jnp.int32)
@@ -251,11 +276,12 @@ class DispatchDecodeStep:
 
 class DispatchPrefillStep:
     """Planner-routed chunked prefill with the engine's prefill-one
-    signature: `(params, cache, tokens, slot) -> (last_logits, new_cache)`.
+    signature: `(params, cache, tokens, slot) -> (last_logits, new_cache)`
+    — a thin workload adapter over `dispatch.executor.PlanExecutor`.
 
-    The prompt is processed `chunk` tokens at a time; each chunk runs the
-    per-layer qkv -> attention -> o -> mlp stage ladder on the device the
-    planner assigned to the matching `workloads.prefill_dag` node
+    The prompt is processed `chunk` tokens at a time; each chunk's
+    per-layer qkv -> attention -> o -> mlp stage ladder runs on the device
+    the planner assigned to the matching `workloads.prefill_dag` node
     (`"qkv{layer}/c{chunk}"`, ...). Chunk attention attends each query row
     causally over all K/V rows produced so far — the same math
     `models.transformer._plain_attention` computes, with absolute
@@ -264,6 +290,14 @@ class DispatchPrefillStep:
     batched cache at `slot` exactly like the fused engine's prefill
     (`cache.write_prefill` + per-block scatter), and the head runs on the
     final chunk only (the engine samples from the prompt's last position).
+
+    Execution is PIPELINED across chunks: the executor walks the
+    schedule's launch groups over the prompt's own (structural) prefill
+    DAG, whose topological order interleaves chunks — chunk i+1's qkv
+    ladder is issued under chunk i's KV write-back, instead of the old
+    strictly serial chunk loop (DESIGN.md §11). One executor is built per
+    distinct chunk-split signature and cached; all of them share one
+    `FaceCache`, so stage traces are still one per kind.
 
     Planning happens once, on a canonical DAG of `planned_chunks` chunks
     (prompts with more chunks reuse the last planned chunk's placement —
@@ -301,11 +335,13 @@ class DispatchPrefillStep:
         if self.chunk < 1:
             raise ValueError(f"prefill chunk must be >= 1, got {self.chunk}")
         canonical = min(max_len, planned_chunks * self.chunk)
-        self.n_chunks_planned = len(
-            workloads.prefill_chunk_splits(canonical, self.chunk))
-        dims = dims_for_config(cfg, 1, max_len)
+        canonical_splits = workloads.prefill_chunk_splits(canonical,
+                                                          self.chunk)
+        self.n_chunks_planned = len(canonical_splits)
+        self._dims = dims_for_config(cfg, 1, max_len)
+        self._kv_home = kv_home
         self.dag = workloads.prefill_dag(
-            dims, prefill_len=canonical, chunk=self.chunk, batch=1,
+            self._dims, prefill_len=canonical, chunk=self.chunk, batch=1,
             kv_home=kv_home)
         self.plan: Plan = plan_placement(
             self.dag, devices=devices, objective=objective,
@@ -326,26 +362,33 @@ class DispatchPrefillStep:
                              "prefill_dag node names drifted from the "
                              "executable stages")
 
-        self._host = {kind: jax.jit(fn)
-                      for kind, fn, _, _ in self._stages()}
-        self._pim: dict[str, Any] = {}   # built lazily (grid lowering)
+        self.faces = FaceCache(self._stage_defs(), self.grid)
+        #: per chunk-split-signature executors (ragged prompts differ),
+        #: all sharing `faces` so stages keep one trace per kind; LRU-
+        #: capped — distinct prompt lengths are unbounded over an
+        #: engine's lifetime, and an evicted executor rebuilds cheaply
+        #: (structural DAG only, no re-tracing)
+        self._executors: "collections.OrderedDict[tuple[int, ...], " \
+                         "PlanExecutor]" = collections.OrderedDict()
+        self._executor_cap = 16
+        self.executor = self._executor_for(canonical_splits)
         self._scatter = jax.jit(self._scatter_fn)
 
     # ------------------------------------------------------------- #
     # stage bodies — each mirrors models.forward's prefill path exactly
     # ------------------------------------------------------------- #
 
-    def _stages(self):
-        """(kind, host_fn, per-arg seq-shard axis or None, n_outputs):
-        axis 1 shards a chunk's token rows over banks, axis 0 shards a
-        1-D positions array, None replicates (weights, the KV prefix)."""
+    def _stage_defs(self):
+        """StageDefs for the prefill DAG: a chunk's token rows shard on
+        axis 1 (axis 0 for the 1-D positions array), weights and the KV
+        prefix replicate."""
         return [
-            ("embed", self._embed_fn, (None, 1, 1), 3),
-            ("qkv", self._qkv_fn, (1, 1, 1, None, None), 3),
-            ("attn", self._attn_fn, (1, None, None, 0), 1),
-            ("o", self._o_fn, (1, 1, None), 1),
-            ("mlp", self._mlp_fn, (1, None, None), 1),
-            ("head", self._head_fn, (1, None, None), 1),
+            StageDef("embed", self._embed_fn, (None, 1, 1), (1, 1, 1)),
+            StageDef("qkv", self._qkv_fn, (1, 1, 1, None, None), (1, 1, 1)),
+            StageDef("attn", self._attn_fn, (1, None, None, 0), (1,)),
+            StageDef("o", self._o_fn, (1, 1, None), (1,)),
+            StageDef("mlp", self._mlp_fn, (1, None, None), (1,)),
+            StageDef("head", self._head_fn, (1, None, None), (1,)),
         ]
 
     def _embed_fn(self, table, tokens, positions):
@@ -420,28 +463,46 @@ class DispatchPrefillStep:
         return dict(cache, index=new_index, layers=[new_layer])
 
     # ------------------------------------------------------------- #
-    def _run(self, name: str, kind: str, t: int, *args):
-        device = self.assignment[name]   # KeyError = name-contract break
-        if device.startswith("upmem") and t % self.grid.n_banks == 0:
-            if kind not in self._pim:
-                _, fn, axes, n_out = next(
-                    s for s in self._stages() if s[0] == kind)
-                in_specs = tuple(
-                    P() if ax is None
-                    else (P(self.grid.axis) if ax == 0
-                          else P(None, self.grid.axis))
-                    for ax in axes)
-                out = (tuple(P(None, self.grid.axis)
-                             for _ in range(n_out))
-                       if n_out > 1 else P(None, self.grid.axis))
-                self._pim[kind] = jax.jit(self.grid.local(
-                    fn, in_specs=in_specs, out_specs=out))
-            return self._pim[kind](*args)
-        return self._host[kind](*args)
+    def _clamped(self, name: str) -> str:
+        """The planned stage a (possibly beyond-horizon) execution stage
+        routes as: chunks past the planned DAG reuse the last planned
+        chunk's placement (the `min(c, planned-1)` clamp)."""
+        kind, layer, c = workloads.parse_stage_name(name)
+        if c is None:
+            return name
+        return (f"{kind}{'' if layer is None else layer}"
+                f"/c{min(c, self.n_chunks_planned - 1)}")
 
-    def devices_used(self) -> dict[str, str]:
-        """Stage name -> device name the step actually routes through."""
-        return dict(self.assignment)
+    def _executor_for(self, splits: list[int]) -> PlanExecutor:
+        """The executor for one chunk-split signature: a structural
+        (uncosted) prefill DAG of the actual chunks supplies the node
+        names / edges / timeline order; the planned assignment routes it,
+        with chunks beyond the planned horizon clamped onto the last
+        planned chunk's placement."""
+        key = tuple(splits)
+        if key in self._executors:
+            self._executors.move_to_end(key)
+            return self._executors[key]
+        skeleton = workloads.prefill_dag(
+            self._dims, prefill_len=sum(splits), chunk=self.chunk,
+            batch=1, kv_home=self._kv_home, costed=False)
+        assignment = {name: self.assignment[self._clamped(name)]
+                      for name in skeleton.nodes}
+        while len(self._executors) >= self._executor_cap:
+            self._executors.popitem(last=False)
+        self._executors[key] = PlanExecutor(skeleton, assignment, self.faces)
+        return self._executors[key]
+
+    def devices_for(self, s_len: int) -> dict[str, str]:
+        """Stage name -> device for a prompt of `s_len` tokens (the
+        clamped planned assignment the executor routes) — derived from
+        the structural DAG (the node-name source of truth), without
+        touching the executor cache."""
+        skeleton = workloads.prefill_dag(
+            self._dims, prefill_len=s_len, chunk=self.chunk, batch=1,
+            kv_home=self._kv_home, costed=False)
+        return {name: self.assignment[self._clamped(name)]
+                for name in skeleton.nodes}
 
     def chunk_splits(self, s_len: int) -> list[int]:
         """Chunk lengths a prompt of `s_len` tokens is processed in (all
@@ -449,46 +510,80 @@ class DispatchPrefillStep:
         split the planned DAG uses (`workloads.prefill_chunk_splits`)."""
         return workloads.prefill_chunk_splits(s_len, self.chunk)
 
+    # ------------------------------------------------------------- #
+    def _bind(self, params, toks, splits):
+        """The executor's workload surface for one prompt: map a prefill
+        node name (`"{kind}{layer}/c{chunk}"`) to its argument tuple.
+        Cross-chunk attention concatenates every prior chunk's K/V from
+        the environment — the executable twin of the DAG's fan-in edges."""
+        cfg = self.cfg
+        stacked = params["layers"][0]
+        lp = [jax.tree.map(lambda l, i=i: l[i], stacked)
+              for i in range(cfg.n_blocks)]
+        wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        offs = [0]
+        for t in splits:
+            offs.append(offs[-1] + t)
+
+        def kv_prefix(env, i, c, idx):
+            parts = [env[f"qkv{i}/c{j}"][idx] for j in range(c + 1)]
+            return parts[0] if len(parts) == 1 \
+                else jnp.concatenate(parts, axis=1)
+
+        def bind(name, env):
+            kind, i, c = workloads.parse_stage_name(name)
+            if kind == "head":
+                return (env[f"mlp{cfg.n_blocks - 1}/c{len(splits) - 1}"],
+                        params["final_norm"], wv)
+            c0, t = offs[c], splits[c]
+            if kind == "embed":
+                q_pos = jnp.arange(c0, c0 + t, dtype=jnp.int32)
+                return (params["embed"], toks[:, c0:c0 + t],
+                        jnp.broadcast_to(q_pos[None, :], (1, t)))
+            if kind == "qkv":
+                x = (env[f"mlp{i - 1}/c{c}"] if i
+                     else env[f"embed/c{c}"][0])
+                _, sin, cos = env[f"embed/c{c}"]
+                return x, sin, cos, lp[i]["ln1"], lp[i]["attn"]
+            if kind == "attn":
+                q = env[f"qkv{i}/c{c}"][0]
+                q_pos = jnp.arange(c0, c0 + t, dtype=jnp.int32)
+                return (q, kv_prefix(env, i, c, 1),
+                        kv_prefix(env, i, c, 2), q_pos)
+            if kind == "o":
+                x = (env[f"mlp{i - 1}/c{c}"] if i
+                     else env[f"embed/c{c}"][0])
+                return x, env[f"attn{i}/c{c}"], lp[i]["attn"]
+            if kind == "mlp":
+                return env[f"o{i}/c{c}"], lp[i]["ln2"], lp[i]["mlp"]
+            raise KeyError(f"unknown prefill stage {name!r}")
+        return bind
+
     def __call__(self, params, cache, tokens, slot):
         cfg = self.cfg
         toks = tokens[None]              # (1, S) like the fused prefill
         s_len = int(toks.shape[1])
-        stacked = params["layers"][0]
+        splits = self.chunk_splits(s_len)
         n = cfg.n_blocks
-        ks: list[list] = [[] for _ in range(n)]
-        vs: list[list] = [[] for _ in range(n)]
-        x = None
-        c0 = 0
-        for c, t in enumerate(self.chunk_splits(s_len)):
-            cc = min(c, self.n_chunks_planned - 1)
-            q_pos = jnp.arange(c0, c0 + t, dtype=jnp.int32)
-            positions = jnp.broadcast_to(q_pos[None, :], (1, t))
-            x, sin, cos = self._run(f"embed/c{cc}", "embed", t,
-                                    params["embed"], toks[:, c0:c0 + t],
-                                    positions)
-            for i in range(n):
-                lp = jax.tree.map(lambda l: l[i], stacked)
-                q, k, v = self._run(f"qkv{i}/c{cc}", "qkv", t, x, sin, cos,
-                                    lp["ln1"], lp["attn"])
-                ks[i].append(k)
-                vs[i].append(v)
-                kp = (ks[i][0] if len(ks[i]) == 1
-                      else jnp.concatenate(ks[i], axis=1))
-                vp = (vs[i][0] if len(vs[i]) == 1
-                      else jnp.concatenate(vs[i], axis=1))
-                o = self._run(f"attn{i}/c{cc}", "attn", t, q, kp, vp, q_pos)
-                x = self._run(f"o{i}/c{cc}", "o", t, x, o, lp["attn"])
-                x = self._run(f"mlp{i}/c{cc}", "mlp", t, x, lp["ln2"],
-                              lp["mlp"])
-            c0 += t
-        wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
-        logits = self._run("head", "head", x.shape[1], x,
-                           params["final_norm"], wv)
-        k_full = jnp.stack([jnp.concatenate(ks[i], axis=1)
-                            if len(ks[i]) > 1 else ks[i][0]
-                            for i in range(n)])
-        v_full = jnp.stack([jnp.concatenate(vs[i], axis=1)
-                            if len(vs[i]) > 1 else vs[i][0]
-                            for i in range(n)])
+        executor = self._executor_for(splits)
+        # keep: the K/V assembly reads every chunk's qkv after the run,
+        # and every layer's qkv binds its chunk's embed output (sin/cos)
+        # although the DAG only edges embed/c -> qkv0/c, o0/c
+        env = executor.run(
+            self._bind(params, toks, splits),
+            keep={"head", *(f"embed/c{c}" for c in range(len(splits))),
+                  *(f"qkv{i}/c{c}" for i in range(n)
+                    for c in range(len(splits)))})
+        logits = env["head"]
+        k_full = jnp.stack([
+            jnp.concatenate([env[f"qkv{i}/c{c}"][1]
+                             for c in range(len(splits))], axis=1)
+            if len(splits) > 1 else env[f"qkv{i}/c0"][1]
+            for i in range(n)])
+        v_full = jnp.stack([
+            jnp.concatenate([env[f"qkv{i}/c{c}"][2]
+                             for c in range(len(splits))], axis=1)
+            if len(splits) > 1 else env[f"qkv{i}/c0"][2]
+            for i in range(n)])
         new_cache = self._scatter(cache, k_full, v_full, slot)
         return logits[0, -1], new_cache

@@ -14,9 +14,10 @@ different lengths share one batch (continuous batching):
   * Two backends share the loop: the fused-jit steps (default) and the
     planner-routed hybrid steps (`engine="dispatch"`,
     `serve.dispatch_engine`) — same signatures, same tokens. Under
-    dispatch, BOTH phases flow through the offload planner: decode over
-    the decode DAG and prefill chunked over the prefill DAG (DESIGN.md
-    §9-§10).
+    dispatch, BOTH phases flow through the offload planner (decode over
+    the decode DAG, prefill chunked over the prefill DAG) and execute
+    through the unified plan executor's schedule timeline (DESIGN.md
+    §9-§11).
 """
 
 from __future__ import annotations

@@ -374,7 +374,9 @@ def test_overlapped_objective_never_worse(prefill_graph, decode_dag,
         serial = plan(g)
         over = plan(g, objective="overlapped")
         assert over.objective == "overlapped"
-        assert over.method.endswith("+overlap")
+        # DAGs: coordinate descent ("...+overlap"); chains (mixed_graph):
+        # the exact group-aggregate DP ("dp-overlap")
+        assert over.method.endswith("overlap")
         assert over.overlapped_s is not None
         assert over.overlapped_s <= \
             make_schedule(g, serial).overlapped_s + 1e-15
@@ -387,6 +389,154 @@ def test_objective_validation(prefill_graph):
     with pytest.raises(ValueError, match="objective"):
         plan(prefill_graph, objective="nope")
     assert plan(prefill_graph).objective == "serial"
+
+
+def test_chain_overlapped_planned_exactly(mixed_graph):
+    """Chains hit the exact group-aggregate DP rung under the overlapped
+    objective (ISSUE-4 satellite): method `dp-overlap`, score ==
+    scheduler's score, never worse than the serial plan's schedule."""
+    over = plan(mixed_graph, objective="overlapped")
+    assert over.method == "dp-overlap"
+    assert over.overlapped_s == pytest.approx(
+        make_schedule(mixed_graph, over).overlapped_s)
+    serial = plan(mixed_graph)
+    assert over.overlapped_s <= \
+        make_schedule(mixed_graph, serial).overlapped_s + 1e-15
+
+
+# ------------------------------------------------------------------ #
+# pipelined group timeline (ISSUE-4: what the executor runs)
+# ------------------------------------------------------------------ #
+
+def test_pipelined_never_worse_than_serial_groups(prefill_graph, decode_dag,
+                                                  mixed_graph):
+    """The pipelined event simulation can only remove serialization: the
+    serial-group timeline is the same event system with every resource
+    globally serialized, so `pipelined_s <= overlapped_s` on every graph
+    and plan (both objectives)."""
+    for g in (prefill_graph, decode_dag, mixed_graph):
+        for objective in ("serial", "overlapped"):
+            p = plan(g, objective=objective)
+            sched = make_schedule(g, p, pipelined=True)
+            assert sched.pipelined_s is not None
+            assert sched.pipelined_s <= sched.overlapped_s + 1e-15
+
+
+def test_pipelined_hides_writeback_under_later_chunks(prefill_graph):
+    """The ISSUE-4 mechanism: on a pure-host prefill plan (KV stays
+    bank-resident, every attention writes back), the pipelined timeline
+    hides write-backs under later chunks' compute — strictly faster than
+    the serialized groups — and the saving is bounded by the total
+    write-back traffic it can hide."""
+    p = pure_plan(prefill_graph, "xeon")
+    sched = make_schedule(prefill_graph, p, pipelined=True)
+    wb = sum(g.writeback_s for g in sched.groups)
+    assert wb > 0
+    assert sched.pipelined_s < sched.overlapped_s
+    assert sched.overlapped_s - sched.pipelined_s <= wb + 1e-15
+
+
+def test_pipelined_waits_for_kv_writers(prefill_graph):
+    """`meta["kv_writers"]` is a real dependency: stripping it can only
+    shorten the pipelined makespan (readers no longer wait for earlier
+    chunks' write-backs to land at the home)."""
+    import copy
+    p = pure_plan(prefill_graph, "xeon")
+    with_deps = make_schedule(prefill_graph, p, pipelined=True).pipelined_s
+    stripped = copy.deepcopy(prefill_graph)
+    for node in stripped.nodes.values():
+        node.meta.pop("kv_writers", None)
+    without = make_schedule(stripped, p, pipelined=True).pipelined_s
+    assert without <= with_deps + 1e-15
+    assert workloads.prefill_dag(
+        workloads.REDUCED_DIMS, prefill_len=8,
+        chunk=4).nodes["attn0/c1"].meta["kv_writers"] == ["attn0/c0"]
+
+
+def test_schedule_order_parameter_prices_serial_chunk_loop(prefill_graph):
+    """`make_schedule(order=...)` prices an alternative linearization —
+    the old chunk-serial prefill loop. Groups cover the same nodes, and
+    the pipelined default timeline never loses to the serialized loop
+    (the dispatch_bench acceptance inequality)."""
+    loop_order = workloads.prefill_serial_order(prefill_graph)
+    assert sorted(loop_order) == sorted(prefill_graph.nodes)
+    # chunk-major: chunk 0's whole ladder precedes chunk 1's first stage
+    assert loop_order.index("mlp1/c0") < loop_order.index("embed/c1")
+    # a non-topological linearization fails loudly, not silently
+    with pytest.raises(ValueError, match="topological"):
+        make_schedule(prefill_graph, plan(prefill_graph),
+                      order=list(reversed(prefill_graph.topo_order())))
+    for objective in ("serial", "overlapped"):
+        p = plan(prefill_graph, objective=objective)
+        loop = make_schedule(prefill_graph, p, order=loop_order)
+        pipe = make_schedule(prefill_graph, p, pipelined=True)
+        assert sorted(n for g in loop.groups for n in g.nodes) == \
+            sorted(prefill_graph.nodes)
+        assert pipe.pipelined_s <= loop.overlapped_s + 1e-15
+
+
+def test_pipelined_rejects_reader_before_writer(prefill_graph):
+    """A linearization that is topologically valid for the DAG's edges
+    can still schedule a KV reader's group before its writer's (there is
+    no attn->attn edge) — the pipelined simulation must refuse to price
+    that physically impossible timeline rather than silently understate
+    it."""
+    order = list(prefill_graph.topo_order())
+    i, j = order.index("attn0/c0"), order.index("attn0/c1")
+    order[i], order[j] = order[j], order[i]     # reader before writer
+    assignment = {n: "xeon" for n in prefill_graph.nodes}
+    assignment["attn0/c0"] = "upmem_2556"       # writer in its own group
+    p = evaluate(prefill_graph, assignment)
+    make_schedule(prefill_graph, p, order=order)        # serial: fine
+    with pytest.raises(ValueError, match="not executed yet"):
+        make_schedule(prefill_graph, p, order=order, pipelined=True)
+
+
+def test_executor_frees_dead_env_entries(bank_grid):
+    """`PlanExecutor.run` drops a node's output once its last consumer
+    group has dispatched (the serial loops' live-set footprint), keeping
+    only what the caller names in `keep`."""
+    from repro.dispatch.executor import FaceCache, PlanExecutor, StageDef
+    g = OpGraph("tiny", input_bytes=4.0)
+    for name, preds in (("a", ()), ("b", ("a",)), ("c", ("b",))):
+        g.add(OpNode(name, "f", flops=1.0, hbm_bytes=4.0, out_bytes=4.0),
+              *preds)
+    faces = FaceCache([StageDef("f", lambda x: x + 1, (0,), (0,))],
+                      bank_grid)
+    ex = PlanExecutor(g, {"a": "xeon", "b": "xeon", "c": "xeon"}, faces,
+                      kind_of=lambda n: "f")
+
+    def bind(name, env):
+        prev = {"b": "a", "c": "b"}.get(name)
+        return (env[prev],) if prev else (jnp.zeros((2,)),)
+
+    env = ex.run(bind, keep={"c"})
+    assert set(env) == {"c"}                     # a, b freed when dead
+    env = ex.run(bind, keep={"a", "c"})
+    assert set(env) == {"a", "c"}                # keep pins survivors
+    assert float(env["c"][0]) == 3.0
+
+
+def test_prefill_skeleton_matches_costed_dag():
+    """`prefill_dag(costed=False)` must agree with the costed DAG on node
+    names, edges, and topological order — it is what the executor groups
+    a ragged prompt's timeline from, so drift here would silently change
+    the executed schedule."""
+    d = workloads.REDUCED_DIMS
+    costed = workloads.prefill_dag(d, prefill_len=11, chunk=4)
+    skel = workloads.prefill_dag(d, prefill_len=11, chunk=4, costed=False)
+    assert set(skel.nodes) == set(costed.nodes)
+    assert skel.edges == costed.edges
+    assert skel.topo_order() == costed.topo_order()
+    assert all(n.flops == 0 and n.hbm_bytes == 0
+               for n in skel.nodes.values())
+    # same launch-group order under the same assignment
+    p = plan(costed)
+    a = {n: p.assignment[n] for n in costed.nodes}
+    stub = evaluate(skel, a)
+    got = [(g.device, g.nodes) for g in make_schedule(skel, stub).groups]
+    want = [(g.device, g.nodes) for g in make_schedule(costed, p).groups]
+    assert got == want
 
 
 # ------------------------------------------------------------------ #

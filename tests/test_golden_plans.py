@@ -6,7 +6,11 @@ silently shift every placement while the inequalities kept passing. These
 tests pin the exact plan — topo-ordered device sequence, stage boundaries,
 method, and objective — for every `dispatch.workloads` pipeline, each of
 the 16 PrIM one-operator graphs, the decode DAG, and the chunked prefill
-DAGs, under BOTH planner objectives (`serial` and `overlapped`).
+DAGs, under BOTH planner objectives (`serial` and `overlapped`). Each
+entry also pins the golden SCHEDULE: the launch-group order the unified
+executor (`dispatch.executor.PlanExecutor`) actually walks, plus the
+modeled `overlapped_s`/`pipelined_s` wall-clocks — so executor-timeline
+drift is caught exactly like placement drift.
 
 ## The golden-plan workflow
 
@@ -125,9 +129,18 @@ def _snapshot(graph_name, objective):
     seq = [[n, p.assignment[n]] for n in order]
     boundaries = [i for i in range(1, len(order))
                   if p.assignment[order[i]] != p.assignment[order[i - 1]]]
+    # the golden SCHEDULE: the executed launch-group order (device +
+    # member count per group, exactly what PlanExecutor walks) plus the
+    # modeled wall-clocks under both execution disciplines — executor
+    # drift fails as loudly as placement drift
+    sched = make_schedule(graph, p, pipelined=True)
     return {"method": p.method, "objective": p.objective,
             "devices": list(devices), "placement": seq,
-            "stage_boundaries": boundaries}
+            "stage_boundaries": boundaries,
+            "schedule": {"groups": [[g.device, len(g.nodes)]
+                                    for g in sched.groups],
+                         "overlapped_s": sched.overlapped_s,
+                         "pipelined_s": sched.pipelined_s}}
 
 
 @pytest.fixture(scope="module")
@@ -162,6 +175,14 @@ def test_plan_matches_golden(name, golden, request):
     assert snap["stage_boundaries"] == want["stage_boundaries"]
     assert [n for n, _ in snap["placement"]] == \
         [n for n, _ in want["placement"]]
+    got_s, want_s = snap["schedule"], want["schedule"]
+    assert got_s["groups"] == want_s["groups"], (
+        f"{name}: executed launch-group order drifted — the executor runs "
+        "this timeline, so review like a placement change")
+    assert got_s["overlapped_s"] == pytest.approx(want_s["overlapped_s"],
+                                                  rel=1e-6)
+    assert got_s["pipelined_s"] == pytest.approx(want_s["pipelined_s"],
+                                                 rel=1e-6)
 
 
 def test_goldens_cover_every_case(golden):

@@ -9,7 +9,11 @@ tests pin it against brute-force enumeration over every placement:
   * branch-and-bound with an ample budget == brute force; with a starved
     budget it still returns its greedy-or-better incumbent;
   * greedy stays within an asserted bound of exact (the construction
-    bounds per-node cost ratios, so the bound is structural, not luck).
+    bounds per-node cost ratios, so the bound is structural, not luck);
+  * the chain overlapped-objective DP (`method="dp-overlap"`) == brute
+    force over every assignment's `Schedule.overlapped_s`, and never
+    worse than the coordinate descent it replaced — also asserted on
+    every SHIPPED chain graph (ISSUE-4 satellite).
 
 The generators emit nodes with KV-residency annotations too — both the
 read side (`kv_bytes`/`kv_home`, decode attention) and the write-back
@@ -27,8 +31,9 @@ import random
 import pytest
 
 from repro.dispatch.graph import OpGraph, OpNode
-from repro.dispatch.placement import (_plan_dag_bnb, _resolve, evaluate,
-                                      greedy_plan, plan)
+from repro.dispatch.placement import (_plan_dag_bnb, _refine_overlapped,
+                                      _resolve, evaluate, greedy_plan, plan)
+from repro.dispatch.schedule import make_schedule
 
 DEVICES = ("xeon", "titan_v", "upmem_2556")
 #: structural bound for the greedy sweep on the sampled distribution —
@@ -100,6 +105,33 @@ def _check_dag(g: OpGraph):
     assert greedy.total_s <= GREEDY_BOUND * exact.total_s
 
 
+def brute_force_overlapped_cost(g: OpGraph) -> float:
+    devices, dpu = _resolve(DEVICES)
+    names = list(g.nodes)
+    return min(
+        make_schedule(g, evaluate(g, dict(zip(names, combo)), dpu),
+                      dpu).overlapped_s
+        for combo in itertools.product(devices, repeat=len(names)))
+
+
+def _check_chain_overlapped(g: OpGraph):
+    """ISSUE-4 satellite: for chains, `objective="overlapped"` is planned
+    exactly by the group-aggregate DP — equal to brute force over every
+    assignment's `Schedule.overlapped_s`, never worse than the coordinate
+    descent general DAGs use, and self-consistent with the scheduler."""
+    best = brute_force_overlapped_cost(g)
+    p = plan(g, devices=DEVICES, objective="overlapped")
+    assert p.method == "dp-overlap"
+    assert p.objective == "overlapped"
+    assert p.overlapped_s == pytest.approx(best, rel=_REL)
+    devices, dpu = _resolve(DEVICES)
+    assert p.overlapped_s == pytest.approx(
+        make_schedule(g, p, dpu).overlapped_s, rel=_REL)
+    cd = _refine_overlapped(g, plan(g, devices=DEVICES).assignment,
+                            devices, dpu, "xeon", "xeon", "dp")
+    assert p.overlapped_s <= cd.overlapped_s * (1 + _REL)
+
+
 def _check_bnb(g: OpGraph):
     devices, dpu = _resolve(DEVICES)
     best = brute_force_cost(g)
@@ -131,6 +163,34 @@ def test_bnb_exact_when_budgeted_and_bounded_when_starved(seed):
     _check_bnb(make_dag(random.Random(3000 + seed, ), max_nodes=6))
 
 
+@pytest.mark.parametrize("seed", range(15))
+def test_chain_overlapped_dp_equals_brute_force(seed):
+    _check_chain_overlapped(make_chain(random.Random(4000 + seed),
+                                       max_nodes=5))
+
+
+def test_chain_overlapped_dp_beats_descent_on_shipped_chains():
+    """The ISSUE-4 satellite acceptance on every SHIPPED chain graph: the
+    exact group-aggregate DP never scores worse than the coordinate
+    descent that used to plan chains under the overlapped objective."""
+    from repro import prim
+    from repro.dispatch import workloads
+    chains = {"prim-mixed": (workloads.mixed_pipeline(
+                  m=1024, concrete=False).graph(), ("xeon", "upmem_2556")),
+              "lm-decode-chain": (workloads.decode_pipeline(
+                  concrete=False).graph(), ("xeon", "upmem_2556"))}
+    for c in prim.all_ref_counts():
+        chains[f"prim/{c.name}"] = (workloads.prim_graph(c), DEVICES)
+    for name, (g, devs) in chains.items():
+        assert g.is_chain, name
+        exact = plan(g, devices=devs, objective="overlapped")
+        assert exact.method == "dp-overlap", name
+        devices, dpu = _resolve(devs)
+        cd = _refine_overlapped(g, plan(g, devices=devs).assignment,
+                                devices, dpu, "xeon", "xeon", "dp")
+        assert exact.overlapped_s <= cd.overlapped_s * (1 + _REL), name
+
+
 # ------------------------------------------------------------------ #
 # hypothesis fuzzing (when the dev extra is installed)
 # ------------------------------------------------------------------ #
@@ -156,3 +216,9 @@ if HAVE_HYPOTHESIS:
     @given(st.integers(min_value=0, max_value=10 ** 9))
     def test_hyp_dag_exact_equals_brute_force(seed):
         _check_dag(make_dag(random.Random(seed)))
+
+    @_cases
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_hyp_chain_overlapped_dp_equals_brute_force(seed):
+        _check_chain_overlapped(make_chain(random.Random(seed),
+                                           max_nodes=4))

@@ -135,11 +135,14 @@ def setup_f32():
 
 
 def test_dispatch_prefill_decode_token_identical(setup_f32):
-    """The ISSUE-3 tentpole gate: with BOTH phases planner-routed —
-    chunked prefill over the prefill DAG (prompts span 1-3 chunks with
-    ragged tails at chunk=4) and decode over the decode DAG — the engine
-    matches the fused-jit engine token-for-token over a 16-step
-    continuous-batching run with mid-run arrivals and evictions."""
+    """The ISSUE-3 tentpole gate, extended over the ISSUE-4 PIPELINED
+    path: with BOTH phases planner-routed — chunked prefill over the
+    prefill DAG (prompts span 1-3 chunks with ragged tails at chunk=4)
+    and decode over the decode DAG — the engine matches the fused-jit
+    engine token-for-token over a 16-step continuous-batching run with
+    mid-run arrivals and evictions. The multi-chunk prompts here execute
+    the executor's interleaved timeline (chunk i+1's qkv issued under
+    chunk i's ladder), not a serial chunk loop — asserted below."""
     cfg, params = setup_f32
     prompts = _prompts(cfg, 8, jax.random.PRNGKey(11))
     assert max(int(p.shape[0]) for p in prompts) > 4   # multi-chunk runs
@@ -150,6 +153,12 @@ def test_dispatch_prefill_decode_token_identical(setup_f32):
     assert dis_eng.prefill_plan is not None
     assert dis_eng.prefill_plan.objective == "overlapped"
     assert dis_eng._prefill_step.n_chunks_planned == 4
+    # the gated path is pipelined: a 2-chunk prompt's executed node order
+    # interleaves chunks (qkv0/c1 before this layer's ladder finishes on
+    # chunk 0), unlike the old chunk-major loop
+    two_chunk = dis_eng._prefill_step._executor_for([4, 4])
+    flat = [n for _, nodes in two_chunk.executed_order() for n in nodes]
+    assert flat.index("qkv0/c1") < flat.index("mlp0/c0")
     assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
 
 
@@ -189,6 +198,135 @@ def test_dispatch_prefill_plan_routes_chunks(setup_f32):
     assert "head" in step.assignment
     assert step.chunk_splits(11) == [4, 4, 3]
     assert step.chunk_splits(4) == [4]
+
+
+def test_steps_route_through_unified_executor(setup_f32):
+    """The ISSUE-4 acceptance gate: neither dispatch step owns a private
+    stage-execution loop — both are adapters over
+    `dispatch.executor.PlanExecutor`, and the executed launch-group order
+    is exactly the planner schedule's group order."""
+    from repro.dispatch.executor import PlanExecutor
+    from repro.serve.dispatch_engine import (DispatchDecodeStep,
+                                             DispatchPrefillStep)
+    for cls in (DispatchDecodeStep, DispatchPrefillStep):
+        for legacy in ("_run", "_stages"):
+            assert not hasattr(cls, legacy), \
+                f"{cls.__name__}.{legacy}: private stage machinery is back"
+    cfg, params = setup_f32
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
+                      engine="dispatch",
+                      dispatch_kwargs={"prefill_chunk": 4})
+    for step in (eng._decode, eng._prefill_step):
+        # instance-level check too: per-step face caches must not come
+        # back beside the shared FaceCache/PlanExecutor path
+        for legacy in ("_run", "_stages", "_host", "_pim"):
+            assert legacy not in vars(step), \
+                f"{type(step).__name__}.{legacy}: private stage machinery"
+        assert isinstance(step.executor, PlanExecutor)
+        order = step.executor.executed_order()
+        # groups are maximal same-device runs of the DAG's topo order
+        flat = [n for _, nodes in order for n in nodes]
+        assert flat == step.executor.graph.topo_order()
+        for dev, nodes in order:
+            assert all(step.executor.assignment[n] == dev for n in nodes)
+        for a, b in zip(order, order[1:]):
+            assert a[0] != b[0], "adjacent groups on one device"
+    # ragged/over-horizon prompts clamp onto the planned placement
+    pre = eng._prefill_step
+    devs = pre.devices_for(4 * pre.n_chunks_planned + 6)   # 2 extra chunks
+    last = pre.n_chunks_planned - 1
+    for i in range(cfg.n_blocks):
+        assert devs[f"qkv{i}/c{last + 2}"] == \
+            pre.assignment[f"qkv{i}/c{last}"]
+
+
+def test_dispatch_three_layer_hybrid_token_identical():
+    """Regression (executor env freeing): every layer's qkv re-reads
+    embed's sin/cos although the DAG only edges embed->qkv0/o0 — with
+    >= 3 layers and attention forced onto PIM (multiple launch groups),
+    a freeing contract that follows graph edges alone would drop embed
+    after layer 0 and KeyError at qkv2. Both phases must stay
+    token-identical to the fused engine at depth 3."""
+    import dataclasses
+    cfg = dataclasses.replace(REDUCED["granite-3-8b"], n_layers=3,
+                              dtype="float32")
+    params = init_params_for(cfg)
+    prompts = _prompts(cfg, 5, jax.random.PRNGKey(17))
+    forced = {f"attn{i}": "upmem_2556" for i in range(cfg.n_blocks)}
+    pforced = {}
+    for c in range(4):
+        for i in range(cfg.n_blocks):
+            pforced[f"attn{i}/c{c}"] = "upmem_2556"
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(
+        cfg, params, batch_slots=2, max_len=48, shd=SHD, engine="dispatch",
+        dispatch_kwargs={"force_assignment": forced, "prefill_chunk": 4,
+                         "prefill_force_assignment": pforced})
+    assert len(dis_eng._decode.executor.executed_order()) > 3
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+@pytest.mark.slow
+def test_dispatch_serving_multibank_matches_single_bank():
+    """ISSUE-4 satellite: full dispatch serving (planner-routed prefill
+    AND decode) with batch slots sharded over TWO banks must be
+    token-identical to the single-bank run — the executor's PIM faces
+    shard slots (decode, axis 0) and chunk token rows (prefill, axis 1)
+    over however many banks the grid has. Subprocess per the dry-run
+    isolation rule; f32 model (bf16 can flip a near-tie argmax across
+    bank-shard tilings, DESIGN.md §9)."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    code = (
+        "import dataclasses, jax, jax.numpy as jnp\n"
+        "from repro.configs import REDUCED\n"
+        "from repro.core.bank_parallel import BankGrid, make_bank_mesh\n"
+        "from repro.models import Shardings, init_params\n"
+        "from repro.serve import Request, ServeEngine\n"
+        "shd = Shardings(None)\n"
+        "cfg = dataclasses.replace(REDUCED['granite-3-8b'], dtype='float32')\n"
+        "params = init_params(jax.random.PRNGKey(0), cfg, shd)\n"
+        "key = jax.random.PRNGKey(5)\n"
+        "prompts = []\n"
+        "for _ in range(6):\n"
+        "    key, k = jax.random.split(key)\n"
+        "    plen = 4 + int(jax.random.randint(k, (), 0, 8))\n"
+        "    prompts.append(jax.random.randint(k, (plen,), 0,\n"
+        "                   cfg.vocab_size, dtype=jnp.int32))\n"
+        "forced = {f'attn{i}': 'upmem_2556' for i in range(cfg.n_blocks)}\n"
+        "forced['embed'] = 'upmem_2556'\n"
+        "pforced = {}\n"
+        "for c in range(4):\n"
+        "    pforced[f'embed/c{c}'] = 'upmem_2556'\n"
+        "    for i in range(cfg.n_blocks):\n"
+        "        pforced[f'attn{i}/c{c}'] = 'upmem_2556'\n"
+        "outs = {}\n"
+        "for n_banks in (1, 2):\n"
+        "    grid = BankGrid(make_bank_mesh(n_banks))\n"
+        "    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,\n"
+        "        shd=shd, engine='dispatch', dispatch_kwargs={\n"
+        "        'grid': grid, 'force_assignment': forced,\n"
+        "        'prefill_chunk': 4,\n"
+        "        'prefill_force_assignment': pforced})\n"
+        "    pim_groups = [d for d, _ in\n"
+        "                  eng._decode.executor.executed_order()\n"
+        "                  if d.startswith('upmem')]\n"
+        "    assert pim_groups, 'no PIM launch groups to shard'\n"
+        "    done = eng.serve([Request(i, p, 5)\n"
+        "                      for i, p in enumerate(prompts)])\n"
+        "    outs[n_banks] = {r.rid: r.out_tokens for r in done}\n"
+        "assert outs[1] == outs[2], outs\n"
+        "print('MULTIBANK_SERVE_OK')\n")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=f"{root / 'src'}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MULTIBANK_SERVE_OK" in out.stdout
 
 
 @pytest.mark.slow
