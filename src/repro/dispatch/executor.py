@@ -91,6 +91,11 @@ class FaceCache:
 
     def __init__(self, stages: Sequence[StageDef], grid: BankGrid):
         self.grid = grid
+        kinds = [s.kind for s in stages]
+        dup = sorted({k for k in kinds if kinds.count(k) > 1})
+        if dup:                                   # e.g. MoE + dense "mlp"
+            raise ValueError(f"duplicate StageDef kinds {dup}: two stage "
+                             "bodies would silently share one compiled face")
         self.stages = {s.kind: s for s in stages}
         self._host = {k: jax.jit(s.fn) for k, s in self.stages.items()}
         self._pim: dict[str, Callable] = {}      # lazy: grid lowering
@@ -161,6 +166,17 @@ class PlanExecutor:
         for n, succs in graph.succs.items():
             last = max((member[s] for s in succs), default=member[n])
             self._dead_after[last].append(n)
+        # exchange edges between same-PIM-device endpoints execute as an
+        # explicit host gather/scatter: the producer's tensor is pulled
+        # back to host memory and re-pushed (replicated over the mesh)
+        # before the consumer's face runs — the executable twin of the
+        # host-relayed all-to-all the scheduler books as
+        # `LaunchGroup.exchange_s` (there is no inter-DPU channel)
+        self._exchange_in: dict[str, list[str]] = {}
+        for (u, v), nbytes in graph.exchange_edges.items():
+            if nbytes > 0 and self.assignment[u] == self.assignment[v] \
+                    and self.assignment[u].startswith("upmem"):
+                self._exchange_in.setdefault(v, []).append(u)
 
     def executed_order(self) -> list[tuple[str, list[str]]]:
         """The (device, member nodes) launch groups in execution order —
@@ -211,6 +227,11 @@ class PlanExecutor:
             for p, v in staging[k % 2].items():
                 env[p] = v                       # consume staged inputs
             for name in nodes:
+                for p in self._exchange_in.get(name, ()):
+                    if p in env:                 # the exchange's host relay:
+                        env[p] = jax.tree.map(   # gather back + re-scatter
+                            lambda x: jax.device_put(
+                                x, self.faces.grid.replicated()), env[p])
                 env[name] = self._dispatch(name, device, bind(name, env))
             if k + 1 < len(self.timeline):
                 nxt_dev, _, nxt_producers = self.timeline[k + 1]

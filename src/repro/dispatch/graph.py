@@ -185,11 +185,26 @@ class OpNode:
 
 @dataclasses.dataclass
 class OpGraph:
-    """A DAG of OpNodes; edges carry the producer's out_bytes."""
+    """A DAG of OpNodes; edges carry the producer's out_bytes.
+
+    `exchange_edges` marks a subset of edges as *exchange phases*: the
+    producer's tensor is not merely handed to the consumer, it must be
+    RE-DISTRIBUTED across PIM banks (an MoE token dispatch/combine, a
+    transpose's all-to-all). There is no inter-DPU channel (Takeaway 3),
+    so when both endpoints sit on the same UPMEM system the bytes still
+    round-trip through host DRAM — `placement.exchange_time` charges it,
+    `schedule.py` books it as transfer-channel-only occupancy, and
+    `dispatch.executor.PlanExecutor` executes it as a host gather/scatter
+    stage. On one host-class device the exchange is a local shuffle
+    (free beyond the node's own memory traffic); across devices the
+    ordinary boundary transfer already relays through the host."""
     name: str
     nodes: dict[str, OpNode] = dataclasses.field(default_factory=dict)
     edges: list[tuple[str, str]] = dataclasses.field(default_factory=list)
     input_bytes: float = 0.0           # bytes entering the graph from host
+    #: (producer, consumer) -> bytes re-distributed across banks
+    exchange_edges: dict[tuple[str, str], float] = dataclasses.field(
+        default_factory=dict)
 
     def add(self, node: OpNode, *preds: str) -> OpNode:
         """Insert `node` with edges from the named predecessors."""
@@ -197,6 +212,17 @@ class OpGraph:
         for p in preds:
             self.edges.append((p, node.name))
         return node
+
+    def annotate_exchange(self, u: str, v: str, nbytes: float) -> None:
+        """Mark existing edge (u, v) as an exchange phase moving `nbytes`
+        across banks (the first-class exchange-edge annotation). The
+        volume is the caller's to model — for MoE token routing it scales
+        with tokens x capacity (`workloads.moe_exchange_bytes`), NOT with
+        the expert count: only dispatched rows travel, empty capacity
+        slots do not."""
+        if (u, v) not in set(self.edges):
+            raise ValueError(f"no edge {u!r}->{v!r} in graph {self.name}")
+        self.exchange_edges[(u, v)] = float(nbytes)
 
     def _derived(self) -> dict:
         """Adjacency/topo structures, memoized per (node, edge) count —

@@ -27,6 +27,13 @@ charges shipping the fresh rows back. Weights/params stay device-resident
 (weight-stationary serving): only activations and migrated KV cross
 boundaries.
 
+Exchange edges (`OpGraph.exchange_edges` — MoE token dispatch/combine)
+charge `exchange_time`: when producer and consumer share a PIM device the
+re-distribution still round-trips through host DRAM (all-to-all is the
+worst case for the architecture, Takeaway 3) — the cost that lets the
+planner decide host-vs-bank expert placement instead of guessing. The
+charge is per-edge (no dedup) and flows through every ladder rung.
+
 Two objectives (the `objective` knob of `plan`): `"serial"` minimizes the
 additive end-to-end sum `evaluate` computes — the ladder below is exact
 for it; `"overlapped"` scores candidates by the scheduler's modeled
@@ -131,6 +138,25 @@ def transfer_hops(src: str, dst: str, nbytes: float,
     return 0.0, transfer_time(src, dst, nbytes, dpu)
 
 
+def exchange_time(src_dev: str, dst_dev: str, nbytes: float,
+                  dpu: DPUModel | None = None) -> float:
+    """Seconds to re-distribute `nbytes` across banks for an exchange edge
+    (`OpGraph.exchange_edges`) whose producer runs on `src_dev` and
+    consumer on `dst_dev`.
+
+    Only the same-PIM-device case costs anything: there is no inter-DPU
+    channel (Takeaway 3), so an all-to-all between banks round-trips
+    through host DRAM — one parallel retrieve plus one parallel push over
+    the measured channels. On one host-class device the shuffle is local
+    (already inside the node's memory traffic); across devices the
+    ordinary boundary transfer (`transfer_time`) relays through the host
+    anyway, so the re-distribution rides it for free."""
+    if nbytes <= 0 or src_dev != dst_dev or not _is_pim(src_dev):
+        return 0.0
+    d = dpu or _DPU_SYSTEMS[src_dev]
+    return nbytes / d.dpu_to_host_bw + nbytes / d.host_to_dpu_bw
+
+
 def kv_migration_time(node: OpNode, device: str,
                       dpu: DPUModel | None = None) -> float:
     """Seconds of KV-residency traffic for placing `node` on `device`.
@@ -193,6 +219,7 @@ class Plan:
     launch_s: float
     node_s: dict[str, float]
     migrate_s: float = 0.0             # KV-residency migration charges
+    exchange_s: float = 0.0            # host-relayed bank exchanges (MoE)
     objective: str = "serial"          # which objective picked this plan
     overlapped_s: float | None = None  # Schedule score, overlapped plans
 
@@ -224,7 +251,8 @@ class Plan:
                  f"(compute {self.compute_s * 1e3:.3f} + transfer "
                  f"{self.transfer_s * 1e3:.3f} + launch "
                  f"{self.launch_s * 1e3:.3f} + kv-migrate "
-                 f"{self.migrate_s * 1e3:.3f})"]
+                 f"{self.migrate_s * 1e3:.3f} + exchange "
+                 f"{self.exchange_s * 1e3:.3f})"]
         for node, dev in self.assignment.items():
             lines.append(f"  {node:28s} -> {dev:12s} "
                          f"{self.node_s[node] * 1e6:10.1f}us")
@@ -249,6 +277,13 @@ def evaluate(graph: OpGraph, assignment: dict[str, str],
         node_s[n] = t + m
         compute += t
         migrate += m
+
+    # exchange edges: bank re-distribution relays through the host even
+    # when both endpoints share a PIM device (per-edge, no dedup — every
+    # exchange is its own all-to-all)
+    exchange = sum(
+        exchange_time(assignment[u], assignment[v], b, dpu)
+        for (u, v), b in graph.exchange_edges.items())
 
     transfer, crossings = 0.0, []
     roots = [n for n in order if not preds[n]]
@@ -286,9 +321,10 @@ def evaluate(graph: OpGraph, assignment: dict[str, str],
 
     return Plan(graph_name=graph.name, assignment=dict(assignment),
                 method=method,
-                total_s=compute + transfer + launch + migrate,
+                total_s=compute + transfer + launch + migrate + exchange,
                 compute_s=compute, transfer_s=transfer, launch_s=launch,
-                node_s=node_s, migrate_s=migrate, _crossings=crossings)
+                node_s=node_s, migrate_s=migrate, exchange_s=exchange,
+                _crossings=crossings)
 
 
 def _resolve(devices: Iterable[str]) -> tuple[tuple[str, ...], DPUModel | None]:
@@ -378,12 +414,14 @@ def _plan_chain_dp(graph: OpGraph, devices: tuple[str, ...],
     back: list[dict[str, str]] = []
     for i in range(1, len(order)):
         node, prev = graph.nodes[order[i]], graph.nodes[order[i - 1]]
+        ex_b = graph.exchange_edges.get((order[i - 1], order[i]), 0.0)
         nxt, choice = {}, {}
         for d in devices:
             t_node = placed_time(node, d, dpu)
             best, best_p = float("inf"), devices[0]
             for p in devices:
                 c = cost[p] + transfer_time(p, d, prev.out_bytes, dpu) \
+                    + exchange_time(p, d, ex_b, dpu) \
                     + (launch_overhead(d, dpu) if d != p else 0.0) + t_node
                 if c < best:
                     best, best_p = c, p
@@ -416,6 +454,9 @@ def _plan_greedy(graph: OpGraph, devices: tuple[str, ...],
                 for p in preds[n]:
                     c += transfer_time(assignment[p], d,
                                        graph.nodes[p].out_bytes, dpu)
+                    c += exchange_time(
+                        assignment[p], d,
+                        graph.exchange_edges.get((p, n), 0.0), dpu)
                 if all(assignment[p] != d for p in preds[n]):
                     c += launch_overhead(d, dpu)
             else:
@@ -474,6 +515,11 @@ class _DagWalk:
                 c += transfer_time(du, d, self.graph.nodes[u].out_bytes,
                                    self.dpu)
                 new_open[u] = (du, shipped | {d})
+            # exchange edges are per-edge (no dedup): every exchange is
+            # its own host-relayed bank re-distribution
+            c += exchange_time(du, d,
+                               self.graph.exchange_edges.get((u, v), 0.0),
+                               self.dpu)
         if not self.succs[v]:
             c += transfer_time(d, self.sink, node.out_bytes, self.dpu)
         for u in self.preds[v]:
@@ -679,7 +725,7 @@ def _plan_chain_overlapped_dp(graph: OpGraph, devices: tuple[str, ...],
             for d in devices:
                 if d == p:                 # maximal runs: groups alternate
                     continue
-                compute = payload = relay = wb = 0.0
+                compute = payload = relay = wb = exch = 0.0
                 srcs: set[str] = set()
                 n_wb = 0
                 if i == 0:
@@ -698,6 +744,13 @@ def _plan_chain_overlapped_dp(graph: OpGraph, devices: tuple[str, ...],
                 for j in range(i, n):      # extend the group to order[j]
                     node = graph.nodes[order[j]]
                     compute += node_time(node, d, dpu)
+                    if j > i:              # intra-group exchange edges
+                        ex_t = exchange_time(
+                            d, d,
+                            graph.exchange_edges.get((order[j - 1],
+                                                      order[j]), 0.0), dpu)
+                        if ex_t:           # channel-only: push + pull call
+                            exch += ex_t + 2 * TRANSFER_SETUP_S
                     kv_b = float(node.meta.get("kv_bytes") or 0.0)
                     kv_h = node.meta.get("kv_home")
                     if kv_b and kv_h and kv_h != d:
@@ -711,7 +764,8 @@ def _plan_chain_overlapped_dp(graph: OpGraph, devices: tuple[str, ...],
                         n_wb += 1
                     in_transfer = len(srcs) * TRANSFER_SETUP_S + payload
                     group_s = relay + max(compute, in_transfer - relay) \
-                        + launch + wb + (TRANSFER_SETUP_S if n_wb else 0.0)
+                        + launch + wb + (TRANSFER_SETUP_S if n_wb else 0.0) \
+                        + exch
                     c = base + group_s
                     if c < best[j + 1].get(d, INF):
                         best[j + 1][d] = c

@@ -29,7 +29,12 @@ objective `placement.plan(..., objective="overlapped")` optimizes. KV
 rows written off their home device (a prefill chunk's attention,
 `graph.annotate_kv_write`) ship back as one batched transfer serialized
 after the group — later chunks read them from the home, so the write-back
-can never hide under this group's compute.
+can never hide under this group's compute. Exchange edges
+(`OpGraph.exchange_edges`, MoE token dispatch/combine) between
+same-PIM-device endpoints are booked to the consuming member's group as
+`LaunchGroup.exchange_s`: transfer-channel-only occupancy (host gather +
+re-scatter) that the consumer waits on, so it is serialized into
+`overlapped_s` and occupies the shared channel in the pipelined sim.
 
 Two execution disciplines are modeled over the same group timeline:
 
@@ -53,8 +58,8 @@ import dataclasses
 
 from ..core.pim_model import DPUModel, UPMEM_2556
 from .graph import OpGraph
-from .placement import (Plan, _DPU_SYSTEMS, launch_overhead, node_time,
-                        transfer_hops, transfer_time)
+from .placement import (Plan, _DPU_SYSTEMS, exchange_time, launch_overhead,
+                        node_time, transfer_hops, transfer_time)
 
 #: fixed cost of one host<->device transfer call (API + sync); batching N
 #: buffers into one parallel transfer pays this once instead of N times
@@ -78,6 +83,9 @@ class LaunchGroup:
     relay_s: float = 0.0              # host-relay hop of GPU<->DPU inputs
     writeback_s: float = 0.0          # KV rows shipped back to their home
     n_writebacks: int = 0             # member nodes writing KV off-home
+    exchange_s: float = 0.0           # host-relayed bank exchanges whose
+                                      # consumer is a member (incl. setups)
+    n_exchanges: int = 0              # exchange edges booked to this group
     #: producer node names whose tensors cross into this group — what the
     #: executor stages ahead of the group (the batched input transfer)
     in_producers: list[str] = dataclasses.field(default_factory=list)
@@ -89,9 +97,9 @@ class LaunchGroup:
     @property
     def serial_s(self) -> float:
         """Group seconds with no intra-group overlap (transfer + launch +
-        compute + KV write-back, summed)."""
+        compute + KV write-back + bank exchanges, summed)."""
         return (self.in_transfer_s + self.launch_s + self.compute_s
-                + self.writeback_s)
+                + self.writeback_s + self.exchange_s)
 
     @property
     def overlapped_s(self) -> float:
@@ -101,10 +109,13 @@ class LaunchGroup:
         under this group's compute and is serialized in front of the
         overlap window. KV write-backs are serialized after the group:
         the cache home must hold the rows before any later consumer (the
-        next prefill chunk's attention) may read them."""
+        next prefill chunk's attention) may read them. Bank exchanges
+        (`exchange_s`) are transfer-channel-only occupancy that the
+        consuming member waits on, so they can never hide under this
+        group's own compute either."""
         return (self.relay_s
                 + max(self.compute_s, self.in_transfer_s - self.relay_s)
-                + self.launch_s + self.writeback_s)
+                + self.launch_s + self.writeback_s + self.exchange_s)
 
 
 @dataclasses.dataclass
@@ -207,6 +218,16 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                     g.in_producers.append(p)
                     crossing.append((plan.assignment[p],
                                      graph.nodes[p].out_bytes))
+                # a bank exchange between same-device endpoints occupies
+                # only the transfer channel (host gather + re-scatter,
+                # Takeaway 3); the consuming member's group books it —
+                # push + pull are one parallel-transfer call each
+                ex_t = exchange_time(
+                    plan.assignment[p], g.device,
+                    graph.exchange_edges.get((p, n), 0.0), dpu)
+                if ex_t:
+                    g.exchange_s += ex_t + 2 * TRANSFER_SETUP_S
+                    g.n_exchanges += 1
             meta = graph.nodes[n].meta
             kv_bytes = float(meta.get("kv_bytes") or 0.0)
             kv_home = meta.get("kv_home")
@@ -251,7 +272,7 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
     total = sum(g.serial_s for g in groups) + out_transfer
     overlapped = sum(g.overlapped_s for g in groups) + out_transfer
     unbatched = sum(g.serial_transfer_s + g.launch_s + g.compute_s
-                    + g.writeback_s
+                    + g.writeback_s + g.exchange_s
                     + max(g.n_writebacks - 1, 0) * TRANSFER_SETUP_S
                     for g in groups) + out_transfer
     sched = Schedule(graph_name=graph.name, groups=groups,
@@ -312,6 +333,18 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
             start = max(dev_free.get(g.device, 0.0), ready)
         compute_start = start + g.launch_s
         span = max(g.compute_s, g.in_transfer_s - g.relay_s)
+        if g.exchange_s:
+            # bank exchanges occupy ONLY the shared channel, but the
+            # consuming member waits on them, so the group's device span
+            # stretches by the exchange (plus any channel contention) —
+            # other devices' compute is what runs under an exchange. The
+            # exchange queues after the group's own overlap window (the
+            # serial-group algebra serializes it there): gating on the
+            # raw channel-free time instead would re-charge the window's
+            # already-counted input streaming on transfer-bound groups
+            ex_start = max(chan_free, compute_start + span)
+            span = (ex_start - compute_start) + g.exchange_s
+            chan_free = ex_start + g.exchange_s
         dev_free[g.device] = compute_start + span
         # member finish times stretch over the overlap window so the last
         # member lands exactly at the group end (the serial-group algebra)

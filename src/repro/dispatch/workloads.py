@@ -26,12 +26,19 @@ Both builders take `concrete=False` to build shape-only pipelines (params
 as ShapeDtypeStructs): nothing is materialized or executed, but
 `Pipeline.graph()` still lowers/compiles every stage for costing — that is
 how the benchmarks model paper-scale inputs on the dev container.
+
+The DAG builders below (`decode_dag`, `moe_decode_dag`, `prefill_dag`)
+are what the serving planner consumes; MoE dims route each layer's MLP
+through the exchange-phase ladder (router -> token exchange -> per-expert
+FFN -> combine exchange), the planner's first data-dependent-routing
+workload (DESIGN.md §12).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import types
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +46,13 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.bank_parallel import BankGrid
 from ..core.perf_model import WorkloadCounts
+from ..models.layers import (CAPACITY_FACTOR as MOE_CAPACITY_FACTOR,
+                             moe_combine, moe_dispatch, moe_expert_ffn)
+from ..models.sharding import Shardings
 from ..prim import trns as prim_trns
+
+#: unsharded Shardings for the cost-model proxies (no mesh, `act` no-op)
+_NO_SHARDING = Shardings(None)
 from .graph import (OpGraph, OpNode, annotate_kv_residency,
                     annotate_kv_write, chain_graph, node_from_fn)
 from .runtime import Pipeline, Stage
@@ -149,16 +162,35 @@ class DecodeDims:
     batch: int = 2
     n_kv_heads: int | None = None      # None -> n_heads (MHA)
     kv_itemsize: int = 4
+    n_experts: int = 0                 # 0 -> dense MLP layers
+    top_k: int = 0
+    moe_d_ff: int = 0                  # per-expert ffn width (0 -> d_ff)
 
     @property
     def kv_heads(self) -> int:
         """Cached KV head count (GQA when n_kv_heads is set, else MHA)."""
         return self.n_kv_heads or self.n_heads
 
+    @property
+    def expert_ff(self) -> int:
+        """Per-expert FFN width (MoE layers; `moe_d_ff` or `d_ff`)."""
+        return self.moe_d_ff or self.d_ff
+
 
 #: reduced dims for executable runtime tests (same graph structure)
 REDUCED_DIMS = DecodeDims(d_model=64, n_heads=4, head_dim=16, d_ff=128,
                           seq=32, vocab=128, n_layers=2, batch=2)
+
+#: reduced MoE dims (mixtral-reduced-shaped: 4 experts top-2)
+MOE_REDUCED_DIMS = DecodeDims(d_model=64, n_heads=4, head_dim=16, d_ff=128,
+                              seq=32, vocab=128, n_layers=2, batch=2,
+                              n_experts=4, top_k=2, moe_d_ff=128)
+
+#: paper-scale MoE dims (mixtral-8x7b-shaped: 8 experts top-2, GQA kv8)
+MOE_PAPER_DIMS = DecodeDims(d_model=4096, n_heads=32, head_dim=128,
+                            d_ff=14336, seq=2048, vocab=32000, n_layers=32,
+                            batch=2, n_kv_heads=8, n_experts=8, top_k=2,
+                            moe_d_ff=14336)
 
 _Q_SCALE = 64.0          # activation quantization step for int attention
 
@@ -275,6 +307,72 @@ def decode_pipeline(dims: DecodeDims = REDUCED_DIMS, key=None,
 
 
 # ---------------------------------------------------------------------------
+# MoE routing as an exchange phase (router -> dispatch -> experts -> combine)
+# ---------------------------------------------------------------------------
+
+#: GShard-style token capacity headroom — aliased from the executable
+#: MoE layer (top-of-file import) so the planner's buffer shapes and
+#: exchange volumes can never drift from what `serve.dispatch_engine`
+#: actually runs
+_MOE_CAPACITY_FACTOR = MOE_CAPACITY_FACTOR
+
+
+def moe_capacity(tokens_per_seq: int, n_experts: int, top_k: int) -> int:
+    """Per-expert token capacity of one sequence row — the
+    `models.layers.CAPACITY_FACTOR` semantics the serving stages share:
+    `max(int(cf * k * s / e), 1)`."""
+    return max(int(_MOE_CAPACITY_FACTOR * top_k * tokens_per_seq
+                   / n_experts), 1)
+
+
+def moe_exchange_bytes(tokens: int, d_model: int, top_k: int,
+                       itemsize: int = 4) -> float:
+    """Bytes one MoE token exchange re-distributes across banks (each of
+    the dispatch and the combine moves this much): every token's `top_k`
+    dispatched copies at capacity-factor headroom. The volume scales with
+    tokens x capacity (`cf * k * tokens` rows of `d_model`), NOT with the
+    expert count — empty capacity slots never travel, so adding experts
+    spreads the same rows thinner instead of multiplying traffic."""
+    return float(_MOE_CAPACITY_FACTOR * top_k * tokens * d_model * itemsize)
+
+
+def _moe_router(x, wr, *, seq: int, top_k: int):
+    """Costing proxy for the MoE router + top-k gate + dispatch scatter:
+    float gate math (softmax over expert logits — transcendental, KT2),
+    integer position bookkeeping (row-local cumsum), and the capacity
+    scatter into the (B, E, C, D) dispatch buffer — the tensor the token
+    exchange re-distributes. `x` is (rows, d) flattened tokens with `seq`
+    tokens per sequence row (decode: seq=1 per slot). The math IS
+    `models.layers.moe_dispatch` — the same slice the serving stages
+    execute, so the cost model can never drift from the runtime."""
+    n, d = x.shape
+    b = n // seq
+    cfg = types.SimpleNamespace(n_experts=wr.shape[1], top_k=top_k)
+    buf, topi, pos, w, _ = moe_dispatch(x.reshape(b, seq, d), wr, cfg)
+    return buf, topi, pos, w
+
+
+def _moe_expert(buf, wu, wg, wd):
+    """Costing proxy for the per-expert gated FFN over the dispatched
+    (B, E, C, D) buffer — dense float GEMMs (software mul on DPUs, KT2),
+    embarrassingly parallel over the expert axis (the bank shard). Runs
+    `models.layers.moe_expert_ffn` itself (unsharded)."""
+    cfg = types.SimpleNamespace(gated_mlp=True, mlp_act="silu")
+    return moe_expert_ffn(buf, {"wu": wu, "wg": wg, "wd": wd}, cfg,
+                          _NO_SHARDING)
+
+
+def _moe_combine(x, out_buf, topi, pos, w, *, seq: int):
+    """Costing proxy for the combine: gather each token's expert outputs
+    back from the (B, E, C, D) buffer (the combine exchange's payload,
+    `models.layers.moe_combine`), weight by the normalized gates, and
+    add into the residual stream."""
+    n, d = x.shape
+    y = moe_combine(out_buf, topi, pos, w, x.dtype)
+    return x + y.reshape(n, d)
+
+
+# ---------------------------------------------------------------------------
 # LM decode step as a DAG (residual branches + attention fan-out)
 # ---------------------------------------------------------------------------
 
@@ -295,6 +393,15 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
     residency (`graph.annotate_kv_residency`): placing attn{i} away from
     `kv_home` charges migrating the slot's KV over the measured transfer
     channel. None disables residency (pure dataflow comparison).
+
+    MoE dims (`dims.n_experts > 0`, see `moe_decode_dag`) replace each
+    layer's dense `mlp{i}` with the routed ladder `router{i}` (gate +
+    dispatch scatter) -> `expert{i}` (per-expert FFN over the dispatch
+    buffer) -> `combine{i}` (gather + weighted residual add), with the
+    router->expert and expert->combine edges annotated as token
+    EXCHANGES (`OpGraph.annotate_exchange`): re-distributing the
+    dispatch buffer across banks relays through the host, the volume
+    scaling with tokens x capacity (`moe_exchange_bytes`).
     """
     d = dims
     f32, i32 = jnp.float32, jnp.int32
@@ -342,12 +449,36 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
         "attn": node_from_fn("attn", attend, qkv_out, kq, vq, kind="attn"),
         "o": node_from_fn("o", f_o, attn_out, x, wo, kind="gemv_o",
                           exchange_bytes=act_bytes),
-        "mlp": node_from_fn("mlp", f_mlp, x, wup, wdown, kind="mlp",
-                            exchange_bytes=float(d.batch * d.d_ff * 4)
-                            + act_bytes),
     }
+    moe = d.n_experts > 0
+    if moe:
+        e, k, fe = d.n_experts, d.top_k, d.expert_ff
+        cap = moe_capacity(1, e, k)    # decode: 1 token per slot row
+        wr = S((dm, e), f32)
+        wu_e, wg_e = S((e, dm, fe), f32), S((e, dm, fe), f32)
+        wd_e = S((e, fe, dm), f32)
+        buf = S((d.batch, e, cap, dm), f32)
+        topi = S((d.batch, 1, k), i32)
+        pos_ = S((d.batch, 1, k), i32)
+        gate_w = S((d.batch, 1, k), f32)
+        router_fn = functools.partial(_moe_router, seq=1, top_k=k)
+        combine_fn = functools.partial(_moe_combine, seq=1)
+        xbytes = moe_exchange_bytes(d.batch, dm, k)
+        protos.update({
+            "router": node_from_fn("router", router_fn, x, wr,
+                                   kind="moe_router"),
+            "expert": node_from_fn("expert", _moe_expert, buf, wu_e, wg_e,
+                                   wd_e, kind="moe_expert"),
+            "combine": node_from_fn("combine", combine_fn, x, buf, topi,
+                                    pos_, gate_w, kind="moe_combine"),
+        })
+    else:
+        protos["mlp"] = node_from_fn(
+            "mlp", f_mlp, x, wup, wdown, kind="mlp",
+            exchange_bytes=float(d.batch * d.d_ff * 4) + act_bytes)
 
-    g = OpGraph("lm-decode-dag", input_bytes=float(d.batch * 4))
+    g = OpGraph("lm-moe-decode-dag" if moe else "lm-decode-dag",
+                input_bytes=float(d.batch * 4))
     g.add(node_from_fn("embed", f_embed, tokens, table, kind="embed"))
     res = "embed"                      # the residual stream's producer
     for i in range(d.n_layers):
@@ -360,11 +491,34 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
         if kv_home is not None:
             annotate_kv_residency(attn, kv_bytes, kv_home)
         g.add(layer_node("o", f"o{i}"), f"attn{i}", res)
-        g.add(layer_node("mlp", f"mlp{i}"), f"o{i}")
-        res = f"mlp{i}"
+        if moe:
+            g.add(layer_node("router", f"router{i}"), f"o{i}")
+            g.add(layer_node("expert", f"expert{i}"), f"router{i}")
+            g.add(layer_node("combine", f"combine{i}"), f"expert{i}",
+                  f"router{i}", f"o{i}")
+            # the token exchanges: dispatch buffer out, expert outputs back
+            g.annotate_exchange(f"router{i}", f"expert{i}", xbytes)
+            g.annotate_exchange(f"expert{i}", f"combine{i}", xbytes)
+            res = f"combine{i}"
+        else:
+            g.add(layer_node("mlp", f"mlp{i}"), f"o{i}")
+            res = f"mlp{i}"
     g.add(node_from_fn("head", f_head, x, whead, kind="gemv_head",
                        exchange_bytes=float(d.batch * d.vocab * 4)), res)
     return g
+
+
+def moe_decode_dag(dims: DecodeDims = MOE_REDUCED_DIMS, *,
+                   kv_home: str | None = "upmem_2556") -> OpGraph:
+    """The MoE decode-step DAG (`decode_dag` with routed expert layers):
+    per layer `router{i}` -> token exchange -> `expert{i}` -> combine
+    exchange -> `combine{i}`, the planner's first data-dependent-routing
+    workload. Requires MoE dims (`dims.n_experts > 0`); see `decode_dag`
+    for the exchange-edge semantics."""
+    if dims.n_experts <= 0 or dims.top_k <= 0:
+        raise ValueError("moe_decode_dag needs MoE dims "
+                         f"(n_experts/top_k), got {dims}")
+    return decode_dag(dims, kv_home=kv_home)
 
 
 # ---------------------------------------------------------------------------
@@ -483,13 +637,24 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
     frontier DP's default state budget and fall to branch-and-bound —
     the ladder behaves as designed (DESIGN.md §10).
 
+    MoE dims (`dims.n_experts > 0`) give every chunk's layer the routed
+    ladder instead of `mlp`: `router{i}/c{c}` -> `expert{i}/c{c}` ->
+    `combine{i}/c{c}`, with the router->expert and expert->combine edges
+    annotated as token exchanges (`OpGraph.annotate_exchange`, volume
+    tokens x capacity per chunk — see `decode_dag`). Capacity is per
+    chunk (`moe_capacity(t, ...)`): chunked MoE prefill drops overflow
+    tokens per chunk, not per prompt, so it is NOT output-equivalent to
+    the fused whole-prompt forward (serve.dispatch_engine docstring).
+
     `costed=False` builds the same node names / edges / insertion order
     with zero-cost nodes and no stage compilation — the structural
     skeleton `dispatch.executor.PlanExecutor` groups a ragged prompt's
-    execution timeline from (DESIGN.md §11). Attention readers also carry
-    `meta["kv_writers"]` (the earlier same-layer chunks' attention names):
-    the pipelined timeline may not start a reader before those writers'
-    KV write-backs have landed at the home."""
+    execution timeline from (DESIGN.md §11); exchange-edge annotations
+    are kept (the executor's host gather/scatter reads them). Attention
+    readers also carry `meta["kv_writers"]` (the earlier same-layer
+    chunks' attention names): the pipelined timeline may not start a
+    reader before those writers' KV write-backs have landed at the
+    home."""
     d = dims
     S_len = prefill_len if prefill_len is not None else d.seq
     c_len = chunk if chunk is not None else max(1, -(-S_len // 4))
@@ -535,7 +700,8 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
         return dataclasses.replace(src, ops=dict(src.ops),
                                    meta=dict(src.meta))
 
-    g = OpGraph("lm-prefill-dag", input_bytes=float(batch * S_len * 4))
+    g = OpGraph("lm-moe-prefill-dag" if d.n_experts else "lm-prefill-dag",
+                input_bytes=float(batch * S_len * 4))
     res: list[str | None] = [None] * len(splits)  # chunk residual producers
     for c, t in enumerate(splits):
         tokens = S((batch * t,), i32)
@@ -585,12 +751,46 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
                 exchange_bytes=act_bytes))
             g.add(dataclasses.replace(node, name=f"o{i}/c{c}"),
                   f"attn{i}/c{c}", res[c])
-            node = proto("mlp", t, lambda: node_from_fn(
-                "mlp", f_mlp, x, wup, wdown, kind="mlp",
-                exchange_bytes=float(rows * d.d_ff * 4) + act_bytes))
-            g.add(dataclasses.replace(node, name=f"mlp{i}/c{c}"),
-                  f"o{i}/c{c}")
-            res[c] = f"mlp{i}/c{c}"
+            if d.n_experts:            # routed MoE ladder for this chunk
+                e, k = d.n_experts, d.top_k
+                cap = moe_capacity(t, e, k)
+                wr = S((dm, e), f32)
+                fe = d.expert_ff
+                wu_e, wg_e = S((e, dm, fe), f32), S((e, dm, fe), f32)
+                wd_e = S((e, fe, dm), f32)
+                buf = S((batch, e, cap, dm), f32)
+                topi = S((batch, t, k), i32)
+                pos_ = S((batch, t, k), i32)
+                gate_w = S((batch, t, k), f32)
+                r_fn = functools.partial(_moe_router, seq=t, top_k=k)
+                c_fn = functools.partial(_moe_combine, seq=t)
+                node = proto("router", t, lambda: node_from_fn(
+                    "router", r_fn, x, wr, kind="moe_router"))
+                g.add(dataclasses.replace(node, name=f"router{i}/c{c}"),
+                      f"o{i}/c{c}")
+                node = proto("expert", t, lambda: node_from_fn(
+                    "expert", _moe_expert, buf, wu_e, wg_e, wd_e,
+                    kind="moe_expert"))
+                g.add(dataclasses.replace(node, name=f"expert{i}/c{c}"),
+                      f"router{i}/c{c}")
+                node = proto("combine", t, lambda: node_from_fn(
+                    "combine", c_fn, x, buf, topi, pos_, gate_w,
+                    kind="moe_combine"))
+                g.add(dataclasses.replace(node, name=f"combine{i}/c{c}"),
+                      f"expert{i}/c{c}", f"router{i}/c{c}", f"o{i}/c{c}")
+                xbytes = moe_exchange_bytes(rows, dm, k)
+                g.annotate_exchange(f"router{i}/c{c}", f"expert{i}/c{c}",
+                                    xbytes)
+                g.annotate_exchange(f"expert{i}/c{c}", f"combine{i}/c{c}",
+                                    xbytes)
+                res[c] = f"combine{i}/c{c}"
+            else:
+                node = proto("mlp", t, lambda: node_from_fn(
+                    "mlp", f_mlp, x, wup, wdown, kind="mlp",
+                    exchange_bytes=float(rows * d.d_ff * 4) + act_bytes))
+                g.add(dataclasses.replace(node, name=f"mlp{i}/c{c}"),
+                      f"o{i}/c{c}")
+                res[c] = f"mlp{i}/c{c}"
             c0 += t
     t_last = splits[-1]
     x_last = S((batch * t_last, dm), f32)

@@ -301,31 +301,25 @@ def moe_defs(cfg: ModelConfig, name: str) -> dict:
     return defs
 
 
-def moe_forward(x, p, cfg: ModelConfig, shd: Shardings):
-    """Top-k expert MLP with per-sequence capacity dispatch.
-
-    Tokens are dispatched into an (E, C) buffer per batch row via scatter;
-    positions are row-local cumsums so no cross-device prefix is needed
-    (the dispatch stays bank-local in the paper's sense; only the expert
-    einsum itself is sharded). Overflow tokens are dropped (standard
-    capacity-factor semantics); an aux load-balancing loss is returned.
-    """
+def moe_dispatch(x, router, cfg: ModelConfig):
+    """Router + top-k gate + capacity scatter: the token-side half of the
+    MoE dispatch. Returns `(buf, topi, pos, w, gates)` — the (B, E, C, D)
+    dispatch buffer (the tensor an expert-parallel layout re-distributes
+    across devices/banks), each token's expert ids / capacity positions /
+    normalized kept-gate weights (what the combine needs back), and the
+    raw gate softmax (for the aux loss). Positions are ROW-LOCAL cumsums,
+    so no cross-device prefix is needed and batch rows may shard freely;
+    overflow tokens beyond `CAPACITY_FACTOR` drop (standard semantics).
+    Shared by the fused `moe_forward` and the dispatch serving stages
+    (`serve.dispatch_engine._MoeStageMixin`) so the two paths cannot
+    drift."""
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     cap = max(int(CAPACITY_FACTOR * k * s / e), 1)
-    act = _act_fn(cfg)
-
-    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router)
     gates = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(gates, k)          # (B,S,k)
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
-
-    # aux load-balance loss (Switch-style)
-    me = jnp.mean(gates, axis=(0, 1))
-    ce = jnp.mean(
-        jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=2),
-        axis=(0, 1)) / k
-    aux = e * jnp.sum(me * ce)
 
     # row-local position of each (token, slot) inside its expert
     onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)      # (B,S,k,E)
@@ -341,27 +335,68 @@ def moe_forward(x, p, cfg: ModelConfig, shd: Shardings):
     buf = buf.at[bidx, topi, jnp.where(keep, pos, cap - 1)].add(
         jnp.where(keep[..., None], x[:, :, None, :], 0).astype(x.dtype),
         mode="drop")
+    return buf, topi, pos, w, gates
 
-    # constrain the expert einsum OUTPUTS to tp-sharded tiles: left to
-    # itself GSPMD all-reduced full-F f32 partials (18.8 GB/layer); with
-    # the constraint the d-contraction partial-sum reduces tp-sharded bf16
-    # tiles instead (§Perf, mixtral collective iteration — the explicit
-    # weight-gather variant was REFUTED: it replicated the contraction)
-    up = jnp.einsum("becd,edf->becf", buf, p["wu"].astype(x.dtype))
+
+def moe_expert_ffn(buf, p, cfg: ModelConfig, shd: Shardings):
+    """The per-expert (gated) FFN over the (B, E, C, D) dispatch buffer —
+    embarrassingly parallel over the expert axis, which is exactly what
+    an expert-parallel layout shards. Shared by `moe_forward` and the
+    dispatch serving stages.
+
+    Sharding note: constrain the expert einsum OUTPUTS to tp-sharded
+    tiles — left to itself GSPMD all-reduced full-F f32 partials
+    (18.8 GB/layer); with the constraint the d-contraction partial-sum
+    reduces tp-sharded bf16 tiles instead (§Perf, mixtral collective
+    iteration — the explicit weight-gather variant was REFUTED: it
+    replicated the contraction)."""
+    act = _act_fn(cfg)
+    up = jnp.einsum("becd,edf->becf", buf, p["wu"].astype(buf.dtype))
     up = shd.act(up, "batch", None, None, "tp")
     if cfg.gated_mlp:
         gate = act(jnp.einsum("becd,edf->becf", buf,
-                              p["wg"].astype(x.dtype)))
+                              p["wg"].astype(buf.dtype)))
         gate = shd.act(gate, "batch", None, None, "tp")
         up = gate * up
     else:
         up = act(up)
-    out_buf = jnp.einsum("becf,efd->becd", up, p["wd"].astype(x.dtype))
-    out_buf = shd.act(out_buf, "batch", None, None, None)
+    out_buf = jnp.einsum("becf,efd->becd", up, p["wd"].astype(buf.dtype))
+    return shd.act(out_buf, "batch", None, None, None)
 
-    # gather back and combine
+
+def moe_combine(out_buf, topi, pos, w, dtype):
+    """Gather each token's expert outputs back from the (B, E, C, D)
+    buffer and combine with the normalized gate weights (the token-side
+    tail of the MoE layer; dropped tokens gather a clamped slot whose
+    weight is zero). Shared by `moe_forward` and the dispatch serving
+    stages."""
+    bidx = jnp.arange(out_buf.shape[0])[:, None, None]
     gathered = out_buf[bidx, topi, pos]                    # (B,S,k,D)
-    y = jnp.sum(gathered * w[..., None].astype(x.dtype), axis=2)
+    return jnp.sum(gathered * w[..., None].astype(dtype), axis=2)
+
+
+def moe_forward(x, p, cfg: ModelConfig, shd: Shardings):
+    """Top-k expert MLP with per-sequence capacity dispatch.
+
+    Tokens are dispatched into an (E, C) buffer per batch row via scatter
+    (`moe_dispatch`), crunched by the per-expert FFN (`moe_expert_ffn`),
+    and gathered back (`moe_combine`) — the three slices the dispatch
+    serving engine runs as separate planner stages around its token/
+    combine exchanges. Overflow tokens are dropped (standard
+    capacity-factor semantics); an aux load-balancing loss is returned.
+    """
+    e, k = cfg.n_experts, cfg.top_k
+    buf, topi, pos, w, gates = moe_dispatch(x, p["router"], cfg)
+
+    # aux load-balance loss (Switch-style)
+    me = jnp.mean(gates, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    out_buf = moe_expert_ffn(buf, p, cfg, shd)
+    y = moe_combine(out_buf, topi, pos, w, x.dtype)
 
     if cfg.n_shared_experts:
         sh = mlp_forward(x, p["shared"], cfg, shd)

@@ -45,9 +45,16 @@ The chosen assignment routes stages by name; `force_assignment` overrides
 it for tests and ablations (the executor regroups its timeline around the
 override).
 
-Scope: dense attention decoder LMs (every pattern position `attn`+`dense`,
-no cross-attention/MoE/SSM) with an unsharded host mesh — the dispatch
-layer does its own distribution through the BankGrid.
+Scope: attention decoder LMs with dense OR routed-MoE MLPs (every pattern
+position `attn`+`dense`/`attn`+`moe`; no cross-attention/SSM/shared
+experts) with an unsharded host mesh — the dispatch layer does its own
+distribution through the BankGrid. MoE layers run as the routed ladder
+`router{i}` -> token exchange -> `expert{i}` -> combine exchange ->
+`combine{i}` (`_MoeStageMixin`): the planner's exchange edges
+(`OpGraph.annotate_exchange`) price the host-relayed all-to-all the
+dispatch/combine pay on PIM, and the executor performs it as a host
+gather/scatter around the expert face, which shards the EXPERT axis over
+the grid's banks (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -78,21 +85,96 @@ def dims_for_config(cfg: ModelConfig, batch_slots: int,
         d_ff=cfg.d_ff, seq=cache_lib.cache_width(cfg, max_len),
         vocab=cfg.padded_vocab, n_layers=cfg.n_layers, batch=batch_slots,
         n_kv_heads=cfg.n_kv_heads,
-        kv_itemsize=jnp.dtype(cfg.dtype).itemsize)
+        kv_itemsize=jnp.dtype(cfg.dtype).itemsize,
+        n_experts=cfg.n_experts, top_k=cfg.top_k, moe_d_ff=cfg.moe_d_ff)
 
 
 def _check_dispatchable(cfg: ModelConfig, shd: Shardings) -> None:
     pattern = cfg.layer_pattern()
     ok = (len(pattern) == 1 and pattern[0].kind == "attn"
-          and pattern[0].mlp == "dense" and not pattern[0].cross_attn
+          and pattern[0].mlp in ("dense", "moe") and not pattern[0].cross_attn
           and not cfg.encoder_layers)
     if not ok:
         raise ValueError(
-            f"engine='dispatch' supports dense attention decoders; "
-            f"{cfg.name} has pattern {pattern}")
+            f"engine='dispatch' supports dense attention decoders (dense "
+            f"or routed-MoE MLPs); {cfg.name} has pattern {pattern}")
+    if pattern[0].mlp == "moe" and cfg.n_shared_experts:
+        raise ValueError(
+            f"engine='dispatch' MoE support covers routed experts only "
+            f"(router -> exchange -> expert FFNs -> combine); {cfg.name} "
+            "has shared experts")
     if shd.mesh is not None:
         raise ValueError("engine='dispatch' distributes through the "
                          "BankGrid; pass an unsharded Shardings")
+
+
+class _MoeStageMixin:
+    """Shared MoE stage bodies for the dispatch serving steps: the routed
+    ladder `router -> (token exchange) -> expert -> (combine exchange) ->
+    combine`, each calling the SAME library slice the fused engine's
+    `models.layers.moe_forward` is composed of (`L.moe_dispatch`,
+    `L.moe_expert_ffn`, `L.moe_combine`) — code reuse, not a hand-kept
+    mirror, so the two paths cannot drift. The router and combine are
+    token-side (capacity positions are row-local cumsums, so decode may
+    shard slots over banks; prefill replicates them — a chunk's cumsum
+    spans the whole chunk); the expert FFN is the bank-parallel face,
+    sharded over the EXPERT axis (each bank owns its experts' weights
+    and dispatch rows)."""
+
+    def _router_fn(self, x, ln2, router):
+        h = L.apply_norm(x, ln2, self.cfg)
+        buf, topi, pos, w, _ = L.moe_dispatch(h, router, self.cfg)
+        return buf, topi, pos, w
+
+    def _expert_fn(self, buf, wu, wg, wd):
+        return L.moe_expert_ffn(buf, {"wu": wu, "wg": wg, "wd": wd},
+                                self.cfg, self.shd)
+
+    def _expert_fn_ungated(self, buf, wu, wd):
+        return L.moe_expert_ffn(buf, {"wu": wu, "wd": wd}, self.cfg,
+                                self.shd)
+
+    def _combine_fn(self, x, out_buf, topi, pos, w):
+        y = L.moe_combine(out_buf, topi, pos, w, x.dtype)
+        y = self.shd.act(y, "batch", "seq", None)
+        x = x + y
+        return self.shd.act(x, "batch", "seq", None)
+
+    def _moe_stage_defs(self, token_axis: int | None):
+        """The three MoE StageDefs: `token_axis` is the bank-shard axis of
+        token-side tensors (0 for decode's slot sharding; None for
+        prefill — a chunk's capacity cumsum spans the whole chunk, so
+        router/combine replicate). The expert face always shards the
+        expert axis (buf axis 1, weight axis 0) over banks."""
+        ta = token_axis
+        if self.cfg.gated_mlp:
+            expert = StageDef("expert", self._expert_fn, (1, 0, 0, 0), (1,))
+        else:
+            expert = StageDef("expert", self._expert_fn_ungated,
+                              (1, 0, 0), (1,))
+        return [
+            StageDef("router", self._router_fn, (ta, None, None),
+                     (ta, ta, ta, ta)),
+            expert,
+            StageDef("combine", self._combine_fn, (ta,) * 5, (ta,)),
+        ]
+
+    def _bind_moe(self, name, env, lp, chunk: str = ""):
+        """Argument tuples for the MoE stages (decode names have no
+        `chunk` suffix; prefill passes `"/c{c}"`)."""
+        kind, i, _ = workloads.parse_stage_name(name)
+        mp = lp[i]["mlp"]
+        if kind == "router":
+            return env[f"o{i}{chunk}"], lp[i]["ln2"], mp["router"]
+        if kind == "expert":
+            buf = env[f"router{i}{chunk}"][0]
+            return ((buf, mp["wu"], mp["wg"], mp["wd"])
+                    if self.cfg.gated_mlp else (buf, mp["wu"], mp["wd"]))
+        if kind == "combine":
+            _, topi, pos, w = env[f"router{i}{chunk}"]
+            return (env[f"o{i}{chunk}"], env[f"expert{i}{chunk}"],
+                    topi, pos, w)
+        raise KeyError(f"unknown MoE stage {name!r}")
 
 
 def make_dispatch_decode_step(cfg: ModelConfig, shd: Shardings,
@@ -103,9 +185,13 @@ def make_dispatch_decode_step(cfg: ModelConfig, shd: Shardings,
     return DispatchDecodeStep(cfg, shd, **kwargs)
 
 
-class DispatchDecodeStep:
+class DispatchDecodeStep(_MoeStageMixin):
     """Planner-routed decode step with the jit engine's call signature —
-    a thin workload adapter over `dispatch.executor.PlanExecutor`."""
+    a thin workload adapter over `dispatch.executor.PlanExecutor`. MoE
+    configs route each layer's routed ladder (router -> token exchange ->
+    expert -> combine exchange -> combine) through the same executor,
+    with expert FFNs sharded over the BankGrid's banks when placed on
+    PIM (`_MoeStageMixin`)."""
 
     def __init__(self, cfg: ModelConfig, shd: Shardings, *,
                  batch_slots: int, max_len: int, temperature: float = 0.0,
@@ -132,9 +218,13 @@ class DispatchDecodeStep:
         # routing contract — any drift must fail loudly here, not fall
         # back to host execution (which the token-identity tests could
         # never distinguish from a correctly routed plan)
+        self._moe = cfg.n_experts > 0
+        mlp_kinds = (("router", "expert", "combine") if self._moe
+                     else ("mlp",))
         expected = {"embed", "head"}
         for i in range(cfg.n_blocks):
-            expected |= {f"qkv{i}", f"attn{i}", f"o{i}", f"mlp{i}"}
+            expected |= {f"qkv{i}", f"attn{i}", f"o{i}"}
+            expected |= {f"{kd}{i}" for kd in mlp_kinds}
         missing = expected - set(self.assignment)
         if missing:
             raise ValueError(f"plan is missing stages {sorted(missing)}; "
@@ -153,13 +243,19 @@ class DispatchDecodeStep:
 
     def _stage_defs(self):
         """StageDefs for the decode DAG: batch slots shard on axis 0 of
-        every flowing tensor, weights replicate."""
+        every flowing tensor, weights replicate. MoE layers swap the
+        dense `mlp` for the routed trio — router/combine stay slot-
+        sharded (capacity positions are row-local), the expert FFN
+        shards the EXPERT axis over banks."""
+        mlp_defs = (self._moe_stage_defs(token_axis=0) if self._moe
+                    else [StageDef("mlp", self._mlp_fn, (0, None, None),
+                                   (0,))])
         return [
             StageDef("embed", self._embed_fn, (None, 0, 0), (0, 0, 0)),
             StageDef("qkv", self._qkv_fn, (0, 0, 0, None, None), (0, 0, 0)),
             StageDef("attn", self._attn_fn, (0,) * 6, (0, 0, 0)),
             StageDef("o", self._o_fn, (0, 0, None), (0,)),
-            StageDef("mlp", self._mlp_fn, (0, None, None), (0,)),
+            *mlp_defs,
             StageDef("head", self._head_fn, (0, None, None), (0,)),
         ]
 
@@ -220,9 +316,10 @@ class DispatchDecodeStep:
         lp = [jax.tree.map(lambda l, i=i: l[i], stacked)
               for i in range(cfg.n_blocks)]
         wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        res_kind = "combine" if self._moe else "mlp"
 
         def residual(env, i):
-            return env[f"mlp{i - 1}"] if i else env["embed"][0]
+            return env[f"{res_kind}{i - 1}"] if i else env["embed"][0]
 
         def bind(name, env):
             kind, i, _ = workloads.parse_stage_name(name)
@@ -240,8 +337,10 @@ class DispatchDecodeStep:
                 return residual(env, i), env[f"attn{i}"][0], lp[i]["attn"]
             if kind == "mlp":
                 return env[f"o{i}"], lp[i]["ln2"], lp[i]["mlp"]
+            if kind in ("router", "expert", "combine"):
+                return self._bind_moe(name, env, lp)
             if kind == "head":
-                return (env[f"mlp{cfg.n_blocks - 1}"],
+                return (env[f"{res_kind}{cfg.n_blocks - 1}"],
                         params["final_norm"], wv)
             raise KeyError(f"unknown decode stage {name!r}")
         return bind
@@ -274,7 +373,7 @@ class DispatchDecodeStep:
 # planner-routed chunked prefill
 # ------------------------------------------------------------------- #
 
-class DispatchPrefillStep:
+class DispatchPrefillStep(_MoeStageMixin):
     """Planner-routed chunked prefill with the engine's prefill-one
     signature: `(params, cache, tokens, slot) -> (last_logits, new_cache)`
     — a thin workload adapter over `dispatch.executor.PlanExecutor`.
@@ -317,7 +416,17 @@ class DispatchPrefillStep:
     library-call-for-library-call, but per-stage jit boundaries change
     XLA fusion, so agreement with the fused engine is ulp-level, not
     bitwise (module docstring); prompts at or above the fused path's
-    flash-attention threshold (2048 tokens) are out of scope."""
+    flash-attention threshold (2048 tokens) are out of scope.
+
+    MoE configs run each chunk's routed ladder (router -> exchange ->
+    expert -> exchange -> combine) with expert capacity derived from the
+    CHUNK length, not the whole prompt — overflow tokens drop per chunk,
+    so multi-chunk MoE prefill is deliberately NOT output-equivalent to
+    the fused whole-prompt forward (a single chunk covering the prompt
+    is). It IS deterministic across bank counts (experts compute
+    independently), which is what the multi-bank identity gate pins; the
+    fused-vs-dispatch MoE token gates therefore prefill fused or
+    single-chunk (tests/test_serve.py)."""
 
     def __init__(self, cfg: ModelConfig, shd: Shardings, *,
                  max_len: int, grid: BankGrid | None = None,
@@ -350,12 +459,15 @@ class DispatchPrefillStep:
         if force_assignment:
             self.assignment.update(force_assignment)
         # routing contract: executable stage names == DAG node names
+        self._moe = cfg.n_experts > 0
+        mlp_kinds = (("router", "expert", "combine") if self._moe
+                     else ("mlp",))
         expected = {"head"}
         for c in range(self.n_chunks_planned):
             expected.add(f"embed/c{c}")
             for i in range(cfg.n_blocks):
-                expected |= {f"qkv{i}/c{c}", f"attn{i}/c{c}",
-                             f"o{i}/c{c}", f"mlp{i}/c{c}"}
+                expected |= {f"qkv{i}/c{c}", f"attn{i}/c{c}", f"o{i}/c{c}"}
+                expected |= {f"{kd}{i}/c{c}" for kd in mlp_kinds}
         missing = expected - set(self.assignment)
         if missing:
             raise ValueError(f"plan is missing stages {sorted(missing)}; "
@@ -381,13 +493,19 @@ class DispatchPrefillStep:
     def _stage_defs(self):
         """StageDefs for the prefill DAG: a chunk's token rows shard on
         axis 1 (axis 0 for the 1-D positions array), weights and the KV
-        prefix replicate."""
+        prefix replicate. MoE layers swap the dense `mlp` for the routed
+        trio — router/combine replicate (a chunk's capacity cumsum spans
+        the whole chunk, so token-sharding would change which tokens
+        overflow), the expert FFN shards the EXPERT axis over banks."""
+        mlp_defs = (self._moe_stage_defs(token_axis=None) if self._moe
+                    else [StageDef("mlp", self._mlp_fn, (1, None, None),
+                                   (1,))])
         return [
             StageDef("embed", self._embed_fn, (None, 1, 1), (1, 1, 1)),
             StageDef("qkv", self._qkv_fn, (1, 1, 1, None, None), (1, 1, 1)),
             StageDef("attn", self._attn_fn, (1, None, None, 0), (1,)),
             StageDef("o", self._o_fn, (1, 1, None), (1,)),
-            StageDef("mlp", self._mlp_fn, (1, None, None), (1,)),
+            *mlp_defs,
             StageDef("head", self._head_fn, (1, None, None), (1,)),
         ]
 
@@ -530,10 +648,13 @@ class DispatchPrefillStep:
             return parts[0] if len(parts) == 1 \
                 else jnp.concatenate(parts, axis=1)
 
+        res_kind = "combine" if self._moe else "mlp"
+
         def bind(name, env):
             kind, i, c = workloads.parse_stage_name(name)
             if kind == "head":
-                return (env[f"mlp{cfg.n_blocks - 1}/c{len(splits) - 1}"],
+                return (env[f"{res_kind}{cfg.n_blocks - 1}"
+                            f"/c{len(splits) - 1}"],
                         params["final_norm"], wv)
             c0, t = offs[c], splits[c]
             if kind == "embed":
@@ -541,7 +662,7 @@ class DispatchPrefillStep:
                 return (params["embed"], toks[:, c0:c0 + t],
                         jnp.broadcast_to(q_pos[None, :], (1, t)))
             if kind == "qkv":
-                x = (env[f"mlp{i - 1}/c{c}"] if i
+                x = (env[f"{res_kind}{i - 1}/c{c}"] if i
                      else env[f"embed/c{c}"][0])
                 _, sin, cos = env[f"embed/c{c}"]
                 return x, sin, cos, lp[i]["ln1"], lp[i]["attn"]
@@ -551,11 +672,13 @@ class DispatchPrefillStep:
                 return (q, kv_prefix(env, i, c, 1),
                         kv_prefix(env, i, c, 2), q_pos)
             if kind == "o":
-                x = (env[f"mlp{i - 1}/c{c}"] if i
+                x = (env[f"{res_kind}{i - 1}/c{c}"] if i
                      else env[f"embed/c{c}"][0])
                 return x, env[f"attn{i}/c{c}"], lp[i]["attn"]
             if kind == "mlp":
                 return env[f"o{i}/c{c}"], lp[i]["ln2"], lp[i]["mlp"]
+            if kind in ("router", "expert", "combine"):
+                return self._bind_moe(name, env, lp, chunk=f"/c{c}")
             raise KeyError(f"unknown prefill stage {name!r}")
         return bind
 

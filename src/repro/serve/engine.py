@@ -17,7 +17,9 @@ different lengths share one batch (continuous batching):
     dispatch, BOTH phases flow through the offload planner (decode over
     the decode DAG, prefill chunked over the prefill DAG) and execute
     through the unified plan executor's schedule timeline (DESIGN.md
-    §9-§11).
+    §9-§11). Dense and routed-MoE decoders both dispatch: MoE layers
+    run as the planner's exchange-phase ladder (router -> token
+    exchange -> bank-sharded expert FFNs -> combine, DESIGN.md §12).
 """
 
 from __future__ import annotations

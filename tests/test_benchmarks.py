@@ -30,12 +30,15 @@ def test_dispatch_bench_smoke(capsys):
     out = capsys.readouterr().out
     assert "hybrid" in out and "allclose" in out.lower()
     assert "overlapped" in out          # sweep 5: the prefill DAG
+    assert "MoE" in out                 # sweep 6: the exchange phase
 
 
 def test_dispatch_bench_quick_smoke(capsys):
     """The CI coverage job's `benchmarks.run dispatch_bench --quick`
-    path: the reduced prefill-DAG sweep with its acceptance asserts."""
+    path: the reduced prefill-DAG sweep plus the reduced MoE
+    exchange-phase sweep, with their acceptance asserts."""
     from benchmarks import dispatch_bench
     dispatch_bench.run(Report(), quick=True)
     out = capsys.readouterr().out
     assert "prefill" in out.lower() and "objective=overlapped" in out
+    assert "MoE" in out and "exchange" in out.lower()

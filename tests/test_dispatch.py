@@ -361,6 +361,199 @@ def test_schedule_books_kv_writeback(prefill_graph):
 
 
 # ------------------------------------------------------------------ #
+# MoE routing as an exchange phase (ISSUE-5)
+# ------------------------------------------------------------------ #
+
+@pytest.fixture(scope="module")
+def moe_dag():
+    """Reduced MoE decode DAG (4 experts top-2, routed ladder/layer)."""
+    return workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS)
+
+
+def test_moe_decode_dag_structure(moe_dag):
+    d = workloads.MOE_REDUCED_DIMS
+    # per layer: qkv, attn, o, router, expert, combine (+ embed, head)
+    assert len(moe_dag.nodes) == 6 * d.n_layers + 2
+    preds = moe_dag.preds
+    assert preds["expert0"] == ["router0"]
+    assert sorted(preds["combine0"]) == ["expert0", "o0", "router0"]
+    assert preds["qkv1"] == ["combine0"]
+    # the routed fan-out stays inside the exact frontier-DP class
+    assert moe_dag.max_frontier() == 3
+    assert plan(moe_dag).method == "dag-dp"
+    # dense dims refuse the MoE entry point
+    with pytest.raises(ValueError, match="MoE dims"):
+        workloads.moe_decode_dag(workloads.REDUCED_DIMS)
+
+
+def test_moe_exchange_edges_scale_with_tokens_not_experts(moe_dag):
+    """The exchange annotation's volume contract: tokens x capacity, not
+    expert count — doubling the expert count must not change the bytes,
+    doubling the tokens must double them."""
+    d = workloads.MOE_REDUCED_DIMS
+    xb = moe_dag.exchange_edges[("router0", "expert0")]
+    assert xb == pytest.approx(
+        workloads.moe_exchange_bytes(d.batch, d.d_model, d.top_k))
+    assert moe_dag.exchange_edges[("expert0", "combine0")] == xb
+    import dataclasses as dc
+    wide = workloads.moe_decode_dag(dc.replace(d, n_experts=2 * d.n_experts))
+    assert wide.exchange_edges[("router0", "expert0")] == xb
+    assert workloads.moe_exchange_bytes(2 * d.batch, d.d_model, d.top_k) \
+        == pytest.approx(2 * xb)
+    # annotating a non-edge fails loudly
+    with pytest.raises(ValueError, match="no edge"):
+        moe_dag.annotate_exchange("qkv0", "combine0", 1.0)
+
+
+def test_exchange_time_charges_only_same_pim_device():
+    """The exchange cost model: a bank re-distribution round-trips
+    through host DRAM only when both endpoints share a PIM device
+    (Takeaway 3); host-local shuffles are free and cross-device edges
+    ride the ordinary boundary transfer."""
+    from repro.core.pim_model import UPMEM_2556
+    from repro.dispatch.placement import exchange_time
+    nbytes = 1e8
+    t = exchange_time("upmem_2556", "upmem_2556", nbytes)
+    assert t == pytest.approx(nbytes / UPMEM_2556.dpu_to_host_bw
+                              + nbytes / UPMEM_2556.host_to_dpu_bw)
+    assert exchange_time("xeon", "xeon", nbytes) == 0.0
+    assert exchange_time("titan_v", "titan_v", nbytes) == 0.0
+    assert exchange_time("xeon", "upmem_2556", nbytes) == 0.0
+    assert exchange_time("upmem_2556", "xeon", nbytes) == 0.0
+
+
+def test_evaluate_books_exchange_on_pure_pim(moe_dag):
+    """Plan totals: pure PIM pays both exchanges per layer; plans that
+    split the exchange endpoints across devices pay none (the boundary
+    transfer covers the relay)."""
+    from repro.dispatch.placement import exchange_time
+    d = workloads.MOE_REDUCED_DIMS
+    pim = pure_plan(moe_dag, "upmem_2556")
+    per_edge = exchange_time("upmem_2556", "upmem_2556",
+                             moe_dag.exchange_edges[("router0", "expert0")])
+    assert pim.exchange_s == pytest.approx(2 * d.n_layers * per_edge)
+    assert pure_plan(moe_dag, "xeon").exchange_s == 0.0
+    split = {n: "xeon" for n in moe_dag.nodes}
+    for i in range(d.n_layers):
+        split[f"expert{i}"] = "upmem_2556"
+    assert evaluate(moe_dag, split).exchange_s == 0.0
+
+
+def test_schedule_books_exchange_as_channel_occupancy(moe_dag):
+    """Schedule/Plan agreement on exchange graphs: a pure-PIM timeline
+    books every exchange into `LaunchGroup.exchange_s` (serialized into
+    `overlapped_s` — an exchange can never hide under its own group's
+    compute), and the pipelined sim treats it as shared-channel traffic,
+    never beating the impossible exchange-free timeline by more than the
+    exchanges it cannot remove."""
+    from repro.dispatch.schedule import TRANSFER_SETUP_S
+    d = workloads.MOE_REDUCED_DIMS
+    pim = pure_plan(moe_dag, "upmem_2556")
+    sched = make_schedule(moe_dag, pim, pipelined=True)
+    assert len(sched.groups) == 1
+    g = sched.groups[0]
+    assert g.n_exchanges == 2 * d.n_layers
+    assert g.exchange_s == pytest.approx(
+        pim.exchange_s + g.n_exchanges * 2 * TRANSFER_SETUP_S)
+    assert g.overlapped_s >= g.compute_s + g.exchange_s
+    assert sched.pipelined_s <= sched.overlapped_s + 1e-15
+    # host groups book nothing
+    host = make_schedule(moe_dag, pure_plan(moe_dag, "xeon"))
+    assert all(grp.n_exchanges == 0 for grp in host.groups)
+
+
+def test_pipelined_transfer_bound_exchange_group_not_double_charged():
+    """Review regression: a PIM group whose batched INPUT transfer
+    dominates its compute and which also contains an exchange edge must
+    not charge the input streaming twice — the exchange queues after the
+    group's overlap window (the serial algebra), so `pipelined_s <=
+    overlapped_s` holds on transfer-bound exchange groups too."""
+    g = OpGraph("xbound", input_bytes=0.0)
+    g.add(OpNode("a", "x", 1e6, 1e8, 5e8))         # huge boundary tensor
+    g.add(OpNode("b", "x", 1e6, 1e6, 1e6,
+                 ops={("add", "int32"): 1e6}), "a")
+    g.add(OpNode("c", "x", 1e6, 1e6, 1e4,
+                 ops={("add", "int32"): 1e6}), "b")
+    g.annotate_exchange("b", "c", 1e6)
+    p = evaluate(g, {"a": "xeon", "b": "upmem_2556", "c": "upmem_2556"})
+    sched = make_schedule(g, p, pipelined=True)
+    pim = sched.groups[-1]
+    assert pim.n_exchanges == 1
+    assert pim.in_transfer_s - pim.relay_s > pim.compute_s  # transfer-bound
+    assert sched.pipelined_s <= sched.overlapped_s + 1e-15
+
+
+def test_moe_paper_hybrid_beats_steelmanned_pures():
+    """The ISSUE-5 acceptance at paper scale (mixtral-8x7b dims): the
+    planner's hybrid strictly beats pure CPU (KV re-homed to the host)
+    and pure PIM (KV at home, but float experts + two host-relayed
+    exchanges per layer) — attention pinned to the bank-resident KV,
+    router/experts/GEMVs on the host."""
+    dims = workloads.MOE_PAPER_DIMS
+    dag = workloads.moe_decode_dag(dims)
+    hybrid = plan(dag)
+    cpu = pure_plan(workloads.moe_decode_dag(dims, kv_home="xeon"), "xeon")
+    pim = pure_plan(dag, "upmem_2556")
+    assert hybrid.total_s < cpu.total_s
+    assert hybrid.total_s < pim.total_s
+    assert hybrid.method == "dag-dp"
+    assert pim.exchange_s > 0 and hybrid.exchange_s == 0.0
+    a = hybrid.assignment
+    assert a["attn0"] == "upmem_2556"
+    assert a["expert0"] == "xeon" and a["router0"] == "xeon"
+
+
+def test_moe_prefill_dag_and_skeleton_parity():
+    """MoE prefill DAGs carry the routed ladder per chunk with per-chunk
+    exchange volumes, and the structural skeleton agrees on nodes, edges
+    AND exchange annotations (the executor's host gather/scatter reads
+    them from the skeleton)."""
+    d = workloads.MOE_REDUCED_DIMS
+    g = workloads.prefill_dag(d, prefill_len=8, chunk=4)
+    assert sorted(g.preds["combine0/c1"]) == \
+        ["expert0/c1", "o0/c1", "router0/c1"]
+    assert g.preds["qkv1/c0"] == ["combine0/c0"]
+    xb = workloads.moe_exchange_bytes(4, d.d_model, d.top_k)
+    assert g.exchange_edges[("router0/c0", "expert0/c0")] == xb
+    skel = workloads.prefill_dag(d, prefill_len=8, chunk=4, costed=False)
+    assert set(skel.nodes) == set(g.nodes)
+    assert skel.edges == g.edges
+    assert skel.exchange_edges == g.exchange_edges
+
+
+def test_facecache_moe_and_dense_kinds_share_without_recompiling(bank_grid):
+    """ISSUE-5 satellite regression: MoE and dense stage kinds sharing
+    one FaceCache must not collide (duplicate kinds fail loudly) and must
+    not recompile per step — one trace per kind across repeated
+    same-shape calls."""
+    import collections
+    from repro.dispatch.executor import FaceCache, StageDef
+    traces = collections.Counter()
+
+    def mk(kind):
+        def fn(x):
+            traces[kind] += 1          # counted at trace time only
+            return x + 1
+        return fn
+
+    kinds = ("mlp", "router", "expert", "combine")
+    faces = FaceCache([StageDef(k, mk(k), (0,), (0,)) for k in kinds],
+                      bank_grid)
+    x = jnp.zeros((4,), jnp.float32)
+    for _ in range(5):                 # five "steps", same shapes
+        for k in kinds:
+            faces.host(k)(x)
+    assert all(traces[k] == 1 for k in kinds), dict(traces)
+    # a second executor sharing the cache adds no traces either
+    for k in kinds:
+        faces.host(k)(x)
+    assert all(traces[k] == 1 for k in kinds), dict(traces)
+    with pytest.raises(ValueError, match="duplicate"):
+        FaceCache([StageDef("mlp", mk("a"), (0,), (0,)),
+                   StageDef("mlp", mk("b"), (0,), (0,))], bank_grid)
+
+
+# ------------------------------------------------------------------ #
 # schedule-aware objective (objective="overlapped")
 # ------------------------------------------------------------------ #
 

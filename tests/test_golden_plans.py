@@ -88,6 +88,20 @@ def _graph_builders():
         "lm-prefill-dag-reduced": (
             lambda: workloads.prefill_dag(workloads.REDUCED_DIMS,
                                           prefill_len=8, chunk=4), TWO_DEV),
+        # ISSUE-5: MoE routing as an exchange phase — decode + prefill,
+        # paper (mixtral-8x7b dims) and reduced
+        "lm-moe-decode-dag": (
+            lambda: workloads.moe_decode_dag(workloads.MOE_PAPER_DIMS),
+            TWO_DEV),
+        "lm-moe-decode-dag-reduced": (
+            lambda: workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS),
+            TWO_DEV),
+        "lm-moe-prefill-dag": (
+            lambda: workloads.prefill_dag(workloads.MOE_PAPER_DIMS,
+                                          **_PREFILL_PAPER), TWO_DEV),
+        "lm-moe-prefill-dag-reduced": (
+            lambda: workloads.prefill_dag(workloads.MOE_REDUCED_DIMS,
+                                          prefill_len=8, chunk=4), TWO_DEV),
     }
     for counts in prim.all_ref_counts():
         builders[f"prim/{counts.name}"] = (
@@ -116,7 +130,9 @@ def _cases():
     for name in _graph_builders():
         cases[name] = (name, "serial")
     for name in ("lm-decode-dag", "lm-prefill-dag",
-                 "lm-prefill-dag-reduced"):
+                 "lm-prefill-dag-reduced", "lm-moe-decode-dag",
+                 "lm-moe-decode-dag-reduced", "lm-moe-prefill-dag",
+                 "lm-moe-prefill-dag-reduced"):
         cases[f"{name}@overlapped"] = (name, "overlapped")
     return cases
 

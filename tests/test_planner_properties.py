@@ -18,9 +18,14 @@ tests pin it against brute-force enumeration over every placement:
 The generators emit nodes with KV-residency annotations too — both the
 read side (`kv_bytes`/`kv_home`, decode attention) and the write-back
 side (`kv_write_bytes`/`kv_write_home`, prefill chunk attention) — so
-the full migration term is exercised through every rung. A deterministic
-seeded sweep always runs; when `hypothesis` is installed the same
-properties are additionally fuzzed over its search space.
+the full migration term is exercised through every rung. The
+exchange-annotated variants (`OpGraph.annotate_exchange`, ISSUE-5: MoE
+token routing) additionally mark random edges as host-relayed bank
+exchanges and re-run the same brute-force equalities through every rung,
+plus the overlapped-objective guarantee (never worse than scheduling the
+serial-ladder seed) on exchange DAGs. A deterministic seeded sweep
+always runs; when `hypothesis` is installed the same properties are
+additionally fuzzed over its search space.
 """
 
 from __future__ import annotations
@@ -76,6 +81,17 @@ def make_dag(rng: random.Random, max_nodes: int = 8) -> OpGraph:
         preds = [p for p in names if rng.random() < 0.4]
         g.add(_rand_node(rng, f"n{i}"), *preds)
         names.append(f"n{i}")
+    return g
+
+
+def annotate_exchanges(g: OpGraph, rng: random.Random,
+                       p: float = 0.5) -> OpGraph:
+    """Mark a random subset of edges as bank exchanges (ISSUE-5): the
+    host-relayed re-distribution charge must flow through every rung
+    exactly like the other cost terms."""
+    for u, v in g.edges:
+        if rng.random() < p:
+            g.annotate_exchange(u, v, rng.uniform(1e6, 1e8))
     return g
 
 
@@ -169,6 +185,59 @@ def test_chain_overlapped_dp_equals_brute_force(seed):
                                        max_nodes=5))
 
 
+@pytest.mark.parametrize("seed", range(15))
+def test_exchange_chain_dp_equals_brute_force(seed):
+    """ISSUE-5 satellite: exchange-annotated chains stay exact under the
+    chain DP (the host-relay charge is part of the transition cost)."""
+    _check_chain(annotate_exchanges(make_chain(random.Random(5000 + seed)),
+                                    random.Random(5000 + seed)))
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_exchange_dag_exact_equals_brute_force_and_bounds_greedy(seed):
+    """ISSUE-5 satellite: exchange-annotated DAGs through the frontier-DP
+    rung — still equal to brute force, still never worse than greedy."""
+    _check_dag(annotate_exchanges(make_dag(random.Random(6000 + seed)),
+                                  random.Random(6000 + seed)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_exchange_bnb_exact_when_budgeted(seed):
+    """ISSUE-5 satellite: the branch-and-bound rung on exchange DAGs
+    (ample budget == brute force; starved stays greedy-or-better)."""
+    _check_bnb(annotate_exchanges(make_dag(random.Random(7000 + seed),
+                                           max_nodes=6),
+                                  random.Random(7000 + seed)))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_exchange_chain_overlapped_dp_equals_brute_force(seed):
+    """ISSUE-5 satellite: the exact overlapped chain DP books intra-group
+    exchanges as channel occupancy exactly like `make_schedule` — equal
+    to brute force over every assignment's `Schedule.overlapped_s`."""
+    _check_chain_overlapped(
+        annotate_exchanges(make_chain(random.Random(8000 + seed),
+                                      max_nodes=5),
+                           random.Random(8000 + seed)))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_exchange_dag_overlapped_never_worse_than_serial_seed(seed):
+    """ISSUE-5 satellite: on exchange DAGs the overlapped objective never
+    schedules worse than the serial-ladder seed (the seed is always in
+    the candidate set), and the pipelined event sim never loses to the
+    serialized groups."""
+    rng = random.Random(9000 + seed)
+    g = annotate_exchanges(make_dag(rng), rng)
+    devices, dpu = _resolve(DEVICES)
+    serial = plan(g, devices=DEVICES)
+    over = plan(g, devices=DEVICES, objective="overlapped")
+    assert over.overlapped_s <= \
+        make_schedule(g, serial, dpu).overlapped_s * (1 + _REL) + 1e-15
+    sched = make_schedule(g, over, dpu, pipelined=True)
+    assert sched.pipelined_s <= sched.overlapped_s + 1e-15
+
+
 def test_chain_overlapped_dp_beats_descent_on_shipped_chains():
     """The ISSUE-4 satellite acceptance on every SHIPPED chain graph: the
     exact group-aggregate DP never scores worse than the coordinate
@@ -222,3 +291,16 @@ if HAVE_HYPOTHESIS:
     def test_hyp_chain_overlapped_dp_equals_brute_force(seed):
         _check_chain_overlapped(make_chain(random.Random(seed),
                                            max_nodes=4))
+
+    @_cases
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_hyp_exchange_dag_exact_equals_brute_force(seed):
+        _check_dag(annotate_exchanges(make_dag(random.Random(seed)),
+                                      random.Random(seed)))
+
+    @_cases
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_hyp_exchange_chain_overlapped_dp_equals_brute_force(seed):
+        _check_chain_overlapped(
+            annotate_exchanges(make_chain(random.Random(seed), max_nodes=4),
+                               random.Random(seed)))

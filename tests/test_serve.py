@@ -266,6 +266,153 @@ def test_dispatch_three_layer_hybrid_token_identical():
     assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
 
 
+# ------------------------------------------------------------------ #
+# dispatch-backed MoE serving (ISSUE-5): routed experts as an exchange
+# phase — token-identity gates for the planner-routed MoE ladder
+# ------------------------------------------------------------------ #
+
+@pytest.fixture(scope="module")
+def setup_moe():
+    """The f32 mixtral-reduced model: routed MoE (4 experts top-2,
+    sliding-window attention), no shared experts — the dispatch engine's
+    MoE scope. f32 for the same reason as the prefill gates (per-stage
+    jit changes XLA fusion; DESIGN.md §9)."""
+    import dataclasses
+    from repro.configs import REDUCED
+    cfg = dataclasses.replace(REDUCED["mixtral-8x7b"], dtype="float32")
+    return cfg, init_params_for(cfg)
+
+
+def test_dispatch_moe_decode_token_identical_to_jit(setup_moe):
+    """The ISSUE-5 e2e gate, mirroring the dense decode gate: routing MoE
+    decode through the planner's plan (router -> token exchange -> expert
+    FFNs -> combine exchange per layer) must be token-for-token identical
+    to the fused-jit engine over a 16-step continuous-batching run with
+    arrivals and evictions, on the f32 model. Prefill stays fused here
+    (`prefill_engine="jit"`), the dense gate's precedent — chunked MoE
+    prefill has per-chunk capacity semantics (gates below)."""
+    cfg, params = setup_moe
+    prompts = _prompts(cfg, 8, jax.random.PRNGKey(11))
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
+                          engine="dispatch",
+                          dispatch_kwargs={"prefill_engine": "jit"})
+    assert dis_eng.dispatch_plan is not None
+    assert dis_eng.dispatch_plan.method == "dag-dp"
+    # the decode DAG carries the routed ladder and its exchange edges
+    dag = dis_eng._decode.dag
+    assert "router0" in dag.nodes and "expert0" in dag.nodes
+    assert ("router0", "expert0") in dag.exchange_edges
+    assert ("expert0", "combine0") in dag.exchange_edges
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+def test_dispatch_moe_forced_expert_pim_token_identical(setup_moe,
+                                                        bank_grid):
+    """Force every layer's router + expert (and attention) onto the PIM
+    face regardless of the planner's pick: the router->expert edge
+    becomes an intra-PIM exchange the executor must relay through the
+    host (gather/scatter), with the expert FFN sharded over the grid's
+    expert axis — still token-identical to the fused engine."""
+    cfg, params = setup_moe
+    prompts = _prompts(cfg, 6, jax.random.PRNGKey(13))
+    forced = {}
+    for i in range(cfg.n_blocks):
+        forced[f"attn{i}"] = "upmem_2556"
+        forced[f"router{i}"] = "upmem_2556"
+        forced[f"expert{i}"] = "upmem_2556"
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(
+        cfg, params, batch_slots=2, max_len=48, shd=SHD, engine="dispatch",
+        dispatch_kwargs={"grid": bank_grid, "force_assignment": forced,
+                         "prefill_engine": "jit"})
+    # the intra-PIM exchange is registered for the executor's host relay
+    assert sorted(dis_eng._decode.executor._exchange_in) == \
+        sorted(f"expert{i}" for i in range(cfg.n_blocks))
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+def test_dispatch_moe_single_chunk_prefill_token_identical(setup_moe):
+    """Dispatch MoE prefill in ONE chunk covers the whole prompt, so the
+    per-chunk expert capacity equals the fused whole-prompt capacity and
+    the full dispatch path (prefill AND decode planner-routed) matches
+    the fused engine token-for-token. Multi-chunk MoE prefill drops
+    overflow per chunk by design and is gated for bank-count identity
+    instead (the slow multibank gate)."""
+    cfg, params = setup_moe
+    prompts = _prompts(cfg, 8, jax.random.PRNGKey(11))
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
+                          engine="dispatch",
+                          dispatch_kwargs={"prefill_chunk": 48})
+    assert dis_eng.prefill_plan is not None
+    pre_dag = dis_eng._prefill_step.dag
+    assert any(n.startswith("router") for n in pre_dag.nodes)
+    assert pre_dag.exchange_edges
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
+@pytest.mark.slow
+def test_dispatch_moe_multibank_matches_single_bank():
+    """ISSUE-5 satellite: full MoE dispatch serving (planner-routed
+    chunked prefill AND decode, experts forced onto the PIM face) with
+    the EXPERT axis sharded over TWO banks must be token-identical to the
+    single-bank run — each bank owns its experts' weights and dispatch
+    rows, and the host gather/scatter exchange is what re-distributes
+    tokens between the slot/chunk sharding and the expert sharding.
+    Subprocess per the dry-run isolation rule; f32 model."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    code = (
+        "import dataclasses, jax, jax.numpy as jnp\n"
+        "from repro.configs import REDUCED\n"
+        "from repro.core.bank_parallel import BankGrid, make_bank_mesh\n"
+        "from repro.models import Shardings, init_params\n"
+        "from repro.serve import Request, ServeEngine\n"
+        "shd = Shardings(None)\n"
+        "cfg = dataclasses.replace(REDUCED['mixtral-8x7b'],\n"
+        "                          dtype='float32')\n"
+        "params = init_params(jax.random.PRNGKey(0), cfg, shd)\n"
+        "key = jax.random.PRNGKey(5)\n"
+        "prompts = []\n"
+        "for _ in range(6):\n"
+        "    key, k = jax.random.split(key)\n"
+        "    plen = 4 + int(jax.random.randint(k, (), 0, 8))\n"
+        "    prompts.append(jax.random.randint(k, (plen,), 0,\n"
+        "                   cfg.vocab_size, dtype=jnp.int32))\n"
+        "forced, pforced = {}, {}\n"
+        "for i in range(cfg.n_blocks):\n"
+        "    forced[f'attn{i}'] = 'upmem_2556'\n"
+        "    forced[f'router{i}'] = 'upmem_2556'\n"
+        "    forced[f'expert{i}'] = 'upmem_2556'\n"
+        "    for c in range(4):\n"
+        "        pforced[f'expert{i}/c{c}'] = 'upmem_2556'\n"
+        "outs = {}\n"
+        "for n_banks in (1, 2):\n"
+        "    grid = BankGrid(make_bank_mesh(n_banks))\n"
+        "    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,\n"
+        "        shd=shd, engine='dispatch', dispatch_kwargs={\n"
+        "        'grid': grid, 'force_assignment': forced,\n"
+        "        'prefill_chunk': 4,\n"
+        "        'prefill_force_assignment': pforced})\n"
+        "    assert eng._decode.executor._exchange_in, 'no exchanges'\n"
+        "    done = eng.serve([Request(i, p, 5)\n"
+        "                      for i, p in enumerate(prompts)])\n"
+        "    outs[n_banks] = {r.rid: r.out_tokens for r in done}\n"
+        "assert outs[1] == outs[2], outs\n"
+        "print('MOE_MULTIBANK_OK')\n")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=f"{root / 'src'}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MOE_MULTIBANK_OK" in out.stdout
+
+
 @pytest.mark.slow
 def test_dispatch_serving_multibank_matches_single_bank():
     """ISSUE-4 satellite: full dispatch serving (planner-routed prefill
@@ -385,10 +532,15 @@ def test_dispatch_decode_two_banks_token_identical():
 def test_dispatch_engine_rejects_unsupported_configs(setup):
     cfg, params = setup
     from repro.configs import REDUCED
-    moe = REDUCED["mixtral-8x7b"]
-    with pytest.raises(ValueError, match="dense attention"):
-        ServeEngine(moe, init_params_for(moe), batch_slots=1, max_len=16,
+    rwkv = REDUCED["rwkv6-3b"]
+    with pytest.raises(ValueError, match="decoders"):
+        ServeEngine(rwkv, init_params_for(rwkv), batch_slots=1, max_len=16,
                     shd=SHD, engine="dispatch")
+    # routed MoE is supported (mixtral); shared-expert MoE is not
+    shared = REDUCED["qwen2-moe-a2.7b"]
+    with pytest.raises(ValueError, match="shared experts"):
+        ServeEngine(shared, init_params_for(shared), batch_slots=1,
+                    max_len=16, shd=SHD, engine="dispatch")
     with pytest.raises(ValueError, match="engine must be"):
         ServeEngine(cfg, params, batch_slots=1, max_len=16, shd=SHD,
                     engine="nope")
