@@ -30,10 +30,20 @@ Three sweeps over `repro.dispatch`:
      GEMMs + two host-relayed all-to-alls per layer — the shape the
      architecture is worst at, KT3) — the ISSUE-5 acceptance gate.
 
+Every sweep row also reports the planner-fidelity round trip
+(`replay err %`): the plan's predicted `pipelined_s` against the
+re-priced replay of its own modeled execution trace
+(`repro.dispatch.trace`, DESIGN.md §13).
+
 Finally the reduced-scale pipelines are actually executed through
 `dispatch.runtime` — and dispatch-backed `ServeEngine` runs (dense
 decode at the default dtype, MoE decode on the f32 mixtral-reduced
-model) are checked token-identical against the fused-jit engine.
+model) are checked token-identical against the fused-jit engine. A
+closing section records a MEASURED trace of the dispatch serving
+decode step, reports the tracing overhead against the ISSUE-6 <5%
+budget, gates the planner's prediction against the replayed trace,
+and (with `--trace OUT_JSON`) exports the trace plus its Chrome
+trace_event twin.
 
 `run(report, quick=True)` (the CI coverage job's
 `python -m benchmarks.run dispatch_bench --quick`) runs only a reduced
@@ -46,9 +56,17 @@ the MoE exchange bookkeeping asserts.
 from __future__ import annotations
 
 from repro import prim
+from repro.dispatch import trace as dtrace
 from repro.dispatch import workloads
 from repro.dispatch.placement import compare_plans, plan, pure_plan
 from repro.dispatch.schedule import make_schedule
+
+
+def _replay_err(graph, p):
+    """Predicted-vs-replayed relative error (%) for one plan row: the
+    plan's predicted `pipelined_s` against the re-priced replay of its
+    own modeled trace (the record->replay round trip, DESIGN.md §13)."""
+    return round(dtrace.fidelity(graph, p).rel_err * 100.0, 2)
 
 
 def _prefill_sweep(report, dims, prefill_len, chunk, bnb_budget=20_000):
@@ -60,27 +78,32 @@ def _prefill_sweep(report, dims, prefill_len, chunk, bnb_budget=20_000):
     serial_sched = make_schedule(dag, serial)
     pim = pure_plan(dag, "upmem_2556")
     cpu_kv_pim = pure_plan(dag, "xeon")
-    cpu_rehomed = pure_plan(
-        workloads.prefill_dag(dims, prefill_len=prefill_len, chunk=chunk,
-                              kv_home="xeon"), "xeon")
+    rehomed_dag = workloads.prefill_dag(dims, prefill_len=prefill_len,
+                                        chunk=chunk, kv_home="xeon")
+    cpu_rehomed = pure_plan(rehomed_dag, "xeon")
     report.table([
         {"plan": "pure_pim (KV@pim)",
          "serial ms": round(pim.total_s * 1e3, 1),
          "overlapped ms": round(make_schedule(dag, pim).overlapped_s
-                                * 1e3, 1)},
+                                * 1e3, 1),
+         "replay err %": _replay_err(dag, pim)},
         {"plan": "pure_cpu (KV@pim: migrate+writeback)",
          "serial ms": round(cpu_kv_pim.total_s * 1e3, 1),
          "overlapped ms": round(make_schedule(dag, cpu_kv_pim).overlapped_s
-                                * 1e3, 1)},
+                                * 1e3, 1),
+         "replay err %": _replay_err(dag, cpu_kv_pim)},
         {"plan": "pure_cpu (KV re-homed to host)",
          "serial ms": round(cpu_rehomed.total_s * 1e3, 1),
-         "overlapped ms": "-"},
+         "overlapped ms": "-",
+         "replay err %": _replay_err(rehomed_dag, cpu_rehomed)},
         {"plan": f"planned, objective=serial [{serial.method}]",
          "serial ms": round(serial.total_s * 1e3, 1),
-         "overlapped ms": round(serial_sched.overlapped_s * 1e3, 1)},
+         "overlapped ms": round(serial_sched.overlapped_s * 1e3, 1),
+         "replay err %": _replay_err(dag, serial)},
         {"plan": f"planned, objective=overlapped [{over.method}]",
          "serial ms": round(over.total_s * 1e3, 1),
-         "overlapped ms": round(over.overlapped_s * 1e3, 1)},
+         "overlapped ms": round(over.overlapped_s * 1e3, 1),
+         "replay err %": _replay_err(dag, over)},
     ])
     # ISSUE-3 acceptance: the planner never loses to a pure placement of
     # the same graph, and the overlapped objective never schedules worse
@@ -132,19 +155,23 @@ def _moe_sweep(report, dims):
     inequalities and report what the exchange edges cost each plan."""
     dag = workloads.moe_decode_dag(dims)
     hybrid = plan(dag)
-    cpu = pure_plan(workloads.moe_decode_dag(dims, kv_home="xeon"), "xeon")
+    rehomed_dag = workloads.moe_decode_dag(dims, kv_home="xeon")
+    cpu = pure_plan(rehomed_dag, "xeon")
     pim = pure_plan(dag, "upmem_2556")
     sched = make_schedule(dag, hybrid, pipelined=True)
     report.table([
         {"plan": "pure_cpu (KV re-homed to host)",
          "modeled ms": round(cpu.total_s * 1e3, 3),
-         "exchange ms": round(cpu.exchange_s * 1e3, 3)},
+         "exchange ms": round(cpu.exchange_s * 1e3, 3),
+         "replay err %": _replay_err(rehomed_dag, cpu)},
         {"plan": "pure_pim (KV@pim)",
          "modeled ms": round(pim.total_s * 1e3, 3),
-         "exchange ms": round(pim.exchange_s * 1e3, 3)},
+         "exchange ms": round(pim.exchange_s * 1e3, 3),
+         "replay err %": _replay_err(dag, pim)},
         {"plan": f"hybrid [{hybrid.method}]",
          "modeled ms": round(hybrid.total_s * 1e3, 3),
-         "exchange ms": round(hybrid.exchange_s * 1e3, 3)},
+         "exchange ms": round(hybrid.exchange_s * 1e3, 3),
+         "replay err %": _replay_err(dag, hybrid)},
     ])
     # ISSUE-5 acceptance: the hybrid strictly beats both steelmanned
     # pures, and only the all-PIM plan pays the host-relayed exchanges
@@ -170,7 +197,8 @@ def _three_way(report, graph, devices=("xeon", "upmem_2556")):
              "compute ms": round(p.compute_s * 1e3, 3),
              "transfer ms": round(p.transfer_s * 1e3, 3),
              "launches": round(p.launch_s * 1e3, 3),
-             "devices": "+".join(p.used_devices)}
+             "devices": "+".join(p.used_devices),
+             "replay err %": _replay_err(graph, p)}
             for k, p in plans.items()]
     report.table(rows)
     sched = make_schedule(graph, plans["hybrid"])
@@ -178,7 +206,70 @@ def _three_way(report, graph, devices=("xeon", "upmem_2556")):
     return plans, sched
 
 
-def run(report, quick: bool = False):
+def _trace_section(report, trace_out=None, steps: int = 20):
+    """Record a measured execution trace of the dispatch-backed serving
+    decode step, measure the tracing overhead (traced vs untraced
+    wall-clock over the same step loop — the ISSUE-6 <5% budget), gate
+    the planner's prediction against the replayed trace, and optionally
+    export the trace (JSON + Chrome trace_event twin)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import REDUCED
+    from repro.models import Shardings, init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = REDUCED["granite-3-8b"]
+    shd = Shardings(None)
+    params = init_params(jax.random.PRNGKey(0), cfg, shd)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=512, shd=shd,
+                      engine="dispatch",
+                      dispatch_kwargs={"prefill_engine": "jit"})
+    for i in range(2):   # fill both slots; budget outlasts every loop below
+        eng.admit(Request(i, jnp.arange(4, dtype=jnp.int32) + 3, 10_000))
+
+    def step_loop(n):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            eng.step()
+        return time.perf_counter() - t0
+
+    step_loop(5)                         # warm-up: compile every stage once
+    untraced = min(step_loop(steps) for _ in range(3))
+    tracer = dtrace.Trace(name=f"bench:{cfg.name}:dispatch")
+    tracer.meta.update(arch=cfg.name, engine="dispatch",
+                       assignment=dict(eng._decode.executor.assignment))
+    eng.attach_tracer(tracer)
+    traced = min(step_loop(steps) for _ in range(3))
+    eng.attach_tracer(None)
+    overhead = traced / untraced - 1.0
+    report.table([
+        {"decode loop": "untraced",
+         f"best-of-3 wall s ({steps} steps)": round(untraced, 4),
+         "ms/step": round(untraced / steps * 1e3, 3)},
+        {"decode loop": "traced",
+         f"best-of-3 wall s ({steps} steps)": round(traced, 4),
+         "ms/step": round(traced / steps * 1e3, 3)},
+    ])
+    report.note(f"tracing overhead: {overhead * 100.0:+.2f}% of untraced "
+                "executor wall-clock (budget <5%: a trace event is two "
+                "perf_counter reads and a dict append per span)")
+    rep = dtrace.fidelity(eng._decode.dag, eng._decode.plan, trace=tracer)
+    report.raw("  " + rep.render())
+    assert rep.ok, "measured serving trace replays outside the gate band"
+    if trace_out:
+        chrome = (trace_out[:-5] if trace_out.endswith(".json")
+                  else trace_out) + ".chrome.json"
+        tracer.save(trace_out)
+        tracer.save_chrome(chrome)
+        n_steps = len(tracer.by_kind("decode_step"))
+        report.note(f"trace: {len(tracer.events)} events ({n_steps} decode "
+                    f"steps) -> {trace_out} (+ {chrome})")
+    return overhead
+
+
+def run(report, quick: bool = False, trace_out: str | None = None):
     if quick:
         # CI smoke: the chunked prefill DAG at reduced scale, both
         # objectives, acceptance gates asserted
@@ -197,10 +288,12 @@ def run(report, quick: bool = False):
         sched = make_schedule(dag, pim, pipelined=True)
         report.table([
             {"plan": "pure_pim", "modeled ms": round(pim.total_s * 1e3, 3),
-             "exchange ms": round(pim.exchange_s * 1e3, 3)},
+             "exchange ms": round(pim.exchange_s * 1e3, 3),
+             "replay err %": _replay_err(dag, pim)},
             {"plan": f"planned [{hybrid.method}]",
              "modeled ms": round(hybrid.total_s * 1e3, 3),
-             "exchange ms": round(hybrid.exchange_s * 1e3, 3)},
+             "exchange ms": round(hybrid.exchange_s * 1e3, 3),
+             "replay err %": _replay_err(dag, hybrid)},
         ])
         assert hybrid.total_s <= pim.total_s, "MoE planned >= pure PIM"
         assert hybrid.total_s <= pure_plan(dag, "xeon").total_s
@@ -211,6 +304,10 @@ def run(report, quick: bool = False):
         report.note("MoE routing planned as an exchange phase: all-PIM "
                     "pays 2 host-relayed all-to-alls per layer "
                     "(transfer-channel-only occupancy in the timeline)")
+        if trace_out:
+            report.section("QUICK: execution tracing (measured dispatch "
+                           "serving trace, overhead, fidelity)")
+            _trace_section(report, trace_out, steps=10)
         return
 
     # -- sweep 1: the 16 PrIM workloads, one operator each ----------------
@@ -229,7 +326,8 @@ def run(report, quick: bool = False):
                      "cpu ms": round(cpu * 1e3, 2),
                      "pim ms": round(pim * 1e3, 2),
                      "planned ms": round(hyb.total_s * 1e3, 2),
-                     "pick": pick})
+                     "pick": pick,
+                     "replay err %": _replay_err(g, hyb)})
     report.table(rows)
     report.note(f"planner recovers {recovered} of the "
                 f"{sum(1 for c in prim.all_ref_counts() if not c.pim_suitable)}"
@@ -389,3 +487,8 @@ def run(report, quick: bool = False):
     report.note("dispatch-backed MoE decode (router -> exchange -> "
                 "experts -> combine) is token-identical to the fused-jit "
                 "engine at f32")
+
+    # -- execution tracing: overhead + planner fidelity (ISSUE-6) --------
+    report.section("Execution tracing: overhead budget and planner "
+                   "fidelity on a measured serving trace")
+    _trace_section(report, trace_out)

@@ -9,10 +9,14 @@
   roofline_bench    §Roofline 40-cell dry-run table (from runs/*.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [module ...] [--quick]
+                                             [--trace OUT_JSON]
 
 `--quick` runs a module's reduced smoke sweep when it offers one
 (dispatch_bench: the prefill-DAG planning sweep only — the CI coverage
-job's smoke).
+job's smoke). `--trace OUT_JSON` is forwarded to modules that accept a
+`trace_out` parameter (dispatch_bench: records a measured execution
+trace of the dispatch-backed serving run and writes it as JSON plus a
+Chrome trace_event twin, DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -58,6 +62,14 @@ def main(argv=None) -> int:
     }
     args = list(argv or sys.argv[1:])
     quick = "--quick" in args
+    trace_out = None
+    if "--trace" in args:
+        i = args.index("--trace")
+        if i + 1 >= len(args) or args[i + 1].startswith("--"):
+            print("error: --trace needs an output path", file=sys.stderr)
+            return 2
+        trace_out = args[i + 1]
+        del args[i:i + 2]
     names = [a for a in args if not a.startswith("--")] or list(modules)
     report = Report()
     t0 = time.perf_counter()
@@ -66,10 +78,13 @@ def main(argv=None) -> int:
         print(f"\n{'=' * 72}\n= benchmarks.{name}\n{'=' * 72}")
         try:
             run_fn = modules[name].run
-            if "quick" in inspect.signature(run_fn).parameters:
-                run_fn(report, quick=quick)
-            else:
-                run_fn(report)
+            params = inspect.signature(run_fn).parameters
+            kw = {}
+            if "quick" in params:
+                kw["quick"] = quick
+            if "trace_out" in params:
+                kw["trace_out"] = trace_out
+            run_fn(report, **kw)
         except Exception:  # keep the harness going, report at end
             import traceback
             traceback.print_exc()

@@ -50,7 +50,16 @@ def main():
     ap.add_argument("--show-schedule", action="store_true",
                     help="dispatch engine: print the executed timeline — "
                          "the launch groups the unified executor walks, "
-                         "with serial/overlapped/pipelined wall-clocks")
+                         "with serial/overlapped/pipelined wall-clocks "
+                         "and per-resource busy/idle occupancy")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record the measured execution trace (per-slot "
+                         "decode-step latencies; under --engine dispatch "
+                         "also per-stage compute spans, channel "
+                         "occupancy, FaceCache compile/cache-hit) and "
+                         "write it as JSON, plus a Chrome trace_event "
+                         "twin next to it (.chrome.json) for "
+                         "chrome://tracing / Perfetto")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=True)
@@ -98,6 +107,17 @@ def main():
         show_schedule("decode", engine._decode)
         show_schedule("prefill", engine._prefill_step)
 
+    tracer = None
+    if args.trace:
+        from repro.dispatch.trace import Trace
+        tracer = Trace(name=f"serve:{cfg.name}:{args.engine}")
+        tracer.meta.update(arch=cfg.name, engine=args.engine,
+                           slots=args.slots)
+        if engine.dispatch_plan is not None:
+            tracer.meta["assignment"] = dict(
+                engine._decode.executor.assignment)
+        engine.attach_tracer(tracer)
+
     key = jax.random.PRNGKey(1)
     reqs = []
     for i in range(args.requests):
@@ -116,6 +136,19 @@ def main():
     print(f"\n{len(done)} requests, {n_tok} tokens, {dt:.1f}s "
           f"({n_tok / dt:.1f} tok/s, continuous batching over "
           f"{args.slots} slots)")
+
+    if tracer is not None:
+        chrome = (args.trace[:-5] if args.trace.endswith(".json")
+                  else args.trace) + ".chrome.json"
+        tracer.save(args.trace)
+        tracer.save_chrome(chrome)
+        steps = tracer.by_kind("decode_step")
+        if steps:
+            lat = sorted(e.dur_s for e in steps)
+            print(f"trace: {len(tracer.events)} events "
+                  f"({len(steps)} decode steps, median "
+                  f"{lat[len(lat) // 2] * 1e3:.2f}ms/step) "
+                  f"-> {args.trace} (+ {chrome})")
 
 
 if __name__ == "__main__":

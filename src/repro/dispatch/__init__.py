@@ -32,6 +32,11 @@ turns the one-shot analyses of `repro.core` into an end-to-end pipeline:
                validated vs reference
     workloads  mixed PrIM pipelines + the LM decode chain/DAG + the
                chunked prefill DAG as dispatchable pipelines/graphs
+    trace      observability over the whole spine: measured/modeled
+               execution traces (JSON + Chrome trace_event), the
+               what-if replayer re-pricing recorded timelines under the
+               pipelined discipline, least-squares calibration of the
+               cost constants, and the planner-fidelity gate
 
 Unit conventions across the package: every modeled cost is SECONDS
 (fields/locals suffixed `_s`), every payload is BYTES (`*_bytes`), and
@@ -45,10 +50,12 @@ over `workloads.decode_dag`, chunked prefill over `workloads.prefill_dag`.
 
 from .graph import (OpNode, OpGraph, annotate_kv_residency,
                     annotate_kv_write, node_from_fn, ops_from_hlo)
-from .placement import (DEVICES, Plan, compare_plans, greedy_plan,
-                        kv_migration_time, node_time, placed_time, plan,
-                        pure_plan, transfer_hops, transfer_time)
+from .placement import (DEVICES, Plan, compare_plans, cost_constants,
+                        greedy_plan, kv_migration_time, node_bytes,
+                        node_time, placed_time, plan, pure_plan,
+                        transfer_hops, transfer_time)
 from .schedule import LaunchGroup, Schedule, make_schedule
 from .executor import FaceCache, PlanExecutor, StageDef
 from .runtime import Pipeline, Stage, bank_face, execute, reference
 from . import workloads
+from . import trace

@@ -87,7 +87,14 @@ class FaceCache:
 
     Host faces are plain per-stage jits; PIM faces are jitted BankGrid
     local phases built from the `StageDef`'s shard axes. One cache per
-    serving step keeps distinct prompt shapes from re-tracing stages."""
+    serving step keeps distinct prompt shapes from re-tracing stages.
+    The cache accounts for itself: every face call and every retrace
+    (a jit cache miss re-executes the wrapped stage body, bumping the
+    compile counter exactly once per compiled specialization) is counted
+    per (face, kind) and exposed through `stats`; with a `tracer`
+    attached (`trace.Trace`, set by `PlanExecutor.run(..., tracer=...)`)
+    each call additionally records a `compile` span or `cache_hit`
+    instant event."""
 
     def __init__(self, stages: Sequence[StageDef], grid: BankGrid):
         self.grid = grid
@@ -97,8 +104,69 @@ class FaceCache:
             raise ValueError(f"duplicate StageDef kinds {dup}: two stage "
                              "bodies would silently share one compiled face")
         self.stages = {s.kind: s for s in stages}
-        self._host = {k: jax.jit(s.fn) for k, s in self.stages.items()}
+        self.tracer = None                       # trace.Trace | None
+        self._calls: dict[tuple[str, str], int] = {}
+        self._compiles: dict[tuple[str, str], int] = {}
+        self._host = {k: self._face("host", k, jax.jit(
+            self._counted("host", k, s.fn)))
+            for k, s in self.stages.items()}
         self._pim: dict[str, Callable] = {}      # lazy: grid lowering
+
+    def _counted(self, face, kind, fn):
+        """Wrap a stage body so executing its trace bumps the compile
+        counter — jit re-executes the body once per new specialization,
+        which is exactly when a compile happens."""
+        key = (face, kind)
+
+        def body(*args):
+            self._compiles[key] = self._compiles.get(key, 0) + 1
+            return fn(*args)
+        return body
+
+    def _face(self, face, kind, jitted):
+        """Wrap a jitted face with call accounting and (when a tracer is
+        attached) compile-vs-cache-hit events."""
+        key = (face, kind)
+
+        def call(*args):
+            self._calls[key] = self._calls.get(key, 0) + 1
+            tr = self.tracer
+            if tr is None:
+                return jitted(*args)
+            before = self._compiles.get(key, 0)
+            t0 = tr.now()
+            out = jitted(*args)
+            if self._compiles.get(key, 0) > before:
+                tr.add("compile", kind, face, t0)
+            else:
+                tr.instant("cache_hit", kind, face)
+            return out
+        return call
+
+    @property
+    def stats(self) -> dict:
+        """Cache accounting: `{"calls", "compiles", "hits"}` totals plus
+        per-face (`"host"`/`"pim"`) and per-kind (`"by_kind"`)
+        breakdowns. A *hit* is a call served by an already-compiled face;
+        `compiles` counts misses (each triggers exactly one retrace of
+        the stage body) — the recompile-regression gates assert through
+        this, not by monkeypatching stage bodies."""
+        out = {"calls": 0, "compiles": 0, "hits": 0,
+               "host": {"calls": 0, "compiles": 0},
+               "pim": {"calls": 0, "compiles": 0},
+               "by_kind": {}}
+        for (face, kind), n in self._calls.items():
+            out["calls"] += n
+            out[face]["calls"] += n
+            k = out["by_kind"].setdefault(kind, {"calls": 0, "compiles": 0})
+            k["calls"] += n
+        for (face, kind), n in self._compiles.items():
+            out["compiles"] += n
+            out[face]["compiles"] += n
+            k = out["by_kind"].setdefault(kind, {"calls": 0, "compiles": 0})
+            k["compiles"] += n
+        out["hits"] = out["calls"] - out["compiles"]
+        return out
 
     def host(self, kind: str) -> Callable:
         """The jitted host face for a stage kind."""
@@ -111,8 +179,9 @@ class FaceCache:
             in_specs = tuple(_axis_spec(a, self.grid) for a in s.arg_banks)
             out = tuple(_axis_spec(a, self.grid) for a in s.out_banks)
             out_specs = out if s.n_out > 1 else out[0]
-            self._pim[kind] = jax.jit(self.grid.local(
-                s.fn, in_specs=in_specs, out_specs=out_specs))
+            self._pim[kind] = self._face("pim", kind, jax.jit(
+                self.grid.local(self._counted("pim", kind, s.fn),
+                                in_specs=in_specs, out_specs=out_specs)))
         return self._pim[kind]
 
     def pim_ok(self, kind: str, args: tuple) -> bool:
@@ -150,9 +219,7 @@ class PlanExecutor:
         if missing:
             raise ValueError(f"no StageDef for nodes {sorted(missing)[:6]}; "
                              "stage kinds drifted from the DAG's node names")
-        stub = Plan(graph_name=graph.name, assignment=self.assignment,
-                    method="executor", total_s=0.0, compute_s=0.0,
-                    transfer_s=0.0, launch_s=0.0, node_s={})
+        stub = Plan.stub(graph.name, self.assignment, method="executor")
         self.schedule: Schedule = make_schedule(graph, stub, source=source,
                                                 sink=sink)
         self.timeline = [(g.device, tuple(g.nodes), tuple(g.in_producers))
@@ -209,7 +276,8 @@ class PlanExecutor:
 
     def run(self, bind: Callable[[str, dict], tuple],
             env: dict | None = None,
-            keep: Iterable[str] = ()) -> dict:
+            keep: Iterable[str] = (), *,
+            tracer=None, block: bool = False) -> dict:
         """Execute every launch group in timeline order; returns the
         environment mapping node name -> stage output(s). `bind(name,
         env)` must return the argument tuple for `name`'s stage kind —
@@ -219,27 +287,75 @@ class PlanExecutor:
         edge-declared predecessors from `env`; any off-graph read (e.g.
         rotary tables every layer re-reads) and every output the caller
         reads after the run (a KV assembly, the head's logits) must be
-        pinned by name in `keep`."""
+        pinned by name in `keep`.
+
+        `tracer` (a `trace.Trace`) records the measured timeline: a
+        `compute` span per dispatched node, a `stage_in` span (resource
+        `"channel"`) per boundary staging, an `exchange` span per host
+        relay, plus the FaceCache's compile/cache-hit events; the
+        untraced path is untouched (the <5% overhead budget). `block`
+        additionally waits on every stage's outputs so compute spans
+        measure execution rather than async dispatch — calibration runs
+        set it, the serving hot loop must not."""
         env = dict(env or {})
         keep = set(keep)
         staging: list[dict] = [{}, {}]           # double-buffered slots
-        for k, (device, nodes, _) in enumerate(self.timeline):
-            for p, v in staging[k % 2].items():
-                env[p] = v                       # consume staged inputs
-            for name in nodes:
-                for p in self._exchange_in.get(name, ()):
-                    if p in env:                 # the exchange's host relay:
-                        env[p] = jax.tree.map(   # gather back + re-scatter
-                            lambda x: jax.device_put(
-                                x, self.faces.grid.replicated()), env[p])
-                env[name] = self._dispatch(name, device, bind(name, env))
-            if k + 1 < len(self.timeline):
-                nxt_dev, _, nxt_producers = self.timeline[k + 1]
-                if nxt_dev.startswith("upmem"):
-                    self._stage_in(nxt_producers, env, staging[(k + 1) % 2])
-                else:
-                    staging[(k + 1) % 2].clear()
-            for name in self._dead_after[k]:
-                if name not in keep:
-                    env.pop(name, None)
+        prev_tracer = self.faces.tracer
+        if tracer is not None:
+            self.faces.tracer = tracer
+        try:
+            for k, (device, nodes, _) in enumerate(self.timeline):
+                for p, v in staging[k % 2].items():
+                    env[p] = v                   # consume staged inputs
+                for name in nodes:
+                    relays = self._exchange_in.get(name, ())
+                    if relays and tracer is not None:
+                        t0 = tracer.now()
+                        nb = 0
+                    for p in relays:
+                        if p in env:             # the exchange's host relay:
+                            env[p] = jax.tree.map(  # gather back+re-scatter
+                                lambda x: jax.device_put(
+                                    x, self.faces.grid.replicated()), env[p])
+                            if tracer is not None:
+                                nb += sum(x.nbytes for x
+                                          in jax.tree.leaves(env[p]))
+                    if relays and tracer is not None:
+                        tracer.add("exchange", name, "channel", t0, group=k,
+                                   bytes=float(nb), n_exchanges=len(relays))
+                    if tracer is None:
+                        env[name] = self._dispatch(name, device,
+                                                   bind(name, env))
+                    else:
+                        t0 = tracer.now()
+                        out = self._dispatch(name, device, bind(name, env))
+                        if block:
+                            out = jax.block_until_ready(out)
+                        tracer.add("compute", name, device, t0, group=k,
+                                   stage=self.kind_of(name))
+                        env[name] = out
+                if k + 1 < len(self.timeline):
+                    nxt_dev, _, nxt_producers = self.timeline[k + 1]
+                    slot = staging[(k + 1) % 2]
+                    if nxt_dev.startswith("upmem"):
+                        if tracer is None:
+                            self._stage_in(nxt_producers, env, slot)
+                        else:
+                            t0 = tracer.now()
+                            self._stage_in(nxt_producers, env, slot)
+                            if block and slot:
+                                jax.block_until_ready(list(slot.values()))
+                            nb = sum(x.nbytes for v in slot.values()
+                                     for x in jax.tree.leaves(v))
+                            tracer.add("stage_in", f"g{k + 1}", "channel",
+                                       t0, group=k + 1, bytes=float(nb),
+                                       device=nxt_dev,
+                                       producers=sorted(slot))
+                    else:
+                        slot.clear()
+                for name in self._dead_after[k]:
+                    if name not in keep:
+                        env.pop(name, None)
+        finally:
+            self.faces.tracer = prev_tracer
         return env

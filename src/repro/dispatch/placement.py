@@ -83,6 +83,19 @@ def _is_pim(device: str) -> bool:
     return device.startswith("upmem")
 
 
+def node_bytes(node: OpNode, device: str) -> float:
+    """Effective bytes an operator streams on `device` — `hbm_bytes` with
+    the per-device meta overrides (`bytes_cpu`/`bytes_gpu`, e.g. TRNS
+    strided writes) applied. The payload term of `node_time`'s roofline,
+    and the regressor `trace.calibrate` fits host bandwidths against."""
+    nbytes = node.hbm_bytes
+    if device == "xeon" and node.meta.get("bytes_cpu"):
+        nbytes = node.meta["bytes_cpu"]
+    if device == "titan_v" and node.meta.get("bytes_gpu"):
+        nbytes = node.meta["bytes_gpu"]
+    return nbytes
+
+
 def node_time(node: OpNode, device: str,
               dpu: DPUModel | None = None) -> float:
     """Modeled seconds for one operator on one device (no transfers)."""
@@ -95,12 +108,7 @@ def node_time(node: OpNode, device: str,
         # serializes through the host channel (Takeaway 3)
         return max(t_c, t_m) + d.interdpu_time(node.exchange_bytes)
     m = MACHINES[device]
-    nbytes = node.hbm_bytes
-    if device == "xeon" and node.meta.get("bytes_cpu"):
-        nbytes = node.meta["bytes_cpu"]         # e.g. TRNS strided writes
-    if device == "titan_v" and node.meta.get("bytes_gpu"):
-        nbytes = node.meta["bytes_gpu"]
-    return max(node.flops / m.peak_flops, nbytes / m.hbm_bw)
+    return max(node.flops / m.peak_flops, node_bytes(node, device) / m.hbm_bw)
 
 
 def transfer_time(src: str, dst: str, nbytes: float,
@@ -195,6 +203,34 @@ def launch_overhead(device: str, dpu: DPUModel | None = None) -> float:
     return _HOST_LAUNCH_S[device]
 
 
+def cost_constants(dpu: DPUModel | None = None) -> dict[str, float]:
+    """The calibratable cost-table anchors, name -> shipped value.
+
+    One flat registry of every hand-anchored constant the planner's cost
+    functions price with (the paper's Fig.-4/Table-style measurements),
+    so `trace.calibrate.fit_trace` can report per-constant drift against
+    a measured trace without reaching into three modules. Units by
+    suffix: `*_bw` bytes/s, `*_flops` FLOP/s, `*_s` seconds,
+    `*_scale` dimensionless (anchor 1.0)."""
+    from .schedule import TRANSFER_SETUP_S  # local: schedule imports us
+    d = dpu or UPMEM_2556
+    return {
+        "xeon.hbm_bw": MACHINES["xeon"].hbm_bw,
+        "xeon.peak_flops": MACHINES["xeon"].peak_flops,
+        "titan_v.hbm_bw": MACHINES["titan_v"].hbm_bw,
+        "titan_v.peak_flops": MACHINES["titan_v"].peak_flops,
+        "pcie.bw": PCIE_BW,
+        "dpu.host_to_dpu_bw": d.host_to_dpu_bw,
+        "dpu.dpu_to_host_bw": d.dpu_to_host_bw,
+        "dpu.mram_bw": d.mram_bw,
+        "dpu.launch_overhead_s": d.launch_overhead_s,
+        "dpu.time_scale": 1.0,
+        "channel.setup_s": TRANSFER_SETUP_S,
+        "exchange.roundtrip_bw": 1.0 / (1.0 / d.dpu_to_host_bw
+                                        + 1.0 / d.host_to_dpu_bw),
+    }
+
+
 # ---------------------------------------------------------------------------
 # plans
 # ---------------------------------------------------------------------------
@@ -229,6 +265,17 @@ class Plan:
         return len({(u, v) for u, v in self._crossings})
 
     _crossings: list = dataclasses.field(default_factory=list, repr=False)
+
+    @classmethod
+    def stub(cls, graph_name: str, assignment: dict,
+             method: str = "stub") -> "Plan":
+        """A zero-cost Plan shell around a fixed assignment — what the
+        executor and the trace replayer hand to `make_schedule` when only
+        the placement matters, not the planner's cost breakdown (all
+        `*_s` fields 0.0)."""
+        return cls(graph_name=graph_name, assignment=dict(assignment),
+                   method=method, total_s=0.0, compute_s=0.0,
+                   transfer_s=0.0, launch_s=0.0, node_s={})
 
     def device_of(self, node: str) -> str:
         """Device name the plan assigns to `node`."""

@@ -86,6 +86,7 @@ class LaunchGroup:
     exchange_s: float = 0.0           # host-relayed bank exchanges whose
                                       # consumer is a member (incl. setups)
     n_exchanges: int = 0              # exchange edges booked to this group
+    exchange_bytes: float = 0.0       # payload of those exchange edges
     #: producer node names whose tensors cross into this group — what the
     #: executor stages ahead of the group (the batched input transfer)
     in_producers: list[str] = dataclasses.field(default_factory=list)
@@ -131,14 +132,31 @@ class Schedule:
     unbatched_s: float                # per-tensor transfers (the bad API)
     pipelined_s: float | None = None  # dependency-aware group pipeline
                                       # (make_schedule(..., pipelined=True))
+    #: resource name -> busy seconds: per device, launch + compute it
+    #: executes; "channel" aggregates every transfer-channel occupancy
+    #: (batched inputs, KV write-backs, exchanges, the final retrieve)
+    busy_s: dict = dataclasses.field(default_factory=dict)
 
     @property
     def n_launches(self) -> int:
         """Number of launch groups (= device launches paid)."""
         return len(self.groups)
 
+    def utilization(self, wall_s: float | None = None) -> dict:
+        """Resource name -> busy fraction of the wall-clock. Defaults to
+        the tightest modeled wall available (`pipelined_s` when the event
+        simulation ran, else `overlapped_s`); the remainder is idle —
+        pipeline stalls on dependencies, the channel, or launch gaps."""
+        wall = wall_s if wall_s is not None else \
+            (self.pipelined_s if self.pipelined_s is not None
+             else self.overlapped_s)
+        if not wall:
+            return {}
+        return {r: b / wall for r, b in sorted(self.busy_s.items())}
+
     def render(self, max_groups: int = 12) -> str:
-        """Multi-line human-readable timeline (ms totals, per-group rows)."""
+        """Multi-line human-readable timeline (ms totals, per-group rows,
+        per-resource busy/idle occupancy)."""
         pipe = ("" if self.pipelined_s is None
                 else f"pipelined={self.pipelined_s * 1e3:.3f}ms  ")
         lines = [f"schedule[{self.graph_name}] {self.n_launches} launch "
@@ -146,6 +164,15 @@ class Schedule:
                  f"overlapped={self.overlapped_s * 1e3:.3f}ms  {pipe}"
                  f"(unbatched transfers would be "
                  f"{self.unbatched_s * 1e3:.3f}ms)"]
+        util = self.utilization()
+        if util:
+            basis = ("pipelined" if self.pipelined_s is not None
+                     else "overlapped")
+            lines.append(
+                f"  occupancy of {basis} wall: "
+                + "  ".join(f"{r} {frac * 100.0:.1f}% busy"
+                            for r, frac in util.items())
+                + "  (rest idle: dependency/channel/launch stalls)")
         shown = self.groups[:max_groups]
         for g in shown:
             lines.append(
@@ -160,11 +187,25 @@ class Schedule:
                          "groups, same layer pattern)")
         return "\n".join(lines)
 
+    def __str__(self) -> str:
+        return self.render()
+
+
+def _node_s(graph: OpGraph, n: str, dev: str, dpu: DPUModel | None,
+            node_times: dict | None) -> float:
+    """One member's modeled seconds, honoring a `node_times` override —
+    how the trace replayer prices a timeline with measured durations."""
+    if node_times is not None and n in node_times:
+        return node_times[n]
+    return node_time(graph.nodes[n], dev, dpu)
+
 
 def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                   source: str = "xeon", sink: str = "xeon", *,
                   pipelined: bool = False,
-                  order: list[str] | None = None) -> Schedule:
+                  order: list[str] | None = None,
+                  node_times: dict | None = None,
+                  events: list | None = None) -> Schedule:
     """Group a plan's topological order into launch groups and model the
     batched/overlapped timeline. `source`/`sink` must match the ones the
     plan was evaluated with for the two totals to correspond. With
@@ -173,7 +214,12 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
     coordinate descent calls this many times per plan). `order` costs an
     alternative linearization (must be a valid topological order of
     `graph`) — how `benchmarks/dispatch_bench.py` prices the old
-    chunk-serial prefill loop against the executor's pipelined timeline."""
+    chunk-serial prefill loop against the executor's pipelined timeline.
+    `node_times` overrides per-node compute seconds (name -> seconds; the
+    trace replayer's measured-duration re-pricing); `events`, when a list
+    and `pipelined=True`, receives the simulation's timeline as event
+    dicts (`{"kind", "name", "resource", "t0", "t1", "group", "attrs"}` —
+    the schema `trace.replay.modeled_trace` wraps into a `Trace`)."""
     pim_dev = next((d for d in plan.assignment.values()
                     if d.startswith("upmem")), None)
     dpu = dpu or (_DPU_SYSTEMS[pim_dev] if pim_dev else UPMEM_2556)
@@ -197,7 +243,7 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
         g = groups[-1]
         g.nodes.append(n)
         members[n] = len(groups) - 1
-        g.compute_s += node_time(graph.nodes[n], dev, dpu)
+        g.compute_s += _node_s(graph, n, dev, dpu, node_times)
 
     # boundary transfers: every tensor entering a group is priced on its
     # producer's actual channel (data already resident on the group's
@@ -222,12 +268,13 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                 # only the transfer channel (host gather + re-scatter,
                 # Takeaway 3); the consuming member's group books it —
                 # push + pull are one parallel-transfer call each
-                ex_t = exchange_time(
-                    plan.assignment[p], g.device,
-                    graph.exchange_edges.get((p, n), 0.0), dpu)
+                ex_bytes = graph.exchange_edges.get((p, n), 0.0)
+                ex_t = exchange_time(plan.assignment[p], g.device,
+                                     ex_bytes, dpu)
                 if ex_t:
                     g.exchange_s += ex_t + 2 * TRANSFER_SETUP_S
                     g.n_exchanges += 1
+                    g.exchange_bytes += ex_bytes
             meta = graph.nodes[n].meta
             kv_bytes = float(meta.get("kv_bytes") or 0.0)
             kv_home = meta.get("kv_home")
@@ -275,16 +322,28 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                     + g.writeback_s + g.exchange_s
                     + max(g.n_writebacks - 1, 0) * TRANSFER_SETUP_S
                     for g in groups) + out_transfer
+    busy: dict[str, float] = {}
+    for g in groups:
+        busy[g.device] = busy.get(g.device, 0.0) + g.launch_s + g.compute_s
+    chan_busy = sum(g.in_transfer_s + g.writeback_s + g.exchange_s
+                    for g in groups) + out_transfer
+    if chan_busy:
+        busy["channel"] = chan_busy
     sched = Schedule(graph_name=graph.name, groups=groups,
                      out_transfer_s=out_transfer, total_s=total,
-                     overlapped_s=overlapped, unbatched_s=unbatched)
+                     overlapped_s=overlapped, unbatched_s=unbatched,
+                     busy_s=busy)
     if pipelined:
-        sched.pipelined_s = _pipelined_total(graph, plan, groups, dpu, sink)
+        sched.pipelined_s = _pipelined_total(graph, plan, groups, dpu, sink,
+                                             node_times=node_times,
+                                             events=events)
     return sched
 
 
 def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
-                     dpu: DPUModel | None, sink: str) -> float:
+                     dpu: DPUModel | None, sink: str, *,
+                     node_times: dict | None = None,
+                     events: list | None = None) -> float:
     """Event-simulate the group timeline with pipelined resources.
 
     Resources: every device is a serial executor (groups on it run in
@@ -302,7 +361,18 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
     cannot start its group before those writers' rows have landed at the
     home. Returns the makespan in seconds; never exceeds the serial-group
     `overlapped_s` total (the serial timeline is this event system with
-    every resource globally serialized)."""
+    every resource globally serialized). When `events` is a list, every
+    resource occupancy is appended to it as an event dict (the modeled
+    trace `trace.replay.modeled_trace` packages); channel events are
+    mutually exclusive by construction — the exclusivity invariant the
+    golden-trace test pins."""
+
+    def emit(kind, name, resource, t0, t1, group=-1, **attrs):
+        if events is not None:
+            events.append({"kind": kind, "name": name, "resource": resource,
+                           "t0": t0, "t1": t1, "group": group,
+                           "attrs": attrs})
+
     done: dict[str, float] = {}
     wb_done: dict[str, float] = {}
     dev_free: dict[str, float] = {}
@@ -329,9 +399,15 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
             chan_free = tx_start + g.in_transfer_s
             start = max(dev_free.get(g.device, 0.0),
                         tx_start + g.relay_s)
+            emit("stage_in", f"g{gi}", "channel", tx_start, chan_free, gi,
+                 bytes=g.in_bytes, n_tensors=g.n_in_tensors,
+                 device=g.device, relay_s=g.relay_s,
+                 producers=list(g.in_producers))
         else:
             start = max(dev_free.get(g.device, 0.0), ready)
         compute_start = start + g.launch_s
+        if g.launch_s:
+            emit("launch", f"g{gi}", g.device, start, compute_start, gi)
         span = max(g.compute_s, g.in_transfer_s - g.relay_s)
         if g.exchange_s:
             # bank exchanges occupy ONLY the shared channel, but the
@@ -345,14 +421,20 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
             ex_start = max(chan_free, compute_start + span)
             span = (ex_start - compute_start) + g.exchange_s
             chan_free = ex_start + g.exchange_s
+            emit("exchange", f"g{gi}", "channel", ex_start, chan_free, gi,
+                 n_exchanges=g.n_exchanges, bytes=g.exchange_bytes,
+                 device=g.device)
         dev_free[g.device] = compute_start + span
         # member finish times stretch over the overlap window so the last
         # member lands exactly at the group end (the serial-group algebra)
         cum = 0.0
+        prev = compute_start
         for n in g.nodes:
-            cum += node_time(graph.nodes[n], g.device, dpu)
+            cum += _node_s(graph, n, g.device, dpu, node_times)
             frac = cum / g.compute_s if g.compute_s else 1.0
             done[n] = compute_start + frac * span
+            emit("compute", n, g.device, prev, done[n], gi)
+            prev = done[n]
         first_wb = True
         for n, wb_s in g.node_writebacks:
             wb_start = max(chan_free, done[n])
@@ -360,11 +442,16 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
                 + (TRANSFER_SETUP_S if first_wb else 0.0)
             first_wb = False
             wb_done[n] = chan_free
+            emit("writeback", n, "channel", wb_start, chan_free, gi,
+                 seconds=wb_s)
     succs = graph.succs
     for leaf in (n for n in graph.topo_order() if not succs[n]):
         t = transfer_time(plan.assignment[leaf], sink,
                           graph.nodes[leaf].out_bytes, dpu)
         if t:
-            chan_free = max(chan_free, done[leaf]) + t + TRANSFER_SETUP_S
+            out_start = max(chan_free, done[leaf])
+            chan_free = out_start + t + TRANSFER_SETUP_S
+            emit("transfer_out", leaf, "channel", out_start, chan_free,
+                 sink=sink, bytes=graph.nodes[leaf].out_bytes)
     return max([chan_free] + list(dev_free.values())
                + list(wb_done.values()) + list(done.values()))

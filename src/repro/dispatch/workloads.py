@@ -819,3 +819,59 @@ def node_from_counts(c: WorkloadCounts) -> OpNode:
 def prim_graph(c: WorkloadCounts) -> OpGraph:
     """A PrIM workload as a one-node OpGraph (the planner's unit case)."""
     return chain_graph(c.name, [node_from_counts(c)])
+
+
+# ---------------------------------------------------------------------------
+# the shipped-graph registry
+# ---------------------------------------------------------------------------
+
+#: planner device sets the shipped goldens were pinned under
+_TWO_DEV = ("xeon", "upmem_2556")
+_THREE_DEV = ("xeon", "titan_v", "upmem_2556")
+
+#: paper-scale prefill golden shape: 2 chunks keeps the cross-chunk
+#: frontier inside the exact frontier-DP rung (DESIGN.md §10); the
+#: 4-chunk B&B shape is exercised by benchmarks/dispatch_bench.py
+PREFILL_PAPER = dict(prefill_len=2048, chunk=1024)
+
+
+def shipped_graphs() -> dict:
+    """Registry of every shipped graph: name -> (builder, planner device
+    set). The single source of truth three gates share — the golden-plan
+    pins (tests/test_golden_plans.py), the planner-fidelity gate
+    (tests/test_trace.py, `trace.replay.fidelity` over each entry), and
+    ad-hoc benchmark sweeps. Names are stable identifiers: golden files
+    key on them, so renaming an entry is a golden regeneration."""
+    from .. import prim
+    builders = {
+        "prim-mixed": (
+            lambda: mixed_pipeline(m=4096, concrete=False).graph(),
+            _TWO_DEV),
+        "lm-decode-chain": (
+            lambda: decode_pipeline(DecodeDims(), concrete=False).graph(),
+            _TWO_DEV),
+        "lm-decode-dag": (
+            lambda: decode_dag(DecodeDims()), _TWO_DEV),
+        "lm-decode-dag-kv-on-host": (
+            lambda: decode_dag(DecodeDims(), kv_home="xeon"), _TWO_DEV),
+        "lm-prefill-dag": (
+            lambda: prefill_dag(DecodeDims(), **PREFILL_PAPER), _TWO_DEV),
+        "lm-prefill-dag-reduced": (
+            lambda: prefill_dag(REDUCED_DIMS, prefill_len=8, chunk=4),
+            _TWO_DEV),
+        # ISSUE-5: MoE routing as an exchange phase — decode + prefill,
+        # paper (mixtral-8x7b dims) and reduced
+        "lm-moe-decode-dag": (
+            lambda: moe_decode_dag(MOE_PAPER_DIMS), _TWO_DEV),
+        "lm-moe-decode-dag-reduced": (
+            lambda: moe_decode_dag(MOE_REDUCED_DIMS), _TWO_DEV),
+        "lm-moe-prefill-dag": (
+            lambda: prefill_dag(MOE_PAPER_DIMS, **PREFILL_PAPER), _TWO_DEV),
+        "lm-moe-prefill-dag-reduced": (
+            lambda: prefill_dag(MOE_REDUCED_DIMS, prefill_len=8, chunk=4),
+            _TWO_DEV),
+    }
+    for counts in prim.all_ref_counts():
+        builders[f"prim/{counts.name}"] = (
+            (lambda c=counts: prim_graph(c)), _THREE_DEV)
+    return builders

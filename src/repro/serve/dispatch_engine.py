@@ -236,6 +236,9 @@ class DispatchDecodeStep(_MoeStageMixin):
         self.faces = FaceCache(self._stage_defs(), self.grid)
         self.executor = PlanExecutor(self.dag, self.assignment, self.faces)
         self._sample = jax.jit(self._sample_fn)
+        #: optional `dispatch.trace.Trace`: when set (ServeEngine
+        #: attach_tracer), every step records its executed timeline
+        self.tracer = None
 
     # ------------------------------------------------------------- #
     # stage bodies — each mirrors models.forward's decode path exactly
@@ -356,7 +359,8 @@ class DispatchDecodeStep(_MoeStageMixin):
         env = self.executor.run(
             self._bind(params, cache, tokens, slot_pos, attn_index),
             keep={"head", "embed",
-                  *(f"attn{i}" for i in range(cfg.n_blocks))})
+                  *(f"attn{i}" for i in range(cfg.n_blocks))},
+            tracer=self.tracer)
         logits = env["head"]
         new_ks = [env[f"attn{i}"][1] for i in range(cfg.n_blocks)]
         new_vs = [env[f"attn{i}"][2] for i in range(cfg.n_blocks)]
@@ -485,6 +489,9 @@ class DispatchPrefillStep(_MoeStageMixin):
         self._executor_cap = 16
         self.executor = self._executor_for(canonical_splits)
         self._scatter = jax.jit(self._scatter_fn)
+        #: optional `dispatch.trace.Trace`: when set (ServeEngine
+        #: attach_tracer), every prefill records its executed timeline
+        self.tracer = None
 
     # ------------------------------------------------------------- #
     # stage bodies — each mirrors models.forward's prefill path exactly
@@ -696,7 +703,8 @@ class DispatchPrefillStep(_MoeStageMixin):
             self._bind(params, toks, splits),
             keep={"head", *(f"embed/c{c}" for c in range(len(splits))),
                   *(f"qkv{i}/c{c}" for i in range(n)
-                    for c in range(len(splits)))})
+                    for c in range(len(splits)))},
+            tracer=self.tracer)
         logits = env["head"]
         k_full = jnp.stack([
             jnp.concatenate([env[f"qkv{i}/c{c}"][1]

@@ -100,6 +100,8 @@ class ServeEngine:
         self.engine = engine
 
         # per-slot caches live stacked in one batched cache
+        self.tracer = None               # dispatch.trace.Trace | None
+        self._step_no = 0
         self.cache = init_cache(cfg, batch_slots, max_len, self.shd)
         # the model's cache carries one global index; per-slot positions
         # are maintained here and passed through `positions`
@@ -192,6 +194,22 @@ class ServeEngine:
         return logits[0, -1], new_cache
 
     # ------------------------------------------------------------- #
+    def attach_tracer(self, tracer) -> None:
+        """Attach a `dispatch.trace.Trace`: the serving loop records one
+        `prefill_step` span per admission (with the slot and prompt
+        length) and one `decode_step` span per batched step (with the
+        live slots and per-slot positions — per-slot latency
+        attribution: every live slot advanced one token in that span).
+        Under `engine="dispatch"` the tracer also threads through both
+        planner-routed steps into `PlanExecutor.run` (per-node compute
+        spans, channel occupancy) and the FaceCache (compile vs
+        cache-hit). Pass None to detach."""
+        self.tracer = tracer
+        if self.engine == "dispatch":
+            self._decode.tracer = tracer
+            if self.prefill_plan is not None:
+                self._prefill_step.tracer = tracer
+
     def admit(self, req: Request) -> bool:
         """Admit a request into a free slot (prefill now). False if full."""
         try:
@@ -199,8 +217,12 @@ class ServeEngine:
         except ValueError:
             return False
         plen = int(req.prompt.shape[0])
+        t0 = self.tracer.now() if self.tracer is not None else 0.0
         logits, self.cache = self._prefill_one(
             self.params, self.cache, req.prompt, jnp.int32(slot))
+        if self.tracer is not None:
+            self.tracer.add("prefill_step", f"req{req.rid}", "engine", t0,
+                            slot=slot, prompt_len=plen)
         self.key, k = jax.random.split(self.key)
         first = int(sample(logits, k, self.temperature))
         req.out_tokens.append(first)
@@ -216,9 +238,19 @@ class ServeEngine:
         if not any(self.slot_live):
             return 0
         self.key, k = jax.random.split(self.key)
+        t0 = self.tracer.now() if self.tracer is not None else 0.0
         self.last_tok, self.cache, self.slot_pos = self._decode(
             self.params, self.cache, self.last_tok, self.slot_pos, live, k)
         toks = jax.device_get(self.last_tok[:, 0])
+        if self.tracer is not None:      # device_get synced: span = real
+            self._step_no += 1           # step latency, one token per slot
+            self.tracer.add(
+                "decode_step", f"step{self._step_no}", "engine", t0,
+                n_live=sum(self.slot_live),
+                slots=[s for s, lv in enumerate(self.slot_live) if lv],
+                positions=[int(p) for p, lv
+                           in zip(jax.device_get(self.slot_pos),
+                                  self.slot_live) if lv])
         for slot, req in enumerate(self.slot_req):
             if req is None or not self.slot_live[slot]:
                 continue

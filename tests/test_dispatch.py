@@ -524,33 +524,41 @@ def test_moe_prefill_dag_and_skeleton_parity():
 def test_facecache_moe_and_dense_kinds_share_without_recompiling(bank_grid):
     """ISSUE-5 satellite regression: MoE and dense stage kinds sharing
     one FaceCache must not collide (duplicate kinds fail loudly) and must
-    not recompile per step — one trace per kind across repeated
-    same-shape calls."""
-    import collections
+    not recompile per step — one compile per kind across repeated
+    same-shape calls, asserted through the public `stats` counters
+    (ISSUE-6: the cache accounts for itself; no monkeypatched bodies)."""
     from repro.dispatch.executor import FaceCache, StageDef
-    traces = collections.Counter()
-
-    def mk(kind):
-        def fn(x):
-            traces[kind] += 1          # counted at trace time only
-            return x + 1
-        return fn
 
     kinds = ("mlp", "router", "expert", "combine")
-    faces = FaceCache([StageDef(k, mk(k), (0,), (0,)) for k in kinds],
-                      bank_grid)
+    faces = FaceCache([StageDef(k, lambda x: x + 1, (0,), (0,))
+                       for k in kinds], bank_grid)
     x = jnp.zeros((4,), jnp.float32)
     for _ in range(5):                 # five "steps", same shapes
         for k in kinds:
             faces.host(k)(x)
-    assert all(traces[k] == 1 for k in kinds), dict(traces)
-    # a second executor sharing the cache adds no traces either
+    st = faces.stats
+    assert st["calls"] == 5 * len(kinds)
+    assert st["compiles"] == len(kinds), st
+    assert st["hits"] == 4 * len(kinds)
+    assert all(st["by_kind"][k] == {"calls": 5, "compiles": 1}
+               for k in kinds), st["by_kind"]
+    assert st["host"]["compiles"] == len(kinds) and \
+        st["pim"]["compiles"] == 0
+    # a second executor sharing the cache adds hits, no compiles
     for k in kinds:
         faces.host(k)(x)
-    assert all(traces[k] == 1 for k in kinds), dict(traces)
+    st = faces.stats
+    assert st["compiles"] == len(kinds) and st["hits"] == 5 * len(kinds)
+    # a NEW shape per kind is a legitimate respecialization: one more
+    # compile each, visible in the same counters
+    y = jnp.zeros((8,), jnp.float32)
+    for k in kinds:
+        faces.host(k)(y)
+    st = faces.stats
+    assert st["compiles"] == 2 * len(kinds), st
     with pytest.raises(ValueError, match="duplicate"):
-        FaceCache([StageDef("mlp", mk("a"), (0,), (0,)),
-                   StageDef("mlp", mk("b"), (0,), (0,))], bank_grid)
+        FaceCache([StageDef("mlp", lambda x: x + 1, (0,), (0,)),
+                   StageDef("mlp", lambda x: x + 2, (0,), (0,))], bank_grid)
 
 
 # ------------------------------------------------------------------ #

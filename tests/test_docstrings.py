@@ -16,7 +16,7 @@ import inspect
 
 import pytest
 
-PACKAGES = ("repro.dispatch", "repro.serve")
+PACKAGES = ("repro.dispatch", "repro.dispatch.trace", "repro.serve")
 
 
 def _exports(pkg_name):

@@ -49,7 +49,6 @@ import pathlib
 
 import pytest
 
-from repro import prim
 from repro.dispatch import workloads
 from repro.dispatch.placement import plan
 from repro.dispatch.schedule import make_schedule
@@ -57,56 +56,13 @@ from repro.dispatch.schedule import make_schedule
 GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_plans.json"
 REGEN = bool(os.environ.get("REGEN_GOLDEN"))
 
-TWO_DEV = ("xeon", "upmem_2556")
-THREE_DEV = ("xeon", "titan_v", "upmem_2556")
-
-#: paper-scale prefill golden: 2 chunks keeps the cross-chunk frontier
-#: inside the exact frontier-DP rung (DESIGN.md §10); the 4-chunk B&B
-#: shape is exercised by benchmarks/dispatch_bench.py instead
-_PREFILL_PAPER = dict(prefill_len=2048, chunk=1024)
-
 
 def _graph_builders():
-    """name -> (graph builder, planner device set). One entry per shipped
-    graph; the objective variants below reuse these builds."""
-    builders = {
-        "prim-mixed": (
-            lambda: workloads.mixed_pipeline(m=4096, concrete=False).graph(),
-            TWO_DEV),
-        "lm-decode-chain": (
-            lambda: workloads.decode_pipeline(workloads.DecodeDims(),
-                                              concrete=False).graph(),
-            TWO_DEV),
-        "lm-decode-dag": (
-            lambda: workloads.decode_dag(workloads.DecodeDims()), TWO_DEV),
-        "lm-decode-dag-kv-on-host": (
-            lambda: workloads.decode_dag(workloads.DecodeDims(),
-                                         kv_home="xeon"), TWO_DEV),
-        "lm-prefill-dag": (
-            lambda: workloads.prefill_dag(workloads.DecodeDims(),
-                                          **_PREFILL_PAPER), TWO_DEV),
-        "lm-prefill-dag-reduced": (
-            lambda: workloads.prefill_dag(workloads.REDUCED_DIMS,
-                                          prefill_len=8, chunk=4), TWO_DEV),
-        # ISSUE-5: MoE routing as an exchange phase — decode + prefill,
-        # paper (mixtral-8x7b dims) and reduced
-        "lm-moe-decode-dag": (
-            lambda: workloads.moe_decode_dag(workloads.MOE_PAPER_DIMS),
-            TWO_DEV),
-        "lm-moe-decode-dag-reduced": (
-            lambda: workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS),
-            TWO_DEV),
-        "lm-moe-prefill-dag": (
-            lambda: workloads.prefill_dag(workloads.MOE_PAPER_DIMS,
-                                          **_PREFILL_PAPER), TWO_DEV),
-        "lm-moe-prefill-dag-reduced": (
-            lambda: workloads.prefill_dag(workloads.MOE_REDUCED_DIMS,
-                                          prefill_len=8, chunk=4), TWO_DEV),
-    }
-    for counts in prim.all_ref_counts():
-        builders[f"prim/{counts.name}"] = (
-            (lambda c=counts: workloads.prim_graph(c)), THREE_DEV)
-    return builders
+    """name -> (graph builder, planner device set) — the shipped-graph
+    registry (`workloads.shipped_graphs`), which is also what the
+    planner-fidelity gate in tests/test_trace.py iterates; one entry per
+    shipped graph, the objective variants below reuse these builds."""
+    return workloads.shipped_graphs()
 
 
 @functools.lru_cache(maxsize=None)

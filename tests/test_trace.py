@@ -1,0 +1,531 @@
+"""Execution tracing, replay, calibration, and the planner-fidelity gate
+(`repro.dispatch.trace`, DESIGN.md §13).
+
+Four contracts are pinned here:
+
+  1. **Schema + golden trace** — the versioned JSON/Chrome serialization
+     round-trips, and `tests/golden_trace.json` pins the MODELED event
+     stream (kinds, names, resources, groups exactly; times approx) of
+     two shipped reduced graphs whose plans together exercise every
+     channel event kind. Like the golden plans, the file is a reviewed
+     artifact: regenerate with
+
+         REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_trace.py
+
+     and read the diff like any other code change.
+  2. **Ordering invariants** — on any modeled trace, channel events are
+     mutually exclusive (ONE shared transfer channel), per-device spans
+     are serial (each device is one queue), and every compute span
+     starts at or after all its producers' spans end (reader-after-
+     writer through the OpGraph).
+  3. **The planner-fidelity gate** — for EVERY `workloads.shipped_graphs()`
+     entry, the serial plan's predicted `Schedule.pipelined_s` replays
+     its own recorded trace to within `FIDELITY_BAND` relative error
+     (drift = the replayer and the simulation disagree). On failure the
+     offending trace + report are written to `$TRACE_ARTIFACT_DIR` for
+     the CI upload step. The measured leg (a REAL dispatch-backed
+     serving trace) gates the executor against the planner the same way.
+  4. **Calibration round trip** — `calibrate.fit_trace` recovers the
+     `placement.cost_constants()` anchors from a synthetic trace priced
+     exactly at those anchors (`anchor_trace`), and the tracer costs
+     <5% of untraced executor wall-clock (the ISSUE-6 overhead budget).
+"""
+
+import json
+import os
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dispatch import trace as dtrace
+from repro.dispatch import workloads
+from repro.dispatch.placement import cost_constants, plan, pure_plan
+from repro.dispatch.schedule import make_schedule
+from repro.dispatch.trace import (EVENT_KINDS, FIDELITY_BAND,
+                                  TRACE_SCHEMA_VERSION, Trace, anchor_trace,
+                                  executed_order, fidelity, fit_trace,
+                                  measured_node_times, modeled_trace, replay,
+                                  what_if)
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_trace.json"
+REGEN = bool(os.environ.get("REGEN_GOLDEN"))
+EPS = 1e-9
+
+
+# ------------------------------------------------------------------ #
+# fixtures: rich modeled traces + the golden-trace case registry
+# ------------------------------------------------------------------ #
+
+def _golden_cases() -> dict:
+    """name -> (graph, plan): the two pinned reduced graphs. Together
+    their modeled traces cover every channel event kind — the MoE decode
+    DAG on pure PIM pays launch/exchange/transfer_out, the dense prefill
+    DAG on pure CPU (KV home on PIM) pays per-chunk KV write-backs."""
+    moe = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS)
+    pre = workloads.prefill_dag(workloads.REDUCED_DIMS, prefill_len=8,
+                                chunk=4)
+    return {
+        "lm-moe-decode-dag-reduced:pure_pim":
+            (moe, pure_plan(moe, "upmem_2556")),
+        "lm-prefill-dag-reduced:pure_cpu":
+            (pre, pure_plan(pre, "xeon")),
+    }
+
+
+@pytest.fixture(scope="module")
+def rich_traces():
+    """The golden cases' modeled traces, keyed like the golden file."""
+    return {name: (g, p, modeled_trace(g, p))
+            for name, (g, p) in _golden_cases().items()}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    """The pinned golden-trace document (skip when absent, unless
+    regenerating from scratch)."""
+    if not GOLDEN_PATH.exists():
+        if REGEN:
+            return {}
+        pytest.skip("golden_trace.json missing — run with REGEN_GOLDEN=1")
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _write_regenerated(request):
+    """After a REGEN_GOLDEN run, write the regenerated golden file."""
+    yield
+    regen = getattr(request.config, "_regen_golden_trace", None)
+    if regen is not None:
+        GOLDEN_PATH.write_text(json.dumps(regen, indent=1, sort_keys=True)
+                               + "\n")
+
+
+# ------------------------------------------------------------------ #
+# 1. event schema + serialization round trips
+# ------------------------------------------------------------------ #
+
+def test_trace_records_and_serializes(tmp_path):
+    """JSON round trip preserves name, meta, and every event field; the
+    loader rejects unknown schema versions."""
+    t = Trace("unit", meta={"graph": "g"})
+    t.add("compute", "a", "xeon", 0.0, 1.5, group=2, flops=3.0)
+    t.instant("cache_hit", "mlp", "host")
+    assert t.events[0].dur_s == 1.5 and t.events[1].dur_s == 0.0
+    path = tmp_path / "t.json"
+    t.save(path)
+    back = Trace.load(path)
+    assert back.name == "unit" and back.meta == {"graph": "g"}
+    assert [e.to_dict() for e in back.events] == \
+        [e.to_dict() for e in t.events]
+    doc = t.to_json()
+    assert doc["schema"] == TRACE_SCHEMA_VERSION
+    doc["schema"] = 999
+    with pytest.raises(ValueError, match="schema"):
+        Trace.from_json(doc)
+
+
+def test_chrome_export(tmp_path, rich_traces):
+    """The Chrome trace_event export names one pseudo-thread per
+    resource, emits spans as complete events (µs timestamps) and
+    zero-duration events as instants."""
+    _, _, t = rich_traces["lm-moe-decode-dag-reduced:pure_pim"]
+    doc = t.to_chrome()
+    evs = doc["traceEvents"]
+    names = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert names == set(t.resources())
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert len(spans) == sum(1 for e in t.events if e.t1 > e.t0)
+    ref = next(e for e in t.events if e.t1 > e.t0)
+    chrome_ref = next(e for e in spans
+                      if e["name"] == f"{ref.kind}:{ref.name}")
+    assert chrome_ref["ts"] == pytest.approx(ref.t0 * 1e6)
+    assert chrome_ref["dur"] == pytest.approx(ref.dur_s * 1e6)
+    t.save_chrome(tmp_path / "t.chrome.json")
+    assert json.loads((tmp_path / "t.chrome.json").read_text())[
+        "traceEvents"]
+
+
+def test_modeled_kinds_are_known(rich_traces):
+    """Every kind a modeled trace emits is in the EVENT_KINDS registry,
+    and the two golden cases together cover all modeled kinds."""
+    seen = set()
+    for _, _, t in rich_traces.values():
+        kinds = {e.kind for e in t.events}
+        assert kinds <= set(EVENT_KINDS), kinds - set(EVENT_KINDS)
+        seen |= kinds
+    assert {"compute", "launch", "stage_in", "exchange", "writeback",
+            "transfer_out"} <= seen
+
+
+def test_trace_helpers():
+    """`executed_order` preserves dispatch order across repeats;
+    `measured_node_times` keeps the LAST span per node (post-warmup)."""
+    t = Trace("synthetic")
+    t.add("compute", "a", "xeon", 0.0, 1.0)
+    t.add("compute", "b", "xeon", 1.0, 1.5)
+    t.add("compute", "a", "xeon", 2.0, 2.25)
+    assert executed_order(t) == ["a", "b", "a"]
+    assert measured_node_times(t) == pytest.approx({"a": 0.25, "b": 0.5})
+
+
+# ------------------------------------------------------------------ #
+# 2. ordering invariants of the modeled event stream
+# ------------------------------------------------------------------ #
+
+def test_channel_events_are_mutually_exclusive(rich_traces):
+    """ONE shared transfer channel: no two channel spans overlap."""
+    for name, (_, _, t) in rich_traces.items():
+        chan = sorted((e for e in t.events if e.resource == "channel"),
+                      key=lambda e: (e.t0, e.t1))
+        assert chan, name
+        for a, b in zip(chan, chan[1:]):
+            assert b.t0 >= a.t1 - EPS, \
+                f"{name}: {a.kind}:{a.name} overlaps {b.kind}:{b.name}"
+
+
+def test_per_device_spans_are_serial(rich_traces):
+    """Each device is a serial queue: its compute/launch spans never
+    overlap each other."""
+    for name, (_, _, t) in rich_traces.items():
+        for res in t.resources():
+            if res == "channel":
+                continue
+            evs = sorted((e for e in t.events if e.resource == res),
+                         key=lambda e: (e.t0, e.t1))
+            for a, b in zip(evs, evs[1:]):
+                assert b.t0 >= a.t1 - EPS, f"{name}/{res}"
+
+
+def test_reader_after_writer(rich_traces):
+    """Every node's compute span starts at or after each of its graph
+    producers' spans end — dependencies are respected in the timeline."""
+    for name, (g, _, t) in rich_traces.items():
+        start, end = {}, {}
+        for e in t.events:
+            if e.kind == "compute":
+                start[e.name], end[e.name] = e.t0, e.t1
+        assert set(start) == set(g.nodes), name
+        for n in g.nodes:
+            for p in g.preds.get(n, ()):
+                assert end[p] <= start[n] + EPS, f"{name}: {p} -> {n}"
+
+
+# ------------------------------------------------------------------ #
+# 3. golden trace
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("name", sorted(_golden_cases()))
+def test_modeled_trace_matches_golden(name, golden, rich_traces, request):
+    """The modeled event stream is pinned: kind/name/resource/group of
+    every event exactly and in order, timestamps to 1e-6 relative. Event
+    drift means the pipelined discipline changed — regenerate and review
+    like a golden-plan change."""
+    _, _, t = rich_traces[name]
+    got = t.to_json()
+    if REGEN:
+        regen = getattr(request.config, "_regen_golden_trace", dict(golden))
+        regen[name] = got
+        request.config._regen_golden_trace = regen
+        return
+    assert name in golden, f"no golden trace for {name} (REGEN_GOLDEN=1)"
+    want = golden[name]
+    assert want["schema"] == TRACE_SCHEMA_VERSION
+    shape = [(e["kind"], e["name"], e["resource"], e["group"])
+             for e in got["events"]]
+    want_shape = [(e["kind"], e["name"], e["resource"], e["group"])
+                  for e in want["events"]]
+    assert shape == want_shape
+    for ge, we in zip(got["events"], want["events"]):
+        assert ge["t0"] == pytest.approx(we["t0"], rel=1e-6, abs=1e-12)
+        assert ge["t1"] == pytest.approx(we["t1"], rel=1e-6, abs=1e-12)
+        assert set(ge["attrs"]) == set(we["attrs"])
+        for k, v in we["attrs"].items():
+            if isinstance(v, float):
+                assert ge["attrs"][k] == pytest.approx(v, rel=1e-6)
+            else:
+                assert ge["attrs"][k] == v
+
+
+# ------------------------------------------------------------------ #
+# 4. replay + the planner-fidelity gate
+# ------------------------------------------------------------------ #
+
+def test_replay_round_trip_is_exact(rich_traces):
+    """Replaying a plan's own modeled trace reproduces `pipelined_s`
+    exactly — the replayer and the event simulation are the same
+    discipline, not two approximations of each other."""
+    for name, (g, p, t) in rich_traces.items():
+        predicted = make_schedule(g, p, pipelined=True).pipelined_s
+        rep = replay(t, g)          # assignment from trace.meta
+        assert rep.total_s == pytest.approx(predicted, rel=1e-12), name
+        assert rep.order == [n for n in rep.order]  # a list, replayable
+
+
+def test_replay_requires_an_assignment():
+    """A trace without a recorded assignment (and none passed) is a
+    loud error, not a silent planner fallback."""
+    g = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS)
+    with pytest.raises(ValueError, match="assignment"):
+        replay(Trace("empty"), g)
+
+
+def test_replay_multi_step_trace_takes_last_step(rich_traces):
+    """A serving trace repeats every node once per decode step; replay
+    prices the LAST repetition (steady state), and measured node times
+    can stand in for the cost model."""
+    g, p, t = rich_traces["lm-moe-decode-dag-reduced:pure_pim"]
+    multi = Trace("multi", meta={"assignment": dict(p.assignment)})
+    for step in range(3):
+        for e in t.events:
+            if e.kind == "compute":
+                multi.add("compute", e.name, e.resource,
+                          step + e.t0, step + e.t1)
+    rep = replay(multi, g)
+    assert len(rep.order) == len(g.nodes)
+    assert rep.total_s == pytest.approx(replay(t, g).total_s, rel=1e-12)
+    timed = replay(multi, g, use_measured_times=True)
+    assert timed.total_s > 0
+
+
+def test_what_if_replay():
+    """`what_if` builds override DPU models, and replaying a recorded
+    timeline on a faster transfer channel never prices slower."""
+    hw = what_if(n_dpus=1234, mram_bw=1.0, launch_overhead_s=0.5)
+    assert (hw.n_dpus, hw.mram_bw, hw.launch_overhead_s) == (1234, 1.0, 0.5)
+    g = workloads.prefill_dag(workloads.REDUCED_DIMS, prefill_len=8,
+                              chunk=4)
+    p = pure_plan(g, "upmem_2556")
+    t = modeled_trace(g, p)
+    base = replay(t, g).total_s
+    fast = replay(t, g, dpu=what_if(channel_scale=4.0)).total_s
+    assert fast <= base + EPS
+
+
+@pytest.mark.parametrize("name", sorted(workloads.shipped_graphs()))
+def test_planner_fidelity_gate(name):
+    """THE gate: every shipped golden graph's serial plan must replay
+    its own execution trace to within FIDELITY_BAND relative error. On
+    failure the trace and report land in $TRACE_ARTIFACT_DIR so the CI
+    step can upload them for diagnosis."""
+    builder, devices = workloads.shipped_graphs()[name]
+    g = builder()
+    p = plan(g, devices=devices)
+    rep = fidelity(g, p)
+    assert rep.band == FIDELITY_BAND
+    if not rep.ok:
+        art = os.environ.get("TRACE_ARTIFACT_DIR")
+        if art:
+            d = pathlib.Path(art)
+            d.mkdir(parents=True, exist_ok=True)
+            stem = name.replace("/", "_")
+            modeled_trace(g, p).save(d / f"{stem}.trace.json")
+            (d / f"{stem}.fidelity.json").write_text(json.dumps(
+                {"graph": rep.graph_name, "predicted_s": rep.predicted_s,
+                 "replayed_s": rep.replayed_s, "rel_err": rep.rel_err,
+                 "band": rep.band}, indent=1) + "\n")
+    assert rep.ok, rep.render()
+    assert "PASS" in rep.render()
+
+
+# ------------------------------------------------------------------ #
+# 5. calibration
+# ------------------------------------------------------------------ #
+
+def test_cost_constants_registry():
+    """The Fig.-4 anchor registry: every fittable constant is present,
+    positive, and the PIM time scale anchors at exactly 1.0."""
+    cc = cost_constants()
+    for k in ("xeon.hbm_bw", "xeon.peak_flops", "titan_v.hbm_bw",
+              "pcie.bw", "dpu.host_to_dpu_bw", "dpu.dpu_to_host_bw",
+              "dpu.mram_bw", "dpu.launch_overhead_s", "dpu.time_scale",
+              "channel.setup_s", "exchange.roundtrip_bw"):
+        assert k in cc, k
+    assert all(v > 0 for v in cc.values()), cc
+    assert cc["dpu.time_scale"] == 1.0
+
+
+def test_calibration_round_trip_recovers_anchors():
+    """Fitting a synthetic trace priced EXACTLY at the anchors must
+    recover them: every `ConstantFit.drift` is ~0. (A measured trace
+    then reports honest drift against the same anchors.)"""
+    g = workloads.decode_dag(workloads.DecodeDims())
+    p = plan(g)                       # hybrid: host + PIM nodes
+    devs = set(p.assignment.values())
+    assert "xeon" in devs and any(d.startswith("upmem") for d in devs)
+    t = anchor_trace(g, p.assignment)
+    rep = fit_trace(t, g, p.assignment)
+    assert rep.fits, "nothing fitted"
+    fitted = {f.name for f in rep.fits}
+    assert "dpu.time_scale" in fitted
+    for f in rep.fits:
+        assert f.n_events > 0
+        assert abs(f.drift) < 1e-6, (f.name, f.fitted, f.anchor)
+    out = rep.render()
+    assert "drift" in out and rep.fitted_constants()
+
+
+def test_calibration_on_exchange_trace():
+    """Exchange round-trip bandwidth is fittable from a trace whose
+    graph pays MoE all-to-alls (the pure-PIM reduced MoE decode)."""
+    g = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS)
+    p = pure_plan(g, "upmem_2556")
+    t = anchor_trace(g, p.assignment)
+    rep = fit_trace(t, g, p.assignment)
+    names = {f.name: f for f in rep.fits}
+    assert "exchange.roundtrip_bw" in names
+    assert abs(names["exchange.roundtrip_bw"].drift) < 1e-6
+
+
+# ------------------------------------------------------------------ #
+# 6. utilization satellite (Schedule.busy_s / render occupancy)
+# ------------------------------------------------------------------ #
+
+def test_schedule_utilization_and_occupancy_line():
+    """`Schedule.busy_s` books per-resource busy seconds, `utilization`
+    normalizes by the modeled wall, and the rendered timeline (what
+    `--show-schedule` prints) carries the occupancy line."""
+    g = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS)
+    s = make_schedule(g, pure_plan(g, "upmem_2556"), pipelined=True)
+    assert "upmem_2556" in s.busy_s and "channel" in s.busy_s
+    util = s.utilization()
+    assert util and all(0.0 <= v <= 1.0 + EPS for v in util.values())
+    # the pipelined wall is the default basis; an explicit wall rescales
+    assert s.utilization(wall_s=s.pipelined_s * 2)["upmem_2556"] == \
+        pytest.approx(util["upmem_2556"] / 2)
+    out = str(s)
+    assert "occupancy of pipelined wall" in out and "% busy" in out
+
+
+# ------------------------------------------------------------------ #
+# 7. the measured serving leg (real executor, real FaceCache)
+# ------------------------------------------------------------------ #
+
+@pytest.fixture(scope="module")
+def serve_rig():
+    """A reduced dispatch-backed ServeEngine with both slots admitted
+    and the decode step warmed (every stage compiled once)."""
+    from repro.configs import REDUCED
+    from repro.models import Shardings, init_params
+    from repro.serve import Request, ServeEngine
+    cfg = REDUCED["granite-3-8b"]
+    shd = Shardings(None)
+    params = init_params(jax.random.PRNGKey(0), cfg, shd)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=512, shd=shd,
+                      engine="dispatch",
+                      dispatch_kwargs={"prefill_engine": "jit"})
+    for i in range(2):
+        eng.admit(Request(i, jnp.arange(5, dtype=jnp.int32) + 2, 10_000))
+    for _ in range(3):
+        eng.step()
+    return eng
+
+
+def test_facecache_stats_steady_state(serve_rig):
+    """After warm-up the FaceCache serves every decode-step call from
+    cache: calls and hits grow, compiles stay frozen (the PR-5
+    recompile regression, asserted through the public counters)."""
+    st0 = serve_rig._decode.executor.faces.stats
+    assert st0["compiles"] > 0 and st0["calls"] >= st0["compiles"]
+    for _ in range(3):
+        serve_rig.step()
+    st1 = serve_rig._decode.executor.faces.stats
+    assert st1["compiles"] == st0["compiles"], (st0, st1)
+    assert st1["calls"] > st0["calls"]
+    assert st1["hits"] - st0["hits"] == st1["calls"] - st0["calls"]
+    for k, v in st1["by_kind"].items():
+        assert v["compiles"] >= 1 and v["calls"] >= v["compiles"], (k, v)
+
+
+def test_measured_serving_trace_and_fidelity(serve_rig):
+    """The measured leg of the gate: a traced run records decode-step
+    spans, per-node compute spans, channel occupancy, and cache-hit
+    instants; the planner's prediction stays within the band of the
+    replayed measured linearization; calibration runs on it."""
+    tracer = Trace("serve:test", meta={
+        "assignment": dict(serve_rig._decode.executor.assignment)})
+    serve_rig.attach_tracer(tracer)
+    try:
+        for _ in range(4):
+            serve_rig.step()
+    finally:
+        serve_rig.attach_tracer(None)
+    kinds = {e.kind for e in tracer.events}
+    assert {"decode_step", "compute", "cache_hit"} <= kinds, kinds
+    steps = tracer.by_kind("decode_step")
+    assert len(steps) == 4
+    for e in steps:
+        assert e.dur_s > 0 and e.attrs["n_live"] == 2
+        assert e.attrs["slots"] == [0, 1]
+    n_nodes = len(serve_rig._decode.dag.nodes)
+    assert len(tracer.by_kind("compute")) == 4 * n_nodes
+    # warmed steps never compile
+    assert not tracer.by_kind("compile")
+    rep = fidelity(serve_rig._decode.dag, serve_rig._decode.plan,
+                   trace=tracer)
+    assert rep.ok, rep.render()
+    cal = fit_trace(tracer, serve_rig._decode.dag,
+                    serve_rig._decode.executor.assignment)
+    assert cal.fits and all(f.n_events > 0 for f in cal.fits)
+
+
+def test_tracing_overhead_under_budget(serve_rig):
+    """The ISSUE-6 overhead budget: a tracer attached to the serving
+    hot loop costs <5% of untraced wall-clock (best-of-5 trials to keep
+    scheduler noise out of the comparison)."""
+    import gc
+
+    def loop(n):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            serve_rig.step()
+        return time.perf_counter() - t0
+
+    def measure(steps=15, trials=3):
+        # interleave the trials so machine-load drift lands evenly on
+        # both sides; min-of-trials drops scheduler noise; GC paused so
+        # a collection pause doesn't land inside one timed batch
+        tracer = Trace("overhead")
+        untraced_ts, traced_ts = [], []
+        gc.disable()
+        try:
+            for _ in range(trials):
+                untraced_ts.append(loop(steps))
+                serve_rig.attach_tracer(tracer)
+                try:
+                    traced_ts.append(loop(steps))
+                finally:
+                    serve_rig.attach_tracer(None)
+        finally:
+            gc.enable()
+        return min(traced_ts) / min(untraced_ts) - 1.0
+
+    # a genuine regression (say, a per-event device sync) fails EVERY
+    # attempt; a noisy container fails at most a couple, so gate on the
+    # best of three measurements
+    overhead = min(measure() for _ in range(3))
+    assert overhead < 0.05, \
+        f"tracing overhead {overhead:.1%} blows the <5% budget"
+
+
+def test_jit_engine_records_serving_spans():
+    """The tracer works on the fused-jit engine too: prefill_step and
+    decode_step spans only (no executor underneath to trace)."""
+    from repro.configs import REDUCED
+    from repro.models import Shardings, init_params
+    from repro.serve import Request, ServeEngine
+    cfg = REDUCED["granite-3-8b"]
+    shd = Shardings(None)
+    params = init_params(jax.random.PRNGKey(0), cfg, shd)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, shd=shd)
+    tracer = Trace("serve:jit")
+    eng.attach_tracer(tracer)
+    eng.serve([Request(0, jnp.arange(4, dtype=jnp.int32), 3),
+               Request(1, jnp.arange(6, dtype=jnp.int32), 3)])
+    pre = tracer.by_kind("prefill_step")
+    assert [e.name for e in pre] == ["req0", "req1"]
+    assert [e.attrs["prompt_len"] for e in pre] == [4, 6]
+    assert tracer.by_kind("decode_step")
+    assert not tracer.by_kind("compute")
