@@ -1,0 +1,305 @@
+"""Serving-gateway benchmark: continuous batching under Poisson traffic.
+
+The ROADMAP's "millions of users" number, measured and modeled through
+`repro.serve.gateway` (DESIGN.md §14). Six sections:
+
+  1. Steady-state throughput (reduced scale, MEASURED wall clock): a
+     seeded Poisson arrival stream through `Gateway` over the fused-jit
+     engine at a sustainable rate — sustained requests/s, p50/p99 TTFT
+     and inter-token latency, goodput.
+  2. Plan-cache amortization under batch-signature churn: a long
+     deterministic run whose admissions/evictions churn the live-slot
+     count and position buckets; ASSERTS >80% plan-cache hit rate at
+     steady state (the ISSUE-7 acceptance gate) and reports the planner
+     solves amortized away.
+  3. Overload and goodput: offered load far above capacity against a
+     bounded queue with the shed policy — per-priority-class completion
+     and rejection, goodput vs offered, interactive-vs-batch tail
+     latency (the reject/shed policy at work).
+  4. Budget/EOS admission gate: a budget-1 request produces EXACTLY one
+     token on the fused AND dispatch engines (the ISSUE-7 bugfix
+     acceptance; before the fix admit() always entered decode and
+     over-generated).
+  5. Paper-scale projection (MODELED): decode/prefill DAGs priced at
+     paper dims (4k d_model / 32 layers / 2556-DPU grid) through the
+     same `PlanCache` keying, swept over batch sizes — modeled tokens/s,
+     sustained requests/s, and requests/day (the "millions of users"
+     statement, stated honestly as a cost-model projection).
+  6. Dispatch-engine gateway + measured trace: the gateway drives the
+     planner-routed engine with a tracer attached; the planner-fidelity
+     gate replays the gateway-driven decode timeline (predicted
+     `pipelined_s` within 10% of the replayed trace) and `--trace
+     OUT_JSON` exports the trace plus its Chrome trace_event twin.
+
+`run(report, quick=True)` (CI's `benchmarks.run gateway_bench --quick`)
+keeps sections 2-4 and 6 at reduced request counts — the acceptance
+asserts all still run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.dispatch import PlanCache, batch_signature, workloads
+from repro.dispatch import trace as dtrace
+from repro.dispatch.placement import plan as plan_placement
+from repro.dispatch.schedule import make_schedule
+
+
+def _setup(cfg_name="granite-3-8b"):
+    import jax
+    from repro.configs import REDUCED
+    from repro.models import Shardings, init_params
+    cfg = REDUCED[cfg_name]
+    shd = Shardings(None)
+    params = init_params(jax.random.PRNGKey(0), cfg, shd)
+    return cfg, shd, params
+
+
+def _class_rows(gw):
+    """Per-priority-class outcome rows for one finished gateway."""
+    from repro.serve import PRIORITIES, percentile
+    rows = []
+    for p, name in enumerate(PRIORITIES):
+        done = [g for g in gw.finished if g.priority == p]
+        rej = [g for g in gw.rejected if g.priority == p]
+        ttfts = sorted(g.ttft_s for g in done if g.ttft_s is not None)
+        rows.append({"class": name, "completed": len(done),
+                     "rejected": len(rej),
+                     "shed": sum(1 for g in rej
+                                 if g.reject_reason == "shed"),
+                     "TTFT p50 ms":
+                         round(percentile(ttfts, 50) * 1e3, 2),
+                     "TTFT p99 ms":
+                         round(percentile(ttfts, 99) * 1e3, 2)})
+    return rows
+
+
+def _steady_state(report, cfg, shd, params, n_requests):
+    """Section 1: measured wall-clock serving under seeded Poisson."""
+    from repro.serve import Gateway, ServeEngine, poisson_requests
+    report.section("Steady-state serving under seeded Poisson "
+                   "(reduced scale, measured wall clock)")
+    import jax.numpy as jnp
+    from repro.serve import Request
+    eng = ServeEngine(cfg, params, batch_slots=4, max_len=64, shd=shd)
+    # warm the jit caches — the decode step plus ONE prefill trace per
+    # distinct prompt length in the sweep — so the measured run prices
+    # steady-state serving, not XLA compiles
+    for i, plen in enumerate(range(4, 9)):
+        eng.serve([Request(-1 - i, jnp.ones((plen,), jnp.int32), 2)])
+    gw = Gateway(eng, queue_capacity=n_requests + 1, pos_bucket=16,
+                 slo_ttft_s=0.5, slo_itl_s=0.25)
+    # prewarm the plan cache out of band (cold DAG builds are ~100s of
+    # ms each — in-band misses would stall every live slot's next token)
+    t0 = time.perf_counter()
+    warm = gw.prewarm(range(4, 9))
+    report.note(f"plan-cache prewarm: {warm['misses']} signature solves "
+                f"in {time.perf_counter() - t0:.1f}s before traffic")
+    reqs = poisson_requests(n_requests, 8.0, seed=7,
+                            vocab=cfg.vocab_size, prompt_lens=(4, 8),
+                            max_new=(4, 10))
+    stats = gw.run(reqs)
+    report.table([dict((k, v) for k, v in stats.rows())])
+    assert stats.completed == n_requests, "steady-state run dropped work"
+    report.note(f"fused-jit engine, 4 slots: {stats.sustained_rps:.1f} "
+                f"sustained req/s at p99 TTFT "
+                f"{stats.ttft_p99_s * 1e3:.1f}ms / p99 ITL "
+                f"{stats.itl_p99_s * 1e3:.1f}ms (CPU-JAX wall clock; "
+                "paper-scale projection in the modeled section)")
+    return stats
+
+
+def _churn_sweep(report, cfg, shd, params, n_requests):
+    """Section 2: the plan-cache hit-rate gate under signature churn."""
+    from repro.serve import Gateway, ManualClock, ServeEngine, \
+        poisson_requests
+    report.section("Plan-cache amortization under batch-signature churn")
+    eng = ServeEngine(cfg, params, batch_slots=4, max_len=64, shd=shd)
+    gw = Gateway(eng, queue_capacity=n_requests + 1, pos_bucket=8,
+                 clock=ManualClock(tick=1e-4))
+    reqs = poisson_requests(n_requests, 100.0, seed=11,
+                            vocab=cfg.vocab_size, prompt_lens=(3, 10),
+                            max_new=(2, 12))
+    stats = gw.run(reqs)
+    pc = stats.plan_cache
+    report.table([{"requests": stats.completed, "steps": stats.steps,
+                   "planner calls": pc["calls"], "hits": pc["hits"],
+                   "solves (misses)": pc["misses"],
+                   "hit rate": f"{pc['hit_rate']:.1%}"}])
+    # ISSUE-7 acceptance: >80% of planner consults served from cache at
+    # steady state even though every admission/eviction and every
+    # position-bucket crossing changes the batch signature
+    assert pc["hit_rate"] > 0.80, \
+        f"plan-cache hit rate {pc['hit_rate']:.1%} <= 80% on churn sweep"
+    report.note(f"pos_bucket=8 over a 4-slot engine: {pc['misses']} "
+                f"planner solves serve {pc['calls']} consults — "
+                "replanning amortizes exactly like FaceCache compiles")
+    return stats
+
+
+def _overload(report, cfg, shd, params, n_requests):
+    """Section 3: bounded queue + shed policy under 5x overload."""
+    from repro.serve import Gateway, ManualClock, ServeEngine, \
+        poisson_requests
+    report.section("Overload: bounded queue, shed policy, goodput")
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64, shd=shd)
+    gw = Gateway(eng, queue_capacity=3, shed_policy="shed",
+                 pos_bucket=16, clock=ManualClock(tick=2e-3),
+                 slo_ttft_s=0.15)
+    reqs = poisson_requests(n_requests, 2000.0, seed=13,
+                            vocab=cfg.vocab_size, prompt_lens=(4, 8),
+                            max_new=(4, 8))
+    stats = gw.run(reqs)
+    report.table([dict((k, v) for k, v in stats.rows())])
+    report.table(_class_rows(gw))
+    assert stats.rejected > 0, "overload run never rejected"
+    assert stats.completed + stats.rejected == stats.offered
+    report.note("a near-simultaneous burst against one slot and a "
+                "3-deep queue: the bounded queue sheds lowest-priority "
+                "work, goodput counts only requests that met the 150ms "
+                "TTFT SLO")
+    return stats
+
+
+def _budget_gate(report, cfg, shd, params, dis_eng):
+    """Section 4: budget-1 yields exactly 1 token on both engines."""
+    import jax.numpy as jnp
+    from repro.serve import Request, ServeEngine
+    report.section("Budget/EOS admission gate (budget-1 == 1 token)")
+    rows = []
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,
+                          shd=shd)
+    for engine, eng in (("jit", jit_eng), ("dispatch", dis_eng)):
+        req = Request(0, jnp.asarray([3, 1, 4, 1, 5], jnp.int32),
+                      max_new_tokens=1)
+        assert eng.admit(req), "free engine refused admission"
+        # ISSUE-7 acceptance: exactly one token, finished at admit, the
+        # slot never entered decode
+        assert req.done and len(req.out_tokens) == 1, \
+            f"{engine}: budget-1 produced {len(req.out_tokens)} tokens"
+        assert eng.n_free == 2, f"{engine}: budget-1 held a slot"
+        rows.append({"engine": engine, "tokens": len(req.out_tokens),
+                     "done at admit": req.done,
+                     "slot freed": eng.n_free == 2})
+    report.table(rows)
+
+
+def _paper_projection(report):
+    """Section 5: the modeled 'millions of users' statement."""
+    report.section("Paper-scale projection (modeled, 2556-DPU grid)")
+    cache = PlanCache()
+    base = workloads.DecodeDims()          # 4k d_model / 32 layers
+    avg_new, prompt_len, chunk = 256, 2048, 512
+
+    def price_decode(nb):
+        key = batch_signature(nb, (base.seq - 1,), pos_bucket=256)
+        def build():
+            dims = dataclasses.replace(base, batch=nb)
+            dag = workloads.decode_dag(dims)
+            p = plan_placement(dag)
+            return make_schedule(dag, p, pipelined=True).pipelined_s
+        return cache.get_or_plan(key, build)
+
+    splits = workloads.prefill_chunk_splits(prompt_len, chunk)
+    pkey = batch_signature(1, splits=splits, phase="prefill")
+    def build_prefill():
+        dag = workloads.prefill_dag(base, prefill_len=prompt_len,
+                                    chunk=chunk, batch=1)
+        p = plan_placement(dag, objective="overlapped")
+        return make_schedule(dag, p, pipelined=True).pipelined_s
+    prefill_s = cache.get_or_plan(pkey, build_prefill)
+
+    fleet_ranks = 256
+    rows = []
+    best_daily = 0.0
+    for nb in (1, 8, 32, 64):
+        step_s = price_decode(nb)
+        tok_s = nb / step_s
+        # depth-first admission: a request costs its prefill plus
+        # avg_new decode-step shares of the batch
+        req_s = nb / (avg_new * step_s + prefill_s)
+        daily = req_s * 86_400
+        best_daily = max(best_daily, daily)
+        rows.append({"batch slots": nb,
+                     "decode step ms": round(step_s * 1e3, 1),
+                     "tokens/s": round(tok_s, 1),
+                     "req/s (256 new, 2k prompt)": round(req_s, 3),
+                     "req/day/rank": f"{daily:,.0f}",
+                     f"req/day x{fleet_ranks} ranks":
+                         f"{daily * fleet_ranks:,.0f}"})
+    report.table(rows)
+    # the "millions of users" statement, stated honestly: one
+    # host+2556-DPU rank serves thousands of long-form requests/day
+    # (the un-quantized host GEMVs dominate the modeled step — the KT2
+    # quantization item on the ROADMAP is what lifts this); a
+    # 256-rank fleet clears a million requests/day
+    assert best_daily * fleet_ranks > 1e6, \
+        "paper-scale fleet projection under 1M req/day"
+    report.note(f"modeled hybrid plans (planner ladder, seconds): one "
+                f"2556-DPU rank sustains ~{best_daily:,.0f} long-form "
+                f"requests/day at 64 slots; a {fleet_ranks}-rank fleet "
+                f"clears ~{best_daily * fleet_ranks / 1e6:.1f}M "
+                "requests/day — millions of daily users at ~1 request "
+                "each. Projection only (no UPMEM hardware here); the "
+                "same cost model the fidelity gate pins within 10% of "
+                "replayed traces at reduced scale. The modeled step is "
+                "host-GEMV-bound (KT2): the ROADMAP's int8 expert/KV "
+                "item is the lever that shrinks it")
+
+
+def _dispatch_trace(report, cfg, eng, n_requests, trace_out):
+    """Section 6: gateway-driven dispatch engine, fidelity-gated trace."""
+    from repro.serve import Gateway, ManualClock, poisson_requests
+    report.section("Dispatch-engine gateway, measured trace + "
+                   "fidelity gate")
+    tracer = dtrace.Trace("gateway-dispatch",
+                          meta={"engine": "dispatch", "slots": 2})
+    gw = Gateway(eng, queue_capacity=n_requests + 1, pos_bucket=16,
+                 clock=ManualClock(tick=1e-3))
+    gw.attach_tracer(tracer)
+    reqs = poisson_requests(n_requests, 100.0, seed=17,
+                            vocab=cfg.vocab_size, prompt_lens=(3, 8),
+                            max_new=(3, 6))
+    stats = gw.run(reqs)
+    rep = dtrace.fidelity(eng._decode.dag, eng._decode.plan,
+                          trace=tracer)
+    report.table([{"requests": stats.completed, "steps": stats.steps,
+                   "decode spans": len(tracer.by_kind("decode_step")),
+                   "prefill spans": len(tracer.by_kind("prefill_step")),
+                   "executor-cache hit rate":
+                       f"{eng._prefill_step.executor_cache.stats['hit_rate']:.1%}",
+                   "fidelity err %": round(rep.rel_err * 100.0, 2)}])
+    # the planner-fidelity gate on a GATEWAY-driven timeline: predicted
+    # pipelined_s within 10% of the replayed measured trace
+    assert rep.ok, rep.render()
+    if trace_out:
+        tracer.save(trace_out)
+        chrome = trace_out.replace(".json", "") + ".chrome.json"
+        tracer.save_chrome(chrome)
+        report.note(f"gateway trace -> {trace_out} (+ Chrome twin "
+                    f"{chrome})")
+    report.note(rep.render())
+
+
+def run(report, quick: bool = False, trace_out: str | None = None):
+    """Drive the gateway sweeps; `quick` keeps sections 2-4 and 6 at
+    reduced request counts (CI smoke), full mode adds the measured
+    steady-state section and the paper-scale projection."""
+    from repro.serve import ServeEngine
+    cfg, shd, params = _setup()
+    if not quick:
+        _steady_state(report, cfg, shd, params, n_requests=24)
+    _churn_sweep(report, cfg, shd, params,
+                 n_requests=10 if quick else 40)
+    _overload(report, cfg, shd, params, n_requests=8 if quick else 30)
+    # one dispatch engine shared by the budget gate and the traced run
+    dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,
+                          shd=shd, engine="dispatch",
+                          dispatch_kwargs={"prefill_chunk": 4})
+    _budget_gate(report, cfg, shd, params, dis_eng)
+    if not quick:
+        _paper_projection(report)
+    _dispatch_trace(report, cfg, dis_eng,
+                    n_requests=3 if quick else 6, trace_out=trace_out)

@@ -6,6 +6,9 @@
   scaling_bench     strong scaling vs #DPUs (full-paper §5.2)
   dispatch_bench    pure-CPU vs pure-PIM vs hybrid offload plans
                     (decode + chunked prefill, serial vs overlapped)
+  gateway_bench     serving gateway under seeded Poisson traffic:
+                    sustained req/s + tail latency, plan-cache hit
+                    rate, overload goodput, paper-scale projection
   roofline_bench    §Roofline 40-cell dry-run table (from runs/*.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [module ...] [--quick]
@@ -50,14 +53,15 @@ class Report:
 
 
 def main(argv=None) -> int:
-    from . import (dispatch_bench, microbench, prim_bench, roofline_bench,
-                   scaling_bench, suitability_bench)
+    from . import (dispatch_bench, gateway_bench, microbench, prim_bench,
+                   roofline_bench, scaling_bench, suitability_bench)
     modules = {
         "microbench": microbench,
         "prim_bench": prim_bench,
         "suitability_bench": suitability_bench,
         "scaling_bench": scaling_bench,
         "dispatch_bench": dispatch_bench,
+        "gateway_bench": gateway_bench,
         "roofline_bench": roofline_bench,
     }
     args = list(argv or sys.argv[1:])

@@ -32,6 +32,10 @@ turns the one-shot analyses of `repro.core` into an end-to-end pipeline:
                validated vs reference
     workloads  mixed PrIM pipelines + the LM decode chain/DAG + the
                chunked prefill DAG as dispatchable pipelines/graphs
+    plan_cache LRU cache of planner products keyed by batch signature
+               (live-slot count, bucketed KV length, chunk splits) —
+               `FaceCache`'s compile-sharing idiom lifted to plans, so
+               serving replans amortize as batch composition churns
     trace      observability over the whole spine: measured/modeled
                execution traces (JSON + Chrome trace_event), the
                what-if replayer re-pricing recorded timelines under the
@@ -56,6 +60,7 @@ from .placement import (DEVICES, Plan, compare_plans, cost_constants,
                         transfer_hops, transfer_time)
 from .schedule import LaunchGroup, Schedule, make_schedule
 from .executor import FaceCache, PlanExecutor, StageDef
+from .plan_cache import PlanCache, batch_signature
 from .runtime import Pipeline, Stage, bank_face, execute, reference
 from . import workloads
 from . import trace

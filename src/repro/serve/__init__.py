@@ -11,9 +11,20 @@ plan executor (`dispatch.executor.PlanExecutor`), which walks the
 schedule's launch groups in timeline order and pipelines chunked prefill
 across chunks (DESIGN.md §9-§11). Device names follow
 `dispatch.placement.DEVICES` (`"xeon"`, `"titan_v"`, `"upmem_2556"`,
-`"upmem_640"`); all modeled costs are seconds, all payloads bytes."""
+`"upmem_640"`); all modeled costs are seconds, all payloads bytes.
+
+Above the engine sits the serving gateway (`serve.gateway`,
+DESIGN.md §14): a bounded priority admission queue with reject/shed
+policies, a plan cache keyed by batch signature so planner solves
+amortize as slot composition churns, and SLO-aware interleaving of
+prefill admissions with decode steps — the layer that turns the slot
+loop into a production-shaped server under Poisson traffic
+(`benchmarks/gateway_bench.py`)."""
 
 from .dispatch_engine import (DispatchDecodeStep, DispatchPrefillStep,
                               dims_for_config, make_dispatch_decode_step)
 from .engine import (Request, ServeEngine, make_decode_step,
                      make_prefill_step, sample)
+from .gateway import (PRIORITIES, AdmissionQueue, Gateway, GatewayRequest,
+                      GatewayStats, ManualClock, PricedPlan,
+                      percentile, poisson_requests)

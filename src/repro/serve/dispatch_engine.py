@@ -59,7 +59,6 @@ the grid's banks (DESIGN.md §12).
 
 from __future__ import annotations
 
-import collections
 import math
 
 import jax
@@ -68,6 +67,7 @@ import jax.numpy as jnp
 from ..core.bank_parallel import BankGrid, make_bank_mesh
 from ..dispatch import workloads
 from ..dispatch.executor import FaceCache, PlanExecutor, StageDef
+from ..dispatch.plan_cache import PlanCache
 from ..dispatch.placement import Plan, plan as plan_placement
 from ..models import ModelConfig, Shardings
 from ..models import cache as cache_lib
@@ -480,13 +480,12 @@ class DispatchPrefillStep(_MoeStageMixin):
 
         self.faces = FaceCache(self._stage_defs(), self.grid)
         #: per chunk-split-signature executors (ragged prompts differ),
-        #: all sharing `faces` so stages keep one trace per kind; LRU-
-        #: capped — distinct prompt lengths are unbounded over an
-        #: engine's lifetime, and an evicted executor rebuilds cheaply
-        #: (structural DAG only, no re-tracing)
-        self._executors: "collections.OrderedDict[tuple[int, ...], " \
-                         "PlanExecutor]" = collections.OrderedDict()
-        self._executor_cap = 16
+        #: all sharing `faces` so stages keep one trace per kind; held in
+        #: a `dispatch.PlanCache` (LRU + hit/miss stats) — distinct
+        #: prompt lengths are unbounded over an engine's lifetime, and an
+        #: evicted executor rebuilds cheaply (structural DAG only, no
+        #: re-tracing)
+        self.executor_cache = PlanCache(maxsize=16)
         self.executor = self._executor_for(canonical_splits)
         self._scatter = jax.jit(self._scatter_fn)
         #: optional `dispatch.trace.Trace`: when set (ServeEngine
@@ -599,24 +598,20 @@ class DispatchPrefillStep(_MoeStageMixin):
                 f"/c{min(c, self.n_chunks_planned - 1)}")
 
     def _executor_for(self, splits: list[int]) -> PlanExecutor:
-        """The executor for one chunk-split signature: a structural
-        (uncosted) prefill DAG of the actual chunks supplies the node
-        names / edges / timeline order; the planned assignment routes it,
-        with chunks beyond the planned horizon clamped onto the last
-        planned chunk's placement."""
-        key = tuple(splits)
-        if key in self._executors:
-            self._executors.move_to_end(key)
-            return self._executors[key]
-        skeleton = workloads.prefill_dag(
-            self._dims, prefill_len=sum(splits), chunk=self.chunk,
-            batch=1, kv_home=self._kv_home, costed=False)
-        assignment = {name: self.assignment[self._clamped(name)]
-                      for name in skeleton.nodes}
-        while len(self._executors) >= self._executor_cap:
-            self._executors.popitem(last=False)
-        self._executors[key] = PlanExecutor(skeleton, assignment, self.faces)
-        return self._executors[key]
+        """The executor for one chunk-split signature, reused through
+        `executor_cache` (a `dispatch.PlanCache` keyed by the splits
+        tuple): a structural (uncosted) prefill DAG of the actual chunks
+        supplies the node names / edges / timeline order; the planned
+        assignment routes it, with chunks beyond the planned horizon
+        clamped onto the last planned chunk's placement."""
+        def build() -> PlanExecutor:
+            skeleton = workloads.prefill_dag(
+                self._dims, prefill_len=sum(splits), chunk=self.chunk,
+                batch=1, kv_home=self._kv_home, costed=False)
+            assignment = {name: self.assignment[self._clamped(name)]
+                          for name in skeleton.nodes}
+            return PlanExecutor(skeleton, assignment, self.faces)
+        return self.executor_cache.get_or_plan(tuple(splits), build)
 
     def devices_for(self, s_len: int) -> dict[str, str]:
         """Stage name -> device for a prompt of `s_len` tokens (the

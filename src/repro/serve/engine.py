@@ -210,13 +210,44 @@ class ServeEngine:
             if self.prefill_plan is not None:
                 self._prefill_step.tracer = tracer
 
+    @property
+    def n_free(self) -> int:
+        """Number of free (admittable) cache slots right now."""
+        return self.slot_live.count(False)
+
+    def prefill_splits(self, plen: int) -> list[int]:
+        """Chunk lengths a `plen`-token prompt prefills in: the dispatch
+        prefill step's chunk grid when that path is active, one fused
+        chunk otherwise. This is the chunk-splits component of the batch
+        signature `serve.gateway`'s plan cache keys prefill pricing by."""
+        if self.engine == "dispatch" and self.prefill_plan is not None:
+            return self._prefill_step.chunk_splits(plen)
+        return [int(plen)]
+
     def admit(self, req: Request) -> bool:
-        """Admit a request into a free slot (prefill now). False if full."""
+        """Admit a request into a free slot (prefill now). False if full.
+
+        Raises ValueError for prompts the slot cache cannot hold
+        (`len(prompt) >= max_len` would overflow the scatter into the
+        batched cache — the slot must fit the prompt plus at least one
+        generated token) and for non-positive token budgets; admission
+        control above the engine (`serve.gateway`) turns both into
+        reject/shed decisions. A request whose budget or EOS is already
+        satisfied by its FIRST sampled token finishes at admit: it is
+        marked done and the slot stays free — it never enters decode."""
         try:
             slot = self.slot_live.index(False)
         except ValueError:
             return False
         plen = int(req.prompt.shape[0])
+        if plen >= self.max_len:
+            raise ValueError(
+                f"prompt of {plen} tokens does not fit max_len="
+                f"{self.max_len} (slot cache holds prompt + generated "
+                "tokens); reject or shed it upstream")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
         t0 = self.tracer.now() if self.tracer is not None else 0.0
         logits, self.cache = self._prefill_one(
             self.params, self.cache, req.prompt, jnp.int32(slot))
@@ -226,6 +257,13 @@ class ServeEngine:
         self.key, k = jax.random.split(self.key)
         first = int(sample(logits, k, self.temperature))
         req.out_tokens.append(first)
+        # the first token can already exhaust the budget or hit EOS —
+        # finish here and leave the slot free instead of decoding (and
+        # billing) an extra token
+        if (len(req.out_tokens) >= req.max_new_tokens
+                or (self.eos_id is not None and first == self.eos_id)):
+            req.done = True
+            return True
         self.slot_live[slot] = True
         self.slot_req[slot] = req
         self.slot_pos = self.slot_pos.at[slot].set(plen)
@@ -241,16 +279,18 @@ class ServeEngine:
         t0 = self.tracer.now() if self.tracer is not None else 0.0
         self.last_tok, self.cache, self.slot_pos = self._decode(
             self.params, self.cache, self.last_tok, self.slot_pos, live, k)
-        toks = jax.device_get(self.last_tok[:, 0])
+        # ONE host sync per step: tokens and positions fetched together.
+        # (The finish loop's per-slot int(self.slot_pos[slot]) and the
+        # tracer's second device_get were each an extra device round-trip.)
+        toks, pos = jax.device_get((self.last_tok[:, 0], self.slot_pos))
         if self.tracer is not None:      # device_get synced: span = real
             self._step_no += 1           # step latency, one token per slot
             self.tracer.add(
                 "decode_step", f"step{self._step_no}", "engine", t0,
                 n_live=sum(self.slot_live),
                 slots=[s for s, lv in enumerate(self.slot_live) if lv],
-                positions=[int(p) for p, lv
-                           in zip(jax.device_get(self.slot_pos),
-                                  self.slot_live) if lv])
+                positions=[int(p) for p, lv in zip(pos, self.slot_live)
+                           if lv])
         for slot, req in enumerate(self.slot_req):
             if req is None or not self.slot_live[slot]:
                 continue
@@ -258,7 +298,7 @@ class ServeEngine:
             req.out_tokens.append(t)
             limit_hit = len(req.out_tokens) >= req.max_new_tokens
             eos_hit = self.eos_id is not None and t == self.eos_id
-            if limit_hit or eos_hit or int(self.slot_pos[slot]) >= self.max_len - 1:
+            if limit_hit or eos_hit or int(pos[slot]) >= self.max_len - 1:
                 req.done = True
                 self.slot_live[slot] = False
                 self.slot_req[slot] = None

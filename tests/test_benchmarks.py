@@ -42,3 +42,29 @@ def test_dispatch_bench_quick_smoke(capsys):
     out = capsys.readouterr().out
     assert "prefill" in out.lower() and "objective=overlapped" in out
     assert "MoE" in out and "exchange" in out.lower()
+
+
+@pytest.mark.slow
+def test_gateway_bench_quick_smoke(capsys, tmp_path):
+    """The CI tier-1 job's `benchmarks.run gateway_bench --quick --trace`
+    path: churn sweep (plan-cache hit rate), overload goodput, budget-1
+    gate on both engines, and the traced dispatch run feeding the
+    planner-fidelity gate."""
+    from benchmarks import gateway_bench
+    out_json = tmp_path / "gw_trace.json"
+    gateway_bench.run(Report(), quick=True, trace_out=str(out_json))
+    out = capsys.readouterr().out
+    assert "hit rate" in out and "goodput" in out
+    assert "budget" in out.lower() and "fidelity" in out.lower()
+    assert out_json.exists()
+
+
+@pytest.mark.slow
+def test_gateway_bench_smoke(capsys):
+    """Full mode adds the jit steady-state sweep (SLO attainment under
+    seeded Poisson) and the paper-scale fleet projection."""
+    from benchmarks import gateway_bench
+    gateway_bench.run(Report())
+    out = capsys.readouterr().out
+    assert "Steady-state" in out and "p99" in out
+    assert "req/day" in out and "fleet" in out.lower()

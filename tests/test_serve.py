@@ -565,3 +565,106 @@ def test_decode_step_shapes(setup):
     lg, cache = decode(params, cache, jnp.ones((b, 1), jnp.int32))
     assert lg.shape == (b, cfg.padded_vocab)
     assert int(cache["index"]) == 9
+
+
+# ------------------------------------------------------------------ #
+# ISSUE-7 serve-loop bugfix regressions
+# ------------------------------------------------------------------ #
+
+def test_budget_one_yields_exactly_one_token_fused(setup):
+    """Before the fix, admit() never checked max_new_tokens on the first
+    sampled token: a budget-1 request entered decode and generated a
+    second token. Now it finishes at admit and the slot stays free."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    req = Request(0, jnp.asarray([3, 1, 4], jnp.int32), max_new_tokens=1)
+    assert eng.admit(req)
+    assert req.done and len(req.out_tokens) == 1
+    assert eng.n_free == 2 and eng.step() == 0
+    # and through the serve loop, mixed with multi-token requests
+    reqs = [Request(1, jnp.asarray([2, 7], jnp.int32), 1),
+            Request(2, jnp.asarray([1, 8, 2], jnp.int32), 4)]
+    done = eng.serve(reqs)
+    assert sorted(len(r.out_tokens) for r in done) == [1, 4]
+
+
+def test_budget_one_yields_exactly_one_token_dispatch(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
+                      engine="dispatch",
+                      dispatch_kwargs={"prefill_chunk": 4})
+    req = Request(0, jnp.asarray([3, 1, 4, 1, 5], jnp.int32),
+                  max_new_tokens=1)
+    assert eng.admit(req)
+    assert req.done and len(req.out_tokens) == 1
+    assert eng.n_free == 2
+
+
+def test_eos_on_first_token_finishes_at_admit(setup):
+    """EOS can land on the FIRST sampled token; before the fix the done
+    check only ran inside step(), so the request decoded one token past
+    its EOS. Greedy sampling makes the first token reproducible: observe
+    it, then replay the same prompt with eos_id set to it."""
+    cfg, params = setup
+    prompt = jnp.asarray([5, 9, 2, 6], jnp.int32)
+    probe = Request(0, prompt, max_new_tokens=1)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=48, shd=SHD)
+    assert eng.admit(probe)
+    first = probe.out_tokens[0]
+
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=48, shd=SHD,
+                      eos_id=first)
+    req = Request(1, prompt, max_new_tokens=8)
+    assert eng.admit(req)
+    assert req.done and req.out_tokens == [first]
+    assert eng.n_free == 1
+
+
+def test_admit_validates_prompt_and_budget(setup):
+    """admit() used to silently accept prompts with len >= max_len,
+    overflowing the scatter into the batched cache."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=16, shd=SHD)
+    with pytest.raises(ValueError, match="does not fit max_len"):
+        eng.admit(Request(0, jnp.ones((16,), jnp.int32), 4))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.admit(Request(1, jnp.ones((4,), jnp.int32), 0))
+    assert eng.n_free == 1        # neither invalid request held a slot
+    # a prompt of max_len - 1 still fits (one generated token)
+    ok = Request(2, jnp.ones((15,), jnp.int32), 4)
+    assert eng.admit(ok) and not eng.slot_req[0] is None
+
+
+def test_step_syncs_device_once(setup, monkeypatch):
+    """step() used to do a per-slot int(slot_pos[slot]) sync in the
+    finish loop plus a second device_get in the tracer branch; both now
+    reuse ONE hoisted device_get per step — with or without a tracer."""
+    from repro.dispatch import trace as dtrace
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    eng.admit(Request(0, jnp.asarray([1, 2, 3], jnp.int32), 6))
+    eng.admit(Request(1, jnp.asarray([4, 5], jnp.int32), 6))
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: (calls.append(1), real(x))[1])
+    eng.step()
+    assert len(calls) == 1
+    calls.clear()
+    eng.attach_tracer(dtrace.Trace("sync-count"))
+    eng.step()
+    assert len(calls) == 1
+
+
+def test_engine_prefill_splits_hook(setup):
+    """The gateway keys prefill pricing by the engine's chunk grid: one
+    fused chunk on the jit path, the dispatch prefill step's splits on
+    the dispatch path."""
+    cfg, params = setup
+    jit_eng = ServeEngine(cfg, params, batch_slots=1, max_len=48, shd=SHD)
+    assert jit_eng.prefill_splits(11) == [11]
+    dis_eng = ServeEngine(cfg, params, batch_slots=1, max_len=48, shd=SHD,
+                          engine="dispatch",
+                          dispatch_kwargs={"prefill_chunk": 4})
+    assert dis_eng.prefill_splits(11) == [4, 4, 3]
+    assert dis_eng.prefill_splits(4) == [4]
