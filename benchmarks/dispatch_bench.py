@@ -58,7 +58,8 @@ from __future__ import annotations
 from repro import prim
 from repro.dispatch import trace as dtrace
 from repro.dispatch import workloads
-from repro.dispatch.placement import compare_plans, plan, pure_plan
+from repro.dispatch.placement import (compare_plans, node_time, plan,
+                                      pure_plan)
 from repro.dispatch.schedule import make_schedule
 
 
@@ -191,6 +192,49 @@ def _moe_sweep(report, dims):
     return dag, hybrid, cpu, pim
 
 
+def _moe_quant_gate(report, f32_hybrid):
+    """KT2-flip headline gate (ISSUE-8): plan the int8-quantized MoE
+    decode DAG (int8 expert weights with int32 accumulation, int8 KV) at
+    the same mixtral-8x7b dims and assert the flip — the dtype-aware
+    planner now puts EVERY expert FFN on the DPU grid (the 8x8-multiplier
+    band prices int8 muls at 2 cycles vs float's 32-cycle software
+    ladder) and the quantized hybrid strictly beats the f32 hybrid's
+    host-heavy MoE plan."""
+    dag = workloads.moe_decode_dag(workloads.MOE_PAPER_DIMS_INT8)
+    hybrid = plan(dag)
+    over = plan(dag, objective="overlapped")
+    experts = [n for n, node in dag.nodes.items()
+               if node.kind == "moe_expert"]
+    on_pim = sum(1 for n in experts
+                 if hybrid.assignment[n].startswith("upmem"))
+    report.table([
+        {"plan": "f32 hybrid (sweep above)",
+         "modeled ms": round(f32_hybrid.total_s * 1e3, 3),
+         "experts on PIM": sum(
+             1 for n in experts
+             if f32_hybrid.assignment[n].startswith("upmem"))},
+        {"plan": f"int8 hybrid [{hybrid.method}]",
+         "modeled ms": round(hybrid.total_s * 1e3, 3),
+         "experts on PIM": on_pim,
+         "replay err %": _replay_err(dag, hybrid)},
+    ])
+    # ISSUE-8 acceptance: the quantized experts land bank-parallel under
+    # BOTH objectives and the quantized hybrid strictly wins end to end
+    assert experts and on_pim == len(experts), \
+        f"only {on_pim}/{len(experts)} quantized experts on PIM"
+    assert all(over.assignment[n].startswith("upmem") for n in experts), \
+        "overlapped objective hosted a quantized expert"
+    assert hybrid.total_s < f32_hybrid.total_s, \
+        "quantized MoE hybrid did not beat the f32 hybrid (KT2 not flipped)"
+    report.note(
+        f"KT2 flipped: all {len(experts)} expert FFNs plan onto the DPU "
+        "grid once their GEMMs hit the native 8x8-multiplier band "
+        f"(int8 mul = 2 cycles); the quantized hybrid models "
+        f"{f32_hybrid.total_s / hybrid.total_s:.2f}x faster than the f32 "
+        "hybrid whose float experts were host-bound")
+    return hybrid
+
+
 def _three_way(report, graph, devices=("xeon", "upmem_2556")):
     plans = compare_plans(graph, devices=devices)
     rows = [{"plan": k, "modeled ms": round(p.total_s * 1e3, 3),
@@ -304,6 +348,37 @@ def run(report, quick: bool = False, trace_out: str | None = None):
         report.note("MoE routing planned as an exchange phase: all-PIM "
                     "pays 2 host-relayed all-to-alls per layer "
                     "(transfer-channel-only occupancy in the timeline)")
+        # quantized smoke (ISSUE-8): the int8 MoE DAG builds with the
+        # int8 mul band on its expert nodes and the DPU prices a
+        # quantized expert strictly below its f32 twin (the paper-scale
+        # PIM flip itself is sweep 7's gate — at reduced dims everything
+        # is host-cheap and the flip is not expected)
+        report.section("QUICK: quantized MoE decode DAG (int8 experts + "
+                       "int8 KV, reduced dims)")
+        dag8 = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS_INT8)
+        h8 = plan(dag8)
+        assert dag8.name.endswith("-int8"), dag8.name
+        experts = [n for n, node in dag8.nodes.items()
+                   if node.kind == "moe_expert"]
+        assert experts and all(
+            dag8.nodes[n].ops.get(("mul", "int8"), 0) > 0 for n in experts
+        ), "quantized expert nodes lost the int8 mul band"
+        pim8_ms = node_time(dag8.nodes["expert0"], "upmem_2556") * 1e3
+        pim32_ms = node_time(dag.nodes["expert0"], "upmem_2556") * 1e3
+        assert pim8_ms < pim32_ms, \
+            "DPU does not price the int8 expert below the f32 expert"
+        report.table([
+            {"plan": f"int8 hybrid [{h8.method}]",
+             "modeled ms": round(h8.total_s * 1e3, 3),
+             "expert0 on-DPU ms (int8)": round(pim8_ms, 3),
+             "expert0 on-DPU ms (f32)": round(pim32_ms, 3),
+             "replay err %": _replay_err(dag8, h8)},
+        ])
+        report.note("int8 expert GEMMs carry the ('mul','int8') band end "
+                    "to end — the dtype class the planner reprices at the "
+                    "DPU's native 8x8 multiplier (2 cycles vs float's "
+                    "32-cycle software ladder; sweep 7 gates the "
+                    "paper-scale flip)")
         if trace_out:
             report.section("QUICK: execution tracing (measured dispatch "
                            "serving trace, overhead, fidelity)")
@@ -399,7 +474,12 @@ def run(report, quick: bool = False, trace_out: str | None = None):
     # -- sweep 6: MoE decode DAG, routing as an exchange phase -----------
     report.section("MoE decode DAG (mixtral-8x7b dims: 8 experts top-2, "
                    "token/combine exchanges), hybrid vs steelmanned pures")
-    _moe_sweep(report, workloads.MOE_PAPER_DIMS)
+    _, f32_hybrid, _, _ = _moe_sweep(report, workloads.MOE_PAPER_DIMS)
+
+    # -- sweep 7: the KT2 flip — int8 experts/KV vs the f32 hybrid -------
+    report.section("Quantized MoE decode DAG (int8 experts + int8 KV), "
+                   "the KT2 flip vs the f32 hybrid")
+    _moe_quant_gate(report, f32_hybrid)
 
     # -- execute the plans for real (reduced scale) ----------------------
     report.section("Runtime validation (reduced scale, real execution)")

@@ -245,8 +245,63 @@ def _paper_projection(report):
                 "each. Projection only (no UPMEM hardware here); the "
                 "same cost model the fidelity gate pins within 10% of "
                 "replayed traces at reduced scale. The modeled step is "
-                "host-GEMV-bound (KT2): the ROADMAP's int8 expert/KV "
-                "item is the lever that shrinks it")
+                "host-GEMV-bound (KT2): the quantized MoE projection "
+                "below is the int8 expert/KV lever that shrinks it")
+
+    # the KT2 flip through the same PlanCache keying: the quantized MoE
+    # serving step (int8 expert GEMMs on the DPU 8x8-multiplier band,
+    # int8 KV) vs its f32 twin at mixtral-8x7b dims — the sustained-req/s
+    # delta the ISSUE-8 flip buys a serving rank
+    report.section("Quantized MoE projection (int8 experts + int8 KV "
+                   "vs f32, mixtral-8x7b dims)")
+    moe32 = workloads.MOE_PAPER_DIMS
+    moe8 = workloads.MOE_PAPER_DIMS_INT8
+
+    def price_moe_decode(dims, nb, tag):
+        key = batch_signature(nb, (dims.seq - 1,), pos_bucket=256,
+                              phase=f"moe-decode-{tag}")
+        def build():
+            dd = dataclasses.replace(dims, batch=nb)
+            dag = workloads.moe_decode_dag(dd)
+            p = plan_placement(dag)
+            return make_schedule(dag, p, pipelined=True).pipelined_s
+        return cache.get_or_plan(key, build)
+
+    def price_moe_prefill(dims, tag):
+        key = batch_signature(1, splits=splits, phase=f"moe-prefill-{tag}")
+        def build():
+            dag = workloads.prefill_dag(dims, prefill_len=prompt_len,
+                                        chunk=chunk, batch=1)
+            p = plan_placement(dag, objective="overlapped")
+            return make_schedule(dag, p, pipelined=True).pipelined_s
+        return cache.get_or_plan(key, build)
+
+    pf32 = price_moe_prefill(moe32, "f32")
+    pf8 = price_moe_prefill(moe8, "int8")
+    rows = []
+    for nb in (8, 32):
+        s32 = price_moe_decode(moe32, nb, "f32")
+        s8 = price_moe_decode(moe8, nb, "int8")
+        r32 = nb / (avg_new * s32 + pf32)
+        r8 = nb / (avg_new * s8 + pf8)
+        # ISSUE-8 acceptance: the quantized configuration sustains
+        # strictly more requests/s at every projected batch size
+        assert r8 > r32, \
+            f"int8 MoE projection no faster than f32 at batch {nb}"
+        rows.append({"batch slots": nb,
+                     "f32 step ms": round(s32 * 1e3, 1),
+                     "int8 step ms": round(s8 * 1e3, 1),
+                     "f32 req/s": round(r32, 3),
+                     "int8 req/s": round(r8, 3),
+                     "sustained req/s delta":
+                         f"+{(r8 / r32 - 1) * 100:.0f}%"})
+    report.table(rows)
+    report.note("the KT2 flip in serving terms: int8 expert FFNs plan "
+                "onto the DPU grid (2-cycle native 8x8 muls) and the "
+                "int8 KV cache quarters the bank-resident attention "
+                "stream, so each decode step shrinks and the same rank "
+                "sustains the req/s delta above at identical batch "
+                "shapes")
 
 
 def _dispatch_trace(report, cfg, eng, n_requests, trace_out):

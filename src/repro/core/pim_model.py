@@ -71,7 +71,15 @@ TITAN_V = Machine("titan_v", 13.8e12, 324e9, 0.0, 12 * 2**30)
 #: every FP op is a software routine on the int-only pipeline).
 #: "transc" is a software libm routine (exp/log/tanh/rsqrt...): range
 #: reduction + polynomial, i.e. a dozen-plus FP mul/adds.
+#: The "int8" band is the native one: the DPU ALU is 32-bit but the HW
+#: multiplier is 8x8 -> an int8 x int8 product is a single multiplier pass
+#: (arXiv:2105.03814 measures INT8 mul at the add-band MOPS, vs 32 slots
+#: for the int32 software ladder) — this band is what makes quantized
+#: expert GEMMs PIM-suitable (KT2 flipped, DESIGN.md §15).
 DPU_OP_COST = {
+    ("add", "int8"): 1, ("sub", "int8"): 1,
+    ("bitwise", "int8"): 1, ("compare", "int8"): 1,
+    ("mul", "int8"): 2, ("div", "int8"): 16,
     ("add", "int32"): 1, ("sub", "int32"): 1,
     ("bitwise", "int32"): 1, ("bitwise", "int64"): 2,
     ("compare", "int32"): 1, ("compare", "int64"): 2,

@@ -65,14 +65,99 @@ _COMPLEX_CLASSES = {"mul", "div", "transc"}
 
 
 def _dtype_class(dtype: str) -> str:
-    """HLO dtype -> DPU_OP_COST dtype class (Fig. 3's four columns)."""
+    """HLO dtype -> DPU_OP_COST dtype class (Fig. 3's bands, plus the
+    native int8 band of the extended characterization)."""
     if dtype in ("f64", "c128"):
         return "double"
     if dtype[0] in ("f", "b", "c"):      # f16/f32/bf16/f8*/c64
         return "float"
     if dtype in ("s64", "u64"):
         return "int64"
+    if dtype in ("s8", "u8", "pred"):    # native 8x8-multiplier band
+        return "int8"
     return "int32"
+
+
+_INT_WIDTH = {"int8": 0, "int32": 1, "int64": 2}
+
+
+_WIDEN_PLUMBING = {"convert", "copy", "bitcast", "transpose", "reshape",
+                   "broadcast"}
+
+
+def _storage_class(module: HloModule, comp: HloComputation, name: str,
+                   depth: int = 12, env=None):
+    """Dtype class of the VALUES flowing through an integer dot operand.
+
+    XLA's CPU pipeline rewrites `dot(s8, s8) -> s32` into widening
+    converts plus an s32 dot (and fuses a quantize chain's
+    `convert(f32->s8); convert(s8->s32)` into one kLoop fusion), so the
+    operand's own out dtype says int32 even when every factor fits in 8
+    bits — exactly the case the DPU's 8x8 HW multiplier serves in one
+    pass. Walk through widening/layout plumbing (convert / copy / bitcast
+    / transpose / reshape / broadcast), descend into fusion roots
+    (mapping fusion parameters back to the caller's operands via `env`),
+    and return the NARROWEST integer class the values pass through — a
+    narrowing convert truncates, so the narrower side always governs.
+    Returns None when the operand can't be resolved."""
+    op = comp.ops.get(name)
+    if op is None or not op.out_shapes:
+        return None
+    c = _dtype_class(op.out_shapes[0].dtype)
+    if c not in _INT_WIDTH or depth <= 0:
+        return c
+
+    def narrower(inner):
+        if inner in _INT_WIDTH and _INT_WIDTH[inner] < _INT_WIDTH[c]:
+            return inner
+        return c
+
+    if op.opcode in _WIDEN_PLUMBING and op.operands:
+        return narrower(_storage_class(module, comp, op.operands[0],
+                                       depth - 1, env))
+    if op.opcode == "parameter" and env is not None:
+        caller_comp, caller_operands, caller_env = env
+        try:
+            idx = int((op.raw_operands or "").strip() or op.operands[0])
+        except (ValueError, IndexError):
+            return c
+        if 0 <= idx < len(caller_operands):
+            return narrower(_storage_class(module, caller_comp,
+                                           caller_operands[idx], depth - 1,
+                                           caller_env))
+        return c
+    if op.opcode == "fusion":
+        callee = (op.attr("calls") or "").lstrip("%")
+        sub = module.computations.get(callee)
+        if sub is not None:
+            root = next((o for o in sub.ops.values() if o.is_root), None)
+            if root is not None:
+                return narrower(_storage_class(
+                    module, sub, root.name, depth - 1,
+                    (comp, op.operands, env)))
+    return c
+
+
+def _dot_mul_class(op: HloOp, comp: HloComputation, module: HloModule,
+                   out_class: str) -> str:
+    """Dtype class a dot's MULTIPLIES run at. Integer dots accumulate
+    wider than they multiply (int8 x int8 -> int32 on the DPU's 8x8 HW
+    multiplier), so the mul band is the WIDEST integer OPERAND class
+    (resolved through XLA's widening-convert plumbing, `_storage_class`)
+    while the adds stay at the accumulator (output) class. Float dots —
+    and any dot whose operand shapes can't be resolved — price at the
+    output class, the previous behaviour."""
+    if out_class not in _INT_WIDTH:
+        return out_class
+    classes = []
+    for name in op.operands[:2]:
+        c = _storage_class(module, comp, name)
+        if c is None or c not in _INT_WIDTH:
+            return out_class
+        classes.append(c)
+    if not classes:
+        return out_class
+    return max(classes, key=_INT_WIDTH.__getitem__)
 
 
 def _reduce_class(module: HloModule, op: HloOp) -> str:
@@ -121,7 +206,9 @@ def ops_from_hlo(text_or_module: str | HloModule,
                 pairs = _dot_flops(op, comp) / 2.0 if oc == "dot" else \
                     float(shapes[0].elements)
                 dt = _dtype_class(shapes[0].dtype)
-                acc[("mul", dt)] += pairs * mult
+                mul_dt = (_dot_mul_class(op, comp, module, dt)
+                          if oc == "dot" else dt)
+                acc[("mul", mul_dt)] += pairs * mult
                 acc[("add", dt)] += pairs * mult
             elif oc in ("reduce", "reduce-window"):
                 in_op = comp.ops.get(op.operands[0]) if op.operands else None
@@ -359,7 +446,7 @@ def _node_from_hlo_op(module: HloModule, comp: HloComputation, op: HloOp,
     if op.opcode == "dot":
         pairs = _dot_flops(op, comp) / 2.0
         dt = _dtype_class(op.out_shapes[0].dtype) if op.out_shapes else "float"
-        ops[("mul", dt)] += pairs
+        ops[("mul", _dot_mul_class(op, comp, module, dt))] += pairs
         ops[("add", dt)] += pairs
         flops = 2.0 * pairs
     elif op.opcode in ("reduce", "reduce-window"):

@@ -225,6 +225,10 @@ def cost_constants(dpu: DPUModel | None = None) -> dict[str, float]:
         "dpu.mram_bw": d.mram_bw,
         "dpu.launch_overhead_s": d.launch_overhead_s,
         "dpu.time_scale": 1.0,
+        # separate multiplicative scale for int8-dominant PIM spans: the
+        # int8 band prices the HW-multiplier path (pim_model.DPU_OP_COST),
+        # so its drift is fit from int-band spans only (DESIGN.md §15)
+        "dpu.int8_time_scale": 1.0,
         "channel.setup_s": TRANSFER_SETUP_S,
         "exchange.roundtrip_bw": 1.0 / (1.0 / d.dpu_to_host_bw
                                         + 1.0 / d.host_to_dpu_bw),

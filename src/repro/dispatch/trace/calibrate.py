@@ -16,7 +16,11 @@ every fit is a closed-form least squares:
   * PIM `compute` spans — one multiplicative time scale `alpha` against
     the full DPU model (`t ~ alpha * node_time`), reported both as
     `dpu.time_scale` and as the implied `dpu.mram_bw` (streaming ops are
-    MRAM-bound, so throughput scales as 1/alpha);
+    MRAM-bound, so throughput scales as 1/alpha). Spans whose node is
+    int8-dominant (quantized expert GEMMs — the KT2-flip band) fit a
+    SEPARATE scale `dpu.int8_time_scale`: the int8 band prices the DPU's
+    native 8x8 multiplier, whose drift is independent of the int32
+    software-ladder band's (DESIGN.md §15);
   * `stage_in` channel spans — the affine batched-transfer model
     `t ~ setup_s + bytes / host_to_dpu_bw` (two unknowns, fit jointly
     when the trace has >= 2 distinct payload sizes);
@@ -48,6 +52,18 @@ def _lsq_through_origin(pts) -> float:
     num = sum(t * v for t, v in pts)
     den = sum(v * v for _, v in pts)
     return num / den if den else 0.0
+
+
+def _int8_dominant(node) -> bool:
+    """True when a node's MULTIPLIES are majority int8-band — the
+    classifier routing a PIM compute span to the `dpu.int8_time_scale`
+    fit instead of the pooled `dpu.time_scale` one. Muls are the band's
+    discriminator: an int8 GEMM's int32 accumulator adds always match its
+    mul count (so no GEMM is ever majority-int8 over ALL slots), but the
+    muls are exactly what the 8x8-multiplier band reprices."""
+    muls = {dt: cnt for (op, dt), cnt in node.ops.items() if op == "mul"}
+    total = sum(muls.values())
+    return total > 0 and 2 * muls.get("int8", 0) > total
 
 
 def _lsq_affine(pts) -> tuple[float, float]:
@@ -186,11 +202,18 @@ def fit_trace(trace: Trace, graph: OpGraph, assignment: dict,
                                     anchors[f"{device}.peak_flops"],
                                     1.0 / x, len(flop), "FLOP/s"))
 
-    pim = [(e.dur_s, node_time(graph.nodes[e.name], assignment[e.name], d))
-           for e in trace.events
-           if e.kind == "compute" and e.name in graph.nodes
-           and str(assignment.get(e.name, "")).startswith("upmem")]
-    pim = [(t, mdl) for t, mdl in pim if t > 0 and mdl > 0]
+    spans = [(e.dur_s, node_time(graph.nodes[e.name], assignment[e.name], d),
+              graph.nodes[e.name])
+             for e in trace.events
+             if e.kind == "compute" and e.name in graph.nodes
+             and str(assignment.get(e.name, "")).startswith("upmem")]
+    spans = [(t, mdl, n) for t, mdl, n in spans if t > 0 and mdl > 0]
+    # int8-dominant spans (quantized expert GEMMs) fit their own scale:
+    # the 8x8-multiplier band and the int32 software-ladder band drift
+    # independently on real hardware, so one pooled alpha would let a
+    # miscalibrated int8 band hide inside float-dominated traces
+    pim = [(t, mdl) for t, mdl, n in spans if not _int8_dominant(n)]
+    pim8 = [(t, mdl) for t, mdl, n in spans if _int8_dominant(n)]
     if pim:
         alpha = _lsq_through_origin(pim)
         if alpha > 0:
@@ -199,6 +222,12 @@ def fit_trace(trace: Trace, graph: OpGraph, assignment: dict,
             fits.append(ConstantFit("dpu.mram_bw", anchors["dpu.mram_bw"],
                                     anchors["dpu.mram_bw"] / alpha,
                                     len(pim), "B/s"))
+    if pim8:
+        alpha8 = _lsq_through_origin(pim8)
+        if alpha8 > 0:
+            fits.append(ConstantFit("dpu.int8_time_scale",
+                                    anchors["dpu.int8_time_scale"], alpha8,
+                                    len(pim8), "x"))
 
     chan = [(e.dur_s, float(e.attrs.get("bytes") or 0.0))
             for e in trace.events if e.kind == "stage_in"

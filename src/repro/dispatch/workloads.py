@@ -47,7 +47,8 @@ from jax.sharding import PartitionSpec as P
 from ..core.bank_parallel import BankGrid
 from ..core.perf_model import WorkloadCounts
 from ..models.layers import (CAPACITY_FACTOR as MOE_CAPACITY_FACTOR,
-                             moe_combine, moe_dispatch, moe_expert_ffn)
+                             moe_combine, moe_dispatch, moe_expert_ffn,
+                             moe_expert_ffn_q8)
 from ..models.sharding import Shardings
 from ..prim import trns as prim_trns
 
@@ -165,6 +166,10 @@ class DecodeDims:
     n_experts: int = 0                 # 0 -> dense MLP layers
     top_k: int = 0
     moe_d_ff: int = 0                  # per-expert ffn width (0 -> d_ff)
+    # "" | "int8": int8 expert weights (symmetric per-channel, int32
+    # accumulation — models.layers.moe_expert_ffn_q8) and int8 KV storage;
+    # pair with kv_itemsize=1 so residency/migration charges shrink 4x
+    quant: str = ""
 
     @property
     def kv_heads(self) -> int:
@@ -192,6 +197,14 @@ MOE_PAPER_DIMS = DecodeDims(d_model=4096, n_heads=32, head_dim=128,
                             batch=2, n_kv_heads=8, n_experts=8, top_k=2,
                             moe_d_ff=14336)
 
+#: the KT2-flip configuration: same MoE shapes with int8 expert weights
+#: (int32 accumulation) and an int8 KV cache — what moves expert FFNs
+#: into the DPU-native integer cost band (DESIGN.md §15)
+MOE_PAPER_DIMS_INT8 = dataclasses.replace(MOE_PAPER_DIMS, kv_itemsize=1,
+                                          quant="int8")
+MOE_REDUCED_DIMS_INT8 = dataclasses.replace(MOE_REDUCED_DIMS, kv_itemsize=1,
+                                            quant="int8")
+
 _Q_SCALE = 64.0          # activation quantization step for int attention
 
 
@@ -216,8 +229,14 @@ def _attend(qkv, kq, vq, dims: DecodeDims):
     products for scores and AV (DPU-native mul/add), float softmax.
 
     The batch size comes from the input, not `dims`: under `_pim_attend`
-    this body runs on a per-bank shard of `dims.batch / n_banks` rows."""
+    this body runs on a per-bank shard of `dims.batch / n_banks` rows.
+
+    The cache may be stored int8 (`DecodeDims.quant == "int8"`, 4x
+    smaller residency): compute upcasts to the int32 accumulator either
+    way — the convert is free at node granularity, only storage
+    shrinks."""
     h, dh = dims.n_heads, dims.head_dim
+    kq, vq = kq.astype(jnp.int32), vq.astype(jnp.int32)
     b = qkv.shape[0]
     q = qkv.reshape(b, 3, h, dh)[:, 0]
     qq = jnp.round(q * _Q_SCALE).astype(jnp.int32)
@@ -362,6 +381,21 @@ def _moe_expert(buf, wu, wg, wd):
                           _NO_SHARDING)
 
 
+def _moe_expert_q8(buf, wuq, su, wgq, sg, wdq, sd):
+    """Costing proxy for the QUANTIZED per-expert FFN: PRE-quantized int8
+    weights as inputs (4x smaller weight bytes), int8 x int8 dots
+    accumulating in int32, f32 dequant — the compiled HLO the cost model
+    prices lands in the DPU's native integer band instead of the float
+    software routines, which is the whole KT2 flip. Runs
+    `models.layers.moe_expert_ffn_q8` itself (the slice the dispatch
+    serving stages execute), so cost and runtime cannot drift. Weights
+    arrive quantized because in-body quantization would be priced at the
+    float band and charged every step (DESIGN.md §15)."""
+    cfg = types.SimpleNamespace(gated_mlp=True, mlp_act="silu")
+    return moe_expert_ffn_q8(buf, wuq, su, wdq, sd, cfg, _NO_SHARDING,
+                             wgq, sg)
+
+
 def _moe_combine(x, out_buf, topi, pos, w, *, seq: int):
     """Costing proxy for the combine: gather each token's expert outputs
     back from the (B, E, C, D) buffer (the combine exchange's payload,
@@ -405,6 +439,8 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
     """
     d = dims
     f32, i32 = jnp.float32, jnp.int32
+    q8 = d.quant == "int8"
+    kv_dt = jnp.int8 if q8 else i32
     S = jax.ShapeDtypeStruct
     dm, hdh = d.d_model, d.n_heads * d.head_dim
     act_bytes = float(d.batch * dm * 4)
@@ -419,8 +455,8 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
     qkv_out = S((d.batch, 3 * hdh), f32)
     attn_out = S((d.batch, hdh), f32)
     wqkv = S((dm, 3 * hdh), f32)
-    kq = S((d.seq, d.n_heads, d.head_dim), i32)
-    vq = S((d.seq, d.n_heads, d.head_dim), i32)
+    kq = S((d.seq, d.n_heads, d.head_dim), kv_dt)
+    vq = S((d.seq, d.n_heads, d.head_dim), kv_dt)
     wo = S((hdh, dm), f32)
     wup, wdown = S((dm, d.d_ff), f32), S((d.d_ff, dm), f32)
     whead = S((dm, d.vocab), f32)
@@ -464,11 +500,21 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
         router_fn = functools.partial(_moe_router, seq=1, top_k=k)
         combine_fn = functools.partial(_moe_combine, seq=1)
         xbytes = moe_exchange_bytes(d.batch, dm, k)
+        if q8:      # pre-quantized int8 weights + per-channel f32 scales
+            wu_e, wg_e = S((e, dm, fe), jnp.int8), S((e, dm, fe), jnp.int8)
+            wd_e = S((e, fe, dm), jnp.int8)
+            su_e, sg_e = S((e, 1, fe), f32), S((e, 1, fe), f32)
+            sd_e = S((e, 1, dm), f32)
+            expert_proto = node_from_fn(
+                "expert", _moe_expert_q8, buf, wu_e, su_e, wg_e, sg_e,
+                wd_e, sd_e, kind="moe_expert")
+        else:
+            expert_proto = node_from_fn("expert", _moe_expert, buf, wu_e,
+                                        wg_e, wd_e, kind="moe_expert")
         protos.update({
             "router": node_from_fn("router", router_fn, x, wr,
                                    kind="moe_router"),
-            "expert": node_from_fn("expert", _moe_expert, buf, wu_e, wg_e,
-                                   wd_e, kind="moe_expert"),
+            "expert": expert_proto,
             "combine": node_from_fn("combine", combine_fn, x, buf, topi,
                                     pos_, gate_w, kind="moe_combine"),
         })
@@ -477,7 +523,8 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
             "mlp", f_mlp, x, wup, wdown, kind="mlp",
             exchange_bytes=float(d.batch * d.d_ff * 4) + act_bytes)
 
-    g = OpGraph("lm-moe-decode-dag" if moe else "lm-decode-dag",
+    base_name = "lm-moe-decode-dag" if moe else "lm-decode-dag"
+    g = OpGraph(base_name + ("-int8" if q8 else ""),
                 input_bytes=float(d.batch * 4))
     g.add(node_from_fn("embed", f_embed, tokens, table, kind="embed"))
     res = "embed"                      # the residual stream's producer
@@ -530,8 +577,10 @@ def _attend_prefill(qkv, kq, vq, dims: DecodeDims, t: int, q0: int):
     positions q0..q0+t-1 attend causally over the `prefix` keys written so
     far (prior chunks + this one), with the same quantized-int dot /
     float-softmax mix as the decode `_attend` — the op profile the DPU
-    cost model prices."""
+    cost model prices. int8-stored caches (`dims.quant == "int8"`) upcast
+    to the int32 accumulator on entry, same as the decode `_attend`."""
     h, dh = dims.n_heads, dims.head_dim
+    kq, vq = kq.astype(jnp.int32), vq.astype(jnp.int32)
     b = qkv.shape[0] // t
     q = qkv.reshape(b, t, 3, h, dh)[:, :, 0]
     qq = jnp.round(q * _Q_SCALE).astype(jnp.int32)
@@ -661,6 +710,8 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
     splits = prefill_chunk_splits(S_len, c_len)
 
     f32, i32 = jnp.float32, jnp.int32
+    q8 = d.quant == "int8"
+    kv_dt = jnp.int8 if q8 else i32
     S = jax.ShapeDtypeStruct
     dm, hdh = d.d_model, d.n_heads * d.head_dim
     kv_row_bytes = 2.0 * batch * d.kv_heads * d.head_dim * d.kv_itemsize
@@ -700,7 +751,8 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
         return dataclasses.replace(src, ops=dict(src.ops),
                                    meta=dict(src.meta))
 
-    g = OpGraph("lm-moe-prefill-dag" if d.n_experts else "lm-prefill-dag",
+    base_name = "lm-moe-prefill-dag" if d.n_experts else "lm-prefill-dag"
+    g = OpGraph(base_name + ("-int8" if q8 else ""),
                 input_bytes=float(batch * S_len * 4))
     res: list[str | None] = [None] * len(splits)  # chunk residual producers
     for c, t in enumerate(splits):
@@ -718,8 +770,8 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
             x = S((rows, dm), f32)
             qkv_out = S((rows, 3 * hdh), f32)
             attn_out = S((rows, hdh), f32)
-            kq = S((prefix, d.n_heads, d.head_dim), i32)
-            vq = S((prefix, d.n_heads, d.head_dim), i32)
+            kq = S((prefix, d.n_heads, d.head_dim), kv_dt)
+            vq = S((prefix, d.n_heads, d.head_dim), kv_dt)
             act_bytes = float(rows * dm * 4)
 
             node = proto("qkv", t, lambda: node_from_fn(
@@ -768,9 +820,19 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
                     "router", r_fn, x, wr, kind="moe_router"))
                 g.add(dataclasses.replace(node, name=f"router{i}/c{c}"),
                       f"o{i}/c{c}")
-                node = proto("expert", t, lambda: node_from_fn(
-                    "expert", _moe_expert, buf, wu_e, wg_e, wd_e,
-                    kind="moe_expert"))
+                if q8:
+                    wu_q = S((e, dm, fe), jnp.int8)
+                    wg_q = S((e, dm, fe), jnp.int8)
+                    wd_q = S((e, fe, dm), jnp.int8)
+                    su_e, sg_e = S((e, 1, fe), f32), S((e, 1, fe), f32)
+                    sd_e = S((e, 1, dm), f32)
+                    node = proto("expert", t, lambda: node_from_fn(
+                        "expert", _moe_expert_q8, buf, wu_q, su_e, wg_q,
+                        sg_e, wd_q, sd_e, kind="moe_expert"))
+                else:
+                    node = proto("expert", t, lambda: node_from_fn(
+                        "expert", _moe_expert, buf, wu_e, wg_e, wd_e,
+                        kind="moe_expert"))
                 g.add(dataclasses.replace(node, name=f"expert{i}/c{c}"),
                       f"router{i}/c{c}")
                 node = proto("combine", t, lambda: node_from_fn(
@@ -870,6 +932,19 @@ def shipped_graphs() -> dict:
         "lm-moe-prefill-dag-reduced": (
             lambda: prefill_dag(MOE_REDUCED_DIMS, prefill_len=8, chunk=4),
             _TWO_DEV),
+        # ISSUE-8: the KT2-flip configurations — int8 expert weights
+        # (int32 accumulation) + int8 KV storage; the paper-scale decode
+        # golden pins the quantized experts ON PIM
+        "lm-moe-decode-dag-int8": (
+            lambda: moe_decode_dag(MOE_PAPER_DIMS_INT8), _TWO_DEV),
+        "lm-moe-decode-dag-int8-reduced": (
+            lambda: moe_decode_dag(MOE_REDUCED_DIMS_INT8), _TWO_DEV),
+        "lm-moe-prefill-dag-int8": (
+            lambda: prefill_dag(MOE_PAPER_DIMS_INT8, **PREFILL_PAPER),
+            _TWO_DEV),
+        "lm-moe-prefill-dag-int8-reduced": (
+            lambda: prefill_dag(MOE_REDUCED_DIMS_INT8, prefill_len=8,
+                                chunk=4), _TWO_DEV),
     }
     for counts in prim.all_ref_counts():
         builders[f"prim/{counts.name}"] = (

@@ -76,6 +76,10 @@ class ModelConfig:
 
     # numerics / distribution
     dtype: str = "bfloat16"
+    # "" (full precision) | "int8": symmetric per-channel int8 expert
+    # weights + int8 KV storage — the KT2-flip configuration
+    # (models.layers.moe_expert_ffn_q8, DESIGN.md §15)
+    quant: str = ""
     norm_eps: float = 1e-5
     # pad embedding/unembedding vocab dim to a multiple (Megatron-style) so
     # vocab-parallel sharding divides; pad logits are masked in forward.

@@ -338,11 +338,74 @@ def moe_dispatch(x, router, cfg: ModelConfig):
     return buf, topi, pos, w, gates
 
 
+def quantize_q8(w, axis: int = 1):
+    """Symmetric per-channel int8 weight quantization: one f32 scale per
+    output channel, reduced over the contraction `axis` (kept as a size-1
+    dim so `q * scale` broadcasts back to `w`'s shape). Deterministic
+    elementwise + max-reduce ops, so quantizing inside the fused jit and
+    once-ahead for the dispatch stages yields bit-identical `(q, scale)`
+    — the property the exact-integer identity gate rests on
+    (DESIGN.md §15)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    # reciprocal-multiply, NOT `amax / 127.0`: XLA rewrites division by a
+    # constant into a reciprocal multiply under jit but not eagerly, and
+    # the identity gate needs both compilations to emit the same scale
+    scale = jnp.where(amax > 0, amax * (1.0 / 127.0), 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _quantize_rows(x):
+    """Per-row (per-token) symmetric int8 activation quantization over the
+    trailing feature axis; returns `(q, scale)` with scale keepdims."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax * (1.0 / 127.0), 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def moe_expert_ffn_q8(buf, wuq, su, wdq, sd, cfg: ModelConfig,
+                      shd: Shardings, wgq=None, sg=None):
+    """`moe_expert_ffn` on PRE-quantized int8 expert weights: int8 x int8
+    einsums accumulating in int32 (`preferred_element_type`), dequantized
+    to f32 by the product of the row activation scale and the per-channel
+    weight scale, with the gate nonlinearity applied in f32 and the rows
+    re-quantized before the down projection. Taking the quantized weights
+    as ARGUMENTS (not quantizing in-body) is load-bearing twice over: the
+    dispatch stage's compiled HLO prices int8 params, int8-operand dots,
+    and 4x-smaller weight bytes (what flips the planner, KT2), and the
+    fused path's in-jit `quantize_q8` of the same f32 weights produces
+    bit-identical integers — so dispatch-vs-fused identity is exact on
+    the int32 accumulators, not approximate (DESIGN.md §15)."""
+    act = _act_fn(cfg)
+    xq, sx = _quantize_rows(buf.astype(jnp.float32))
+    up = jnp.einsum("becd,edf->becf", xq, wuq,
+                    preferred_element_type=jnp.int32)
+    up = up.astype(jnp.float32) * sx * su[None, :, 0, None, :]
+    up = shd.act(up, "batch", None, None, "tp")
+    if cfg.gated_mlp:
+        gate = jnp.einsum("becd,edf->becf", xq, wgq,
+                          preferred_element_type=jnp.int32)
+        gate = act(gate.astype(jnp.float32) * sx * sg[None, :, 0, None, :])
+        gate = shd.act(gate, "batch", None, None, "tp")
+        up = gate * up
+    else:
+        up = act(up)
+    uq, sup = _quantize_rows(up)
+    out_buf = jnp.einsum("becf,efd->becd", uq, wdq,
+                         preferred_element_type=jnp.int32)
+    out_buf = out_buf.astype(jnp.float32) * sup * sd[None, :, 0, None, :]
+    return shd.act(out_buf.astype(buf.dtype), "batch", None, None, None)
+
+
 def moe_expert_ffn(buf, p, cfg: ModelConfig, shd: Shardings):
     """The per-expert (gated) FFN over the (B, E, C, D) dispatch buffer —
     embarrassingly parallel over the expert axis, which is exactly what
     an expert-parallel layout shards. Shared by `moe_forward` and the
-    dispatch serving stages.
+    dispatch serving stages. With `cfg.quant == "int8"` the weights are
+    quantized in-jit (`quantize_q8`) and the arithmetic runs through
+    `moe_expert_ffn_q8` — identical integers to the dispatch stages'
+    quantize-once-ahead path.
 
     Sharding note: constrain the expert einsum OUTPUTS to tp-sharded
     tiles — left to itself GSPMD all-reduced full-F f32 partials
@@ -350,6 +413,13 @@ def moe_expert_ffn(buf, p, cfg: ModelConfig, shd: Shardings):
     reduces tp-sharded bf16 tiles instead (§Perf, mixtral collective
     iteration — the explicit weight-gather variant was REFUTED: it
     replicated the contraction)."""
+    if getattr(cfg, "quant", "") == "int8":
+        wuq, su = quantize_q8(p["wu"])
+        wdq, sd = quantize_q8(p["wd"])
+        wgq = sg = None
+        if cfg.gated_mlp:
+            wgq, sg = quantize_q8(p["wg"])
+        return moe_expert_ffn_q8(buf, wuq, su, wdq, sd, cfg, shd, wgq, sg)
     act = _act_fn(cfg)
     up = jnp.einsum("becd,edf->becf", buf, p["wu"].astype(buf.dtype))
     up = shd.act(up, "batch", None, None, "tp")

@@ -79,14 +79,18 @@ def dims_for_config(cfg: ModelConfig, batch_slots: int,
     """Map a serving config onto the decode DAG's planning dims. The KV
     cache is sized as the engine actually allocates it — GQA head count
     and the config dtype's itemsize — so the migration charge matches the
-    bytes a real migration would move."""
+    bytes a real migration would move. `cfg.quant == "int8"` maps onto
+    the KT2-flip planning configuration: 1-byte KV rows and int8-tagged
+    expert GEMMs (`DecodeDims.quant`, DESIGN.md §15)."""
+    q8 = getattr(cfg, "quant", "") == "int8"
     return workloads.DecodeDims(
         d_model=cfg.d_model, n_heads=cfg.n_heads, head_dim=cfg.hd,
         d_ff=cfg.d_ff, seq=cache_lib.cache_width(cfg, max_len),
         vocab=cfg.padded_vocab, n_layers=cfg.n_layers, batch=batch_slots,
         n_kv_heads=cfg.n_kv_heads,
-        kv_itemsize=jnp.dtype(cfg.dtype).itemsize,
-        n_experts=cfg.n_experts, top_k=cfg.top_k, moe_d_ff=cfg.moe_d_ff)
+        kv_itemsize=1 if q8 else jnp.dtype(cfg.dtype).itemsize,
+        n_experts=cfg.n_experts, top_k=cfg.top_k, moe_d_ff=cfg.moe_d_ff,
+        quant="int8" if q8 else "")
 
 
 def _check_dispatchable(cfg: ModelConfig, shd: Shardings) -> None:
@@ -134,6 +138,35 @@ class _MoeStageMixin:
         return L.moe_expert_ffn(buf, {"wu": wu, "wd": wd}, self.cfg,
                                 self.shd)
 
+    def _expert_fn_q8(self, buf, wuq, su, wgq, sg, wdq, sd):
+        return L.moe_expert_ffn_q8(buf, wuq, su, wdq, sd, self.cfg,
+                                   self.shd, wgq, sg)
+
+    def _expert_fn_q8_ungated(self, buf, wuq, su, wdq, sd):
+        return L.moe_expert_ffn_q8(buf, wuq, su, wdq, sd, self.cfg,
+                                   self.shd)
+
+    def _q8_stacked(self, mp):
+        """Per-layer int8 expert weights for `cfg.quant == "int8"`:
+        quantize the scan-STACKED `(L, E, D, F)` weights once (axis 2 is
+        each layer's contraction axis — the per-channel amax never crosses
+        layers, so the result is bit-identical to per-layer
+        `quantize_q8`), slice per layer, and cache keyed on the stacked
+        array's identity — serving params are fixed after init, so the
+        quantization runs once per engine, not once per step."""
+        key = id(mp["wu"])
+        cached = getattr(self, "_q8_cache", None)
+        if cached is None or cached[0] != key:
+            names = (("wu", "wg", "wd") if self.cfg.gated_mlp
+                     else ("wu", "wd"))
+            qfn = jax.jit(lambda ws: {n: L.quantize_q8(w, axis=2)
+                                      for n, w in ws.items()})
+            stacked = qfn({n: mp[n] for n in names})
+            per_layer = [jax.tree.map(lambda a, i=i: a[i], stacked)
+                         for i in range(self.cfg.n_blocks)]
+            self._q8_cache = cached = (key, per_layer)
+        return cached[1]
+
     def _combine_fn(self, x, out_buf, topi, pos, w):
         y = L.moe_combine(out_buf, topi, pos, w, x.dtype)
         y = self.shd.act(y, "batch", "seq", None)
@@ -145,9 +178,18 @@ class _MoeStageMixin:
         token-side tensors (0 for decode's slot sharding; None for
         prefill — a chunk's capacity cumsum spans the whole chunk, so
         router/combine replicate). The expert face always shards the
-        expert axis (buf axis 1, weight axis 0) over banks."""
+        expert axis (buf axis 1, weight axis 0) over banks; the int8
+        variant's f32 scales carry the expert axis first, so they shard
+        axis 0 alongside their weights."""
         ta = token_axis
-        if self.cfg.gated_mlp:
+        if getattr(self.cfg, "quant", "") == "int8":
+            if self.cfg.gated_mlp:
+                expert = StageDef("expert", self._expert_fn_q8,
+                                  (1, 0, 0, 0, 0, 0, 0), (1,))
+            else:
+                expert = StageDef("expert", self._expert_fn_q8_ungated,
+                                  (1, 0, 0, 0, 0), (1,))
+        elif self.cfg.gated_mlp:
             expert = StageDef("expert", self._expert_fn, (1, 0, 0, 0), (1,))
         else:
             expert = StageDef("expert", self._expert_fn_ungated,
@@ -168,6 +210,14 @@ class _MoeStageMixin:
             return env[f"o{i}{chunk}"], lp[i]["ln2"], mp["router"]
         if kind == "expert":
             buf = env[f"router{i}{chunk}"][0]
+            if getattr(self.cfg, "quant", "") == "int8":
+                q = self._q8_layers[i]
+                wuq, su = q["wu"]
+                wdq, sd = q["wd"]
+                if self.cfg.gated_mlp:
+                    wgq, sg = q["wg"]
+                    return buf, wuq, su, wgq, sg, wdq, sd
+                return buf, wuq, su, wdq, sd
             return ((buf, mp["wu"], mp["wg"], mp["wd"])
                     if self.cfg.gated_mlp else (buf, mp["wu"], mp["wd"]))
         if kind == "combine":
@@ -318,6 +368,8 @@ class DispatchDecodeStep(_MoeStageMixin):
         kv_stack = cache["layers"][0]
         lp = [jax.tree.map(lambda l, i=i: l[i], stacked)
               for i in range(cfg.n_blocks)]
+        if self._moe and getattr(cfg, "quant", "") == "int8":
+            self._q8_layers = self._q8_stacked(stacked["mlp"])
         wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
         res_kind = "combine" if self._moe else "mlp"
 
@@ -640,6 +692,8 @@ class DispatchPrefillStep(_MoeStageMixin):
         stacked = params["layers"][0]
         lp = [jax.tree.map(lambda l, i=i: l[i], stacked)
               for i in range(cfg.n_blocks)]
+        if self._moe and getattr(cfg, "quant", "") == "int8":
+            self._q8_layers = self._q8_stacked(stacked["mlp"])
         wv = params["embed"] if cfg.tie_embeddings else params["unembed"]
         offs = [0]
         for t in splits:

@@ -88,7 +88,9 @@ def _cases():
     for name in ("lm-decode-dag", "lm-prefill-dag",
                  "lm-prefill-dag-reduced", "lm-moe-decode-dag",
                  "lm-moe-decode-dag-reduced", "lm-moe-prefill-dag",
-                 "lm-moe-prefill-dag-reduced"):
+                 "lm-moe-prefill-dag-reduced", "lm-moe-decode-dag-int8",
+                 "lm-moe-decode-dag-int8-reduced", "lm-moe-prefill-dag-int8",
+                 "lm-moe-prefill-dag-int8-reduced"):
         cases[f"{name}@overlapped"] = (name, "overlapped")
     return cases
 

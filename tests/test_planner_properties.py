@@ -48,10 +48,22 @@ GREEDY_BOUND = 25.0
 _REL = 1e-9
 
 
-def _rand_node(rng: random.Random, name: str) -> OpNode:
-    ops = {("add", "int32"): rng.uniform(0, 1e9)}
-    if rng.random() < 0.5:
-        ops[("mul", "float")] = rng.uniform(0, 1e8)
+#: the DPU_OP_COST bands the dtype-tagged generator samples from — the
+#: int8 band (ISSUE-8) must flow through every rung like the others
+_DTYPE_BANDS = ("int8", "int32", "int64", "float", "double")
+
+
+def _rand_node(rng: random.Random, name: str, *,
+               dtype_tagged: bool = False) -> OpNode:
+    if dtype_tagged:
+        ops = {}
+        for _ in range(rng.randint(1, 3)):
+            op = rng.choice(("add", "mul", "div", "compare"))
+            ops[(op, rng.choice(_DTYPE_BANDS))] = rng.uniform(0, 1e9)
+    else:
+        ops = {("add", "int32"): rng.uniform(0, 1e9)}
+        if rng.random() < 0.5:
+            ops[("mul", "float")] = rng.uniform(0, 1e8)
     node = OpNode(name, "x", flops=rng.uniform(1e6, 1e10),
                   hbm_bytes=rng.uniform(1e6, 1e9),
                   out_bytes=rng.uniform(0, 1e8), ops=ops,
@@ -65,21 +77,24 @@ def _rand_node(rng: random.Random, name: str) -> OpNode:
     return node
 
 
-def make_chain(rng: random.Random, max_nodes: int = 6) -> OpGraph:
+def make_chain(rng: random.Random, max_nodes: int = 6, *,
+               dtype_tagged: bool = False) -> OpGraph:
     g = OpGraph("chain", input_bytes=rng.uniform(0, 1e8))
     prev = None
     for i in range(rng.randint(1, max_nodes)):
-        g.add(_rand_node(rng, f"n{i}"), *([prev] if prev else []))
+        g.add(_rand_node(rng, f"n{i}", dtype_tagged=dtype_tagged),
+              *([prev] if prev else []))
         prev = f"n{i}"
     return g
 
 
-def make_dag(rng: random.Random, max_nodes: int = 8) -> OpGraph:
+def make_dag(rng: random.Random, max_nodes: int = 8, *,
+             dtype_tagged: bool = False) -> OpGraph:
     g = OpGraph("dag", input_bytes=rng.uniform(0, 1e8))
     names: list[str] = []
     for i in range(rng.randint(2, max_nodes)):
         preds = [p for p in names if rng.random() < 0.4]
-        g.add(_rand_node(rng, f"n{i}"), *preds)
+        g.add(_rand_node(rng, f"n{i}", dtype_tagged=dtype_tagged), *preds)
         names.append(f"n{i}")
     return g
 
@@ -238,6 +253,72 @@ def test_exchange_dag_overlapped_never_worse_than_serial_seed(seed):
     assert sched.pipelined_s <= sched.overlapped_s + 1e-15
 
 
+@pytest.mark.parametrize("seed", range(10))
+def test_int8_node_cost_never_exceeds_f32_on_pim(seed):
+    """ISSUE-8: the int8 band is never pricier than the float band for
+    the same op mix on any PIM device — the monotonicity the KT2 flip
+    rests on (int8 muls ride the 8x8 HW multiplier; float muls the
+    32-slot software routine)."""
+    from repro.dispatch.placement import node_time
+    rng = random.Random(10_000 + seed)
+    counts = {op: rng.uniform(1e3, 1e9)
+              for op in ("add", "mul", "div", "compare")}
+    n8 = OpNode("n8", "x", flops=1e9, hbm_bytes=1e6, out_bytes=0,
+                ops={(op, "int8"): c for op, c in counts.items()})
+    nf = OpNode("nf", "x", flops=1e9, hbm_bytes=1e6, out_bytes=0,
+                ops={(op, "float"): c for op, c in counts.items()})
+    for dev in ("upmem_2556", "upmem_640"):
+        assert node_time(n8, dev) <= node_time(nf, dev) * (1 + _REL), dev
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_dtype_tagged_chain_dp_equals_brute_force(seed):
+    """ISSUE-8: chains whose nodes carry random dtype bands (including
+    int8) stay exact under the chain DP — dtype-aware costing is plain
+    node cost, no special-cased rung."""
+    _check_chain(make_chain(random.Random(11_000 + seed),
+                            dtype_tagged=True))
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_dtype_tagged_dag_exact_equals_brute_force(seed):
+    """ISSUE-8: randomly dtype-tagged DAGs through the frontier-DP rung —
+    equal to brute force, never worse than greedy."""
+    _check_dag(make_dag(random.Random(12_000 + seed), dtype_tagged=True))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dtype_tagged_bnb_exact_when_budgeted(seed):
+    """ISSUE-8: the branch-and-bound rung on dtype-tagged DAGs (ample
+    budget == brute force; starved stays greedy-or-better)."""
+    _check_bnb(make_dag(random.Random(13_000 + seed), max_nodes=6,
+                        dtype_tagged=True))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_dtype_tagged_chain_overlapped_dp_equals_brute_force(seed):
+    """ISSUE-8: the exact overlapped chain DP on dtype-tagged chains."""
+    _check_chain_overlapped(make_chain(random.Random(14_000 + seed),
+                                       max_nodes=5, dtype_tagged=True))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_dtype_tagged_dag_pipelined_never_worse_than_overlapped(seed):
+    """ISSUE-8: on dtype-tagged exchange DAGs the overlapped objective
+    never loses to the serial seed, and the pipelined event sim never
+    loses to the serialized groups — the scheduling invariants survive
+    dtype-aware costing."""
+    rng = random.Random(15_000 + seed)
+    g = annotate_exchanges(make_dag(rng, dtype_tagged=True), rng)
+    devices, dpu = _resolve(DEVICES)
+    serial = plan(g, devices=DEVICES)
+    over = plan(g, devices=DEVICES, objective="overlapped")
+    assert over.overlapped_s <= \
+        make_schedule(g, serial, dpu).overlapped_s * (1 + _REL) + 1e-15
+    sched = make_schedule(g, over, dpu, pipelined=True)
+    assert sched.pipelined_s <= sched.overlapped_s + 1e-15
+
+
 def test_chain_overlapped_dp_beats_descent_on_shipped_chains():
     """The ISSUE-4 satellite acceptance on every SHIPPED chain graph: the
     exact group-aggregate DP never scores worse than the coordinate
@@ -304,3 +385,14 @@ if HAVE_HYPOTHESIS:
         _check_chain_overlapped(
             annotate_exchanges(make_chain(random.Random(seed), max_nodes=4),
                                random.Random(seed)))
+
+    @_cases
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_hyp_dtype_tagged_dag_exact_equals_brute_force(seed):
+        _check_dag(make_dag(random.Random(seed), dtype_tagged=True))
+
+    @_cases
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_hyp_dtype_tagged_chain_overlapped_dp_equals_brute_force(seed):
+        _check_chain_overlapped(make_chain(random.Random(seed), max_nodes=4,
+                                           dtype_tagged=True))

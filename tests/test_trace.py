@@ -341,10 +341,12 @@ def test_cost_constants_registry():
     for k in ("xeon.hbm_bw", "xeon.peak_flops", "titan_v.hbm_bw",
               "pcie.bw", "dpu.host_to_dpu_bw", "dpu.dpu_to_host_bw",
               "dpu.mram_bw", "dpu.launch_overhead_s", "dpu.time_scale",
-              "channel.setup_s", "exchange.roundtrip_bw"):
+              "dpu.int8_time_scale", "channel.setup_s",
+              "exchange.roundtrip_bw"):
         assert k in cc, k
     assert all(v > 0 for v in cc.values()), cc
     assert cc["dpu.time_scale"] == 1.0
+    assert cc["dpu.int8_time_scale"] == 1.0
 
 
 def test_calibration_round_trip_recovers_anchors():
@@ -365,6 +367,30 @@ def test_calibration_round_trip_recovers_anchors():
         assert abs(f.drift) < 1e-6, (f.name, f.fitted, f.anchor)
     out = rep.render()
     assert "drift" in out and rep.fitted_constants()
+
+
+def test_calibration_fits_int8_scale_from_quantized_trace():
+    """ISSUE-8: a trace over the QUANTIZED MoE decode DAG (int8 experts
+    on PIM) has int8-dominant compute spans, so `dpu.int8_time_scale`
+    is fittable — and from an anchor-priced trace it round-trips to 1.0
+    like every other constant. The f32 DAG's trace must NOT fit it
+    (calibration never invents data)."""
+    g = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS_INT8)
+    p = pure_plan(g, "upmem_2556")
+    t = anchor_trace(g, p.assignment)
+    rep = fit_trace(t, g, p.assignment)
+    names = {f.name: f for f in rep.fits}
+    assert "dpu.int8_time_scale" in names, sorted(names)
+    assert abs(names["dpu.int8_time_scale"].drift) < 1e-6
+    # the pooled scale still fits, from the non-int8 spans only
+    assert "dpu.time_scale" in names
+    assert abs(names["dpu.time_scale"].drift) < 1e-6
+
+    g32 = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS)
+    p32 = pure_plan(g32, "upmem_2556")
+    rep32 = fit_trace(anchor_trace(g32, p32.assignment), g32,
+                      p32.assignment)
+    assert "dpu.int8_time_scale" not in {f.name for f in rep32.fits}
 
 
 def test_calibration_on_exchange_trace():
