@@ -39,6 +39,7 @@ asserts all still run.
 from __future__ import annotations
 
 import dataclasses
+import importlib
 import time
 
 from repro.dispatch import PlanCache, batch_signature, workloads
@@ -237,16 +238,80 @@ def _paper_projection(report):
     # 256-rank fleet clears a million requests/day
     assert best_daily * fleet_ranks > 1e6, \
         "paper-scale fleet projection under 1M req/day"
+
+    # ISSUE-9: the x256 column above is the NAIVE multiplier — 256
+    # independent ranks, each with a dedicated full-bandwidth host
+    # channel. The honest fleet packs ranks 4-per-host (the Topology
+    # model's rank-parallel channels): each rank keeps its own transfer
+    # channel, but the pod's concurrent streams divide the host's DRAM
+    # fabric, so each rank's decode/prefill timeline is REPLAYED under a
+    # what-if system with 1/ranks_per_host of the channel bandwidth
+    # (`trace.replay.what_if`) and the fleet is re-priced from that
+    # modeled multi-rank throughput. Both numbers are reported.
+    rp = importlib.import_module("repro.dispatch.trace.replay")
+    ranks_per_host = 4
+    wi = rp.what_if(channel_scale=1.0 / ranks_per_host)
+    nb = 64
+    dims = dataclasses.replace(base, batch=nb)
+    dag = workloads.decode_dag(dims)
+    p = plan_placement(dag)
+    dstep_s = rp.replay(rp.modeled_trace(dag, p), dag, p.assignment,
+                        dpu=wi).total_s
+    pdag = workloads.prefill_dag(base, prefill_len=prompt_len,
+                                 chunk=chunk, batch=1)
+    pp = plan_placement(pdag, objective="overlapped")
+    pstep_s = rp.replay(rp.modeled_trace(pdag, pp), pdag, pp.assignment,
+                        dpu=wi).total_s
+    rank_req_s = nb / (avg_new * dstep_s + pstep_s)
+    fleet_daily = rank_req_s * fleet_ranks * 86_400
+    naive_daily = best_daily * fleet_ranks
+    # stress row: all 256 ranks on ONE host fabric — where the dedicated-
+    # channel assumption finally breaks and transfers surface past compute
+    stress_s = rp.replay(rp.modeled_trace(dag, p), dag, p.assignment,
+                         dpu=rp.what_if(
+                             channel_scale=1.0 / fleet_ranks)).total_s
+    stress_daily = (nb / (avg_new * stress_s + pstep_s)) \
+        * fleet_ranks * 86_400
+    report.table([
+        {"fleet model": f"naive x{fleet_ranks} (dedicated channels)",
+         "decode step ms": round(price_decode(nb) * 1e3, 1),
+         "req/day fleet": f"{naive_daily:,.0f}",
+         "vs naive": "1.00x"},
+        {"fleet model": (f"{fleet_ranks // ranks_per_host} hosts x "
+                         f"{ranks_per_host} ranks (what-if replay, "
+                         f"channels /{ranks_per_host})"),
+         "decode step ms": round(dstep_s * 1e3, 1),
+         "req/day fleet": f"{fleet_daily:,.0f}",
+         "vs naive": f"{fleet_daily / naive_daily:.2f}x"},
+        {"fleet model": (f"stress: {fleet_ranks} ranks, one fabric "
+                         f"(channels /{fleet_ranks})"),
+         "decode step ms": round(stress_s * 1e3, 1),
+         "req/day fleet": f"{stress_daily:,.0f}",
+         "vs naive": f"{stress_daily / naive_daily:.2f}x"},
+    ])
+    assert fleet_daily > 1e6, \
+        "modeled multi-rank fleet projection under 1M req/day"
+    assert fleet_daily <= naive_daily * (1 + 1e-9) and \
+        stress_daily <= fleet_daily * (1 + 1e-9), \
+        "channel contention cannot beat dedicated channels"
     report.note(f"modeled hybrid plans (planner ladder, seconds): one "
                 f"2556-DPU rank sustains ~{best_daily:,.0f} long-form "
-                f"requests/day at 64 slots; a {fleet_ranks}-rank fleet "
-                f"clears ~{best_daily * fleet_ranks / 1e6:.1f}M "
-                "requests/day — millions of daily users at ~1 request "
-                "each. Projection only (no UPMEM hardware here); the "
-                "same cost model the fidelity gate pins within 10% of "
-                "replayed traces at reduced scale. The modeled step is "
-                "host-GEMV-bound (KT2): the quantized MoE projection "
-                "below is the int8 expert/KV lever that shrinks it")
+                f"requests/day at 64 slots; the re-priced "
+                f"{fleet_ranks}-rank fleet (pods of {ranks_per_host} "
+                "ranks sharing a host fabric, per-rank timelines "
+                "replayed under the contended what-if channels) "
+                f"clears ~{fleet_daily / 1e6:.1f}M requests/day — "
+                "millions of daily users at ~1 request each. The "
+                "pod-contended replay matches the dedicated-channel "
+                "step: the dense decode timeline is host-GEMV-bound "
+                "(KT2) and its transfers stay hidden under compute even "
+                f"at 1/{ranks_per_host} bandwidth — the stress row "
+                "shows channel contention only surfaces when the whole "
+                "fleet shares one fabric. Projection only (no UPMEM "
+                "hardware here); the same cost model the fidelity gate "
+                "pins within 10% of replayed traces at reduced scale. "
+                "The quantized MoE projection below is the int8 "
+                "expert/KV lever that shrinks the host-bound step")
 
     # the KT2 flip through the same PlanCache keying: the quantized MoE
     # serving step (int8 expert GEMMs on the DPU 8x8-multiplier band,

@@ -34,6 +34,18 @@ worst case for the architecture, Takeaway 3) — the cost that lets the
 planner decide host-vs-bank expert placement instead of guessing. The
 charge is per-edge (no dedup) and flows through every ladder rung.
 
+Multi-rank scale-out (`Topology`): a plan may target several RANKS of one
+UPMEM base system — rank devices are ordinary placement names
+(`"upmem_2556"` is rank 0, `"upmem_2556:1"` rank 1, ...), each a full DPU
+array behind its own host memory channel with the base system's measured
+per-rank constants (CPU<->DPU bandwidth scales near-linearly with ranks
+driven in parallel, arXiv:2105.03814). Because ranks are plain device
+names, every planner rung below prices expert-parallel and layer-parallel
+multi-rank plans unchanged; inter-rank traffic relays through host DRAM
+(`transfer_hops` — there is no direct rank-to-rank path, Takeaway 3), and
+the per-rank channel concurrency is realized by the pipelined event sim
+(`schedule._pipelined_total`, one transfer-channel resource per rank).
+
 Two objectives (the `objective` knob of `plan`): `"serial"` minimizes the
 additive end-to-end sum `evaluate` computes — the ladder below is exact
 for it; `"overlapped"` scores candidates by the scheduler's modeled
@@ -66,7 +78,9 @@ from typing import Iterable
 from ..core.pim_model import DPUModel, MACHINES, UPMEM_2556, UPMEM_640
 from .graph import OpGraph, OpNode
 
-#: every placeable device; at most one upmem_* system per plan
+#: every placeable BASE device; at most one upmem_* base system per plan,
+#: but a plan may target several RANKS of it ("upmem_2556:1", ...) — see
+#: `Topology` / `device_rank`
 DEVICES = ("xeon", "titan_v", "upmem_2556", "upmem_640")
 
 #: Titan V PCIe 3.0 x16 effective host<->GPU bandwidth
@@ -81,6 +95,90 @@ _DPU_SYSTEMS = {"upmem_2556": UPMEM_2556, "upmem_640": UPMEM_640}
 
 def _is_pim(device: str) -> bool:
     return device.startswith("upmem")
+
+
+def device_rank(device: str) -> tuple[str, int]:
+    """Split a (possibly rank-qualified) device name into (base, rank).
+
+    Multi-rank scale-out names ranks by suffix: `"upmem_2556"` IS rank 0
+    — the exact degenerate case every pre-topology plan was priced under
+    — and `"upmem_2556:1"`, `"upmem_2556:2"`, ... are further ranks of
+    the same base system. Each rank is a full DPU array behind its own
+    host memory channel: the extended UPMEM characterization
+    (arXiv:2105.03814) measures CPU-DPU/DPU-CPU bandwidth scaling
+    near-linearly with the number of ranks driven in parallel, so ranks
+    do NOT share the per-rank setup/bandwidth constants."""
+    base, _, r = device.partition(":")
+    return (base, int(r)) if r else (base, 0)
+
+
+def _dpu_system(device: str) -> DPUModel:
+    """The DPU model behind a (possibly rank-qualified) PIM device name."""
+    return _DPU_SYSTEMS[device_rank(device)[0]]
+
+
+def channel_of(device: str) -> str:
+    """The transfer-channel resource a device's host traffic occupies.
+
+    Rank 0 and every host-class device keep the historical shared
+    `"channel"` resource (so single-rank schedules, goldens, and traces
+    are byte-identical to the pre-topology model); rank r > 0 owns
+    `"channel:r"` — the per-rank parallelism the scale-out model prices
+    and the pipelined event sim enforces exclusivity on."""
+    base, r = device_rank(device)
+    return "channel" if r == 0 else f"channel:{r}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A multi-rank channel topology: `n_ranks` full copies of one UPMEM
+    base system, each behind its own host<->DPU transfer channel with the
+    base system's measured per-rank setup/bandwidth constants
+    (rank-parallel CPU<->DPU transfers, arXiv:2105.03814). Inter-rank
+    exchanges have no direct path — they relay through host DRAM
+    (Takeaway 3): `transfer_hops` prices a rank->rank crossing as a
+    retrieve on the source rank's channel plus a push on the destination
+    rank's channel.
+
+    `Topology(n_ranks=1)` is the exact degenerate single-channel model
+    every existing plan/golden was priced under. Rank devices are plain
+    placement names (`rank_device`), so every planner rung prices
+    multi-rank plans without topology-specific code paths."""
+    base: str = "upmem_2556"
+    n_ranks: int = 1
+
+    def __post_init__(self):
+        if self.base not in _DPU_SYSTEMS:
+            raise ValueError(f"unknown UPMEM base {self.base!r} "
+                             f"(know {sorted(_DPU_SYSTEMS)})")
+        if self.n_ranks < 1:
+            raise ValueError(f"need n_ranks >= 1, got {self.n_ranks}")
+
+    def rank_device(self, r: int) -> str:
+        """Placement name of rank `r` (rank 0 is the bare base name)."""
+        if not 0 <= r < self.n_ranks:
+            raise ValueError(f"rank {r} outside 0..{self.n_ranks - 1}")
+        return self.base if r == 0 else f"{self.base}:{r}"
+
+    @property
+    def rank_devices(self) -> tuple[str, ...]:
+        """Every rank's placement name, rank order."""
+        return tuple(self.rank_device(r) for r in range(self.n_ranks))
+
+    def devices(self, hosts: tuple[str, ...] = ("xeon",)) -> tuple[str, ...]:
+        """The planner device set: host-class devices + every rank."""
+        return tuple(hosts) + self.rank_devices
+
+    @property
+    def dpu(self) -> DPUModel:
+        """The per-rank DPU system model (all ranks are identical)."""
+        return _DPU_SYSTEMS[self.base]
+
+    @property
+    def signature(self) -> tuple[str, int]:
+        """Hashable identity for plan caching (`plan_cache`): plans priced
+        under different topologies must never alias."""
+        return (self.base, self.n_ranks)
 
 
 def node_bytes(node: OpNode, device: str) -> float:
@@ -100,7 +198,7 @@ def node_time(node: OpNode, device: str,
               dpu: DPUModel | None = None) -> float:
     """Modeled seconds for one operator on one device (no transfers)."""
     if _is_pim(device):
-        d = dpu or _DPU_SYSTEMS[device]
+        d = dpu or _dpu_system(device)
         per_dpu = {k: v / d.n_dpus for k, v in node.ops.items()}
         t_c = d.compute_time(per_dpu)
         t_m = d.mram_time(node.hbm_bytes / d.n_dpus)
@@ -135,10 +233,18 @@ def transfer_hops(src: str, dst: str, nbytes: float,
     (Takeaway 3), and the relay hop must complete before the final hop can
     start streaming into the destination — the scheduler may only overlap
     the *final* hop with destination compute. Single-hop paths have
-    relay_s == 0. The two components always sum to `transfer_time`."""
+    relay_s == 0. The two components always sum to `transfer_time`.
+
+    A rank->rank crossing (two PIM devices — necessarily ranks of one
+    base system) also has no direct path: the retrieve into host DRAM is
+    the relay hop (the source rank's channel) and the push into the
+    destination rank is the final hop (the destination rank's channel) —
+    the host-DRAM-relayed inter-rank exchange of the scale-out model."""
     if src == dst or nbytes <= 0:
         return 0.0, 0.0
     d = dpu or UPMEM_2556
+    if _is_pim(src) and _is_pim(dst):
+        return nbytes / d.dpu_to_host_bw, nbytes / d.host_to_dpu_bw
     if _is_pim(src) and dst == "titan_v":
         return nbytes / d.dpu_to_host_bw, nbytes / PCIE_BW
     if src == "titan_v" and _is_pim(dst):
@@ -158,10 +264,13 @@ def exchange_time(src_dev: str, dst_dev: str, nbytes: float,
     the measured channels. On one host-class device the shuffle is local
     (already inside the node's memory traffic); across devices the
     ordinary boundary transfer (`transfer_time`) relays through the host
-    anyway, so the re-distribution rides it for free."""
+    anyway, so the re-distribution rides it for free. Endpoints on two
+    RANKS of one base system are distinct devices: their re-distribution
+    rides the rank->rank boundary transfer (`transfer_hops` prices both
+    host-DRAM-relay hops), so it is also not double-charged here."""
     if nbytes <= 0 or src_dev != dst_dev or not _is_pim(src_dev):
         return 0.0
-    d = dpu or _DPU_SYSTEMS[src_dev]
+    d = dpu or _dpu_system(src_dev)
     return nbytes / d.dpu_to_host_bw + nbytes / d.host_to_dpu_bw
 
 
@@ -199,7 +308,7 @@ def launch_overhead(device: str, dpu: DPUModel | None = None) -> float:
     """Seconds to start work on `device` when the previous operator ran
     elsewhere (DPU program launch / kernel launch + host sync)."""
     if _is_pim(device):
-        return (dpu or _DPU_SYSTEMS[device]).launch_overhead_s
+        return (dpu or _dpu_system(device)).launch_overhead_s
     return _HOST_LAUNCH_S[device]
 
 
@@ -379,14 +488,24 @@ def evaluate(graph: OpGraph, assignment: dict[str, str],
 
 
 def _resolve(devices: Iterable[str]) -> tuple[tuple[str, ...], DPUModel | None]:
+    """Validate a planner device set: any number of host-class devices
+    plus any number of RANKS of at most one UPMEM base system (ranks of
+    two different bases would need two DPU models per plan)."""
     devices = tuple(devices)
-    pim = [d for d in devices if _is_pim(d)]
-    if len(pim) > 1:
-        raise ValueError(f"at most one UPMEM system per plan, got {pim}")
+    bases: set[str] = set()
     for d in devices:
-        if d not in DEVICES:
+        base, r = device_rank(d)
+        if base not in DEVICES:
             raise ValueError(f"unknown device {d!r} (know {DEVICES})")
-    return devices, (_DPU_SYSTEMS[pim[0]] if pim else None)
+        if r and not _is_pim(base):
+            raise ValueError(f"only UPMEM systems have ranks, got {d!r}")
+        if _is_pim(base):
+            bases.add(base)
+    if len(bases) > 1:
+        raise ValueError(f"at most one UPMEM system per plan, "
+                         f"got {sorted(bases)}")
+    base = next(iter(bases), None)
+    return devices, (_DPU_SYSTEMS[base] if base else None)
 
 
 def plan(graph: OpGraph, devices: Iterable[str] = ("xeon", "upmem_2556"),
@@ -450,7 +569,8 @@ def pure_plan(graph: OpGraph, device: str, source: str = "xeon",
               sink: str = "xeon") -> Plan:
     """Baseline: every operator on one device (one coalesced launch)."""
     assignment = {n: device for n in graph.nodes}
-    return evaluate(graph, assignment, _DPU_SYSTEMS.get(device),
+    return evaluate(graph, assignment,
+                    _dpu_system(device) if _is_pim(device) else None,
                     source, sink, method="pure")
 
 

@@ -8,7 +8,8 @@ serving batch's composition churns every admission and eviction — the
 live-slot count grows and shrinks, per-slot positions advance every
 step, and ragged prompts split into different chunk grids.
 `batch_signature` canonicalizes that churn into a coarse key (live-slot
-count, bucketed position, chunk splits) so equal-shaped compositions
+count, bucketed position, chunk splits, channel-topology shape) so
+equal-shaped compositions
 share one solve, and `PlanCache` LRU-holds whatever the solve produced
 (a `Plan`, a priced (graph, plan, seconds) bundle, a `PlanExecutor`)
 with FaceCache-style hit/miss accounting.
@@ -28,22 +29,29 @@ from typing import Any, Callable, Hashable, Iterable, Sequence
 
 def batch_signature(n_live: int, positions: Iterable[int] = (), *,
                     pos_bucket: int = 64, splits: Sequence[int] = (),
-                    phase: str = "decode") -> tuple:
+                    phase: str = "decode", topology: Any = ()) -> tuple:
     """Canonical plan-cache key for one batch composition:
-    `(phase, live-slot count, bucketed KV length, chunk splits)`.
+    `(phase, live-slot count, bucketed KV length, chunk splits,
+    topology shape)`.
 
     The KV length is the max position rounded UP to a multiple of
     `pos_bucket` (the sequence length the priced DAG assumes —
     conservative: the model never underestimates resident KV), so a slot
     advancing within a bucket is a cache hit and only bucket crossings
     replan. `splits` carries the chunked-prefill grid
-    (`workloads.prefill_chunk_splits`); leave it empty for decode."""
+    (`workloads.prefill_chunk_splits`); leave it empty for decode.
+    `topology` carries the channel-topology shape the priced plan
+    assumes — a `placement.Topology` (its `.signature`, `(base,
+    n_ranks)`) or an already-hashable shape tuple — so plans priced
+    under different rank counts never alias; the empty default means
+    the single-channel topology."""
     if pos_bucket < 1:
         raise ValueError(f"pos_bucket must be >= 1, got {pos_bucket}")
     mx = max((int(p) for p in positions), default=0)
     kv_len = (mx // pos_bucket + 1) * pos_bucket
+    topo = getattr(topology, "signature", topology)
     return (str(phase), int(n_live), int(kv_len),
-            tuple(int(s) for s in splits))
+            tuple(int(s) for s in splits), tuple(topo))
 
 
 class PlanCache:

@@ -43,8 +43,10 @@ Two execution disciplines are modeled over the same group timeline:
     what a serial stage loop over the plan costs.
   * **pipelined groups** (`pipelined_s`, `make_schedule(...,
     pipelined=True)`) — a dependency-aware event simulation: each device
-    is a serial resource, all host<->device traffic shares one transfer
-    channel, a group starts when its crossing producers are done (and,
+    is a serial resource, host<->device traffic occupies each rank's own
+    transfer channel (`placement.channel_of`; single-rank plans book the
+    one shared `"channel"`, the pre-topology degenerate case), a group
+    starts when its crossing producers are done (and,
     for KV readers, when the rows they read have landed at their home —
     `meta["kv_writers"]`), and KV write-backs occupy only the channel, so
     later groups' compute runs under them. This is the discipline
@@ -58,12 +60,35 @@ import dataclasses
 
 from ..core.pim_model import DPUModel, UPMEM_2556
 from .graph import OpGraph
-from .placement import (Plan, _DPU_SYSTEMS, exchange_time, launch_overhead,
-                        node_time, transfer_hops, transfer_time)
+from .placement import (Plan, _dpu_system, _is_pim, channel_of,
+                        exchange_time, launch_overhead, node_time,
+                        transfer_hops, transfer_time)
 
 #: fixed cost of one host<->device transfer call (API + sync); batching N
 #: buffers into one parallel transfer pays this once instead of N times
 TRANSFER_SETUP_S = 2e-5
+
+
+def _crossing_channels(src: str, dst: str) -> tuple[str, str]:
+    """(relay-hop channel, final-hop channel) resources of one crossing.
+
+    Rank-qualified PIM devices own their channel (`placement.channel_of`);
+    rank 0, host-class devices, and the PCIe leg keep the historical
+    shared `"channel"` — so every single-rank schedule books exactly the
+    pre-topology resources. The relay channel only matters when
+    `transfer_hops` returns a nonzero relay hop (GPU<->DPU via PCIe,
+    rank->rank via host DRAM)."""
+    if _is_pim(src) and _is_pim(dst):
+        return channel_of(src), channel_of(dst)
+    if _is_pim(src):
+        # retrieve over the source rank's channel; a GPU destination adds
+        # the PCIe final hop, which rides the legacy shared channel
+        ch = channel_of(src)
+        return (ch, "channel") if dst == "titan_v" else (ch, ch)
+    if _is_pim(dst):
+        ch = channel_of(dst)
+        return ("channel", ch) if src == "titan_v" else (ch, ch)
+    return "channel", "channel"
 
 
 @dataclasses.dataclass
@@ -90,10 +115,18 @@ class LaunchGroup:
     #: producer node names whose tensors cross into this group — what the
     #: executor stages ahead of the group (the batched input transfer)
     in_producers: list[str] = dataclasses.field(default_factory=list)
-    #: (member node, seconds) of each off-home KV write-back, in member
-    #: order — the pipelined simulation issues them as the node finishes
-    node_writebacks: list[tuple[str, float]] = dataclasses.field(
+    #: (member node, seconds, channel resource) of each off-home KV
+    #: write-back, in member order — the pipelined simulation issues them
+    #: as the node finishes
+    node_writebacks: list[tuple[str, float, str]] = dataclasses.field(
         default_factory=list, repr=False)
+    #: per-channel occupancy breakdown of the batched input transfer
+    #: (multi-rank topologies): relay-side hops (source-rank retrieves,
+    #: PCIe relays) and final-side hops + setups, channel resource ->
+    #: seconds. Single-rank schedules book everything on `"channel"`,
+    #: and the two dicts always sum to `in_transfer_s`.
+    chan_src_s: dict = dataclasses.field(default_factory=dict, repr=False)
+    chan_dst_s: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def serial_s(self) -> float:
@@ -222,7 +255,7 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
     the schema `trace.replay.modeled_trace` wraps into a `Trace`)."""
     pim_dev = next((d for d in plan.assignment.values()
                     if d.startswith("upmem")), None)
-    dpu = dpu or (_DPU_SYSTEMS[pim_dev] if pim_dev else UPMEM_2556)
+    dpu = dpu or (_dpu_system(pim_dev) if pim_dev else UPMEM_2556)
     preds = graph.preds
     if order is None:
         order = graph.topo_order()
@@ -291,7 +324,8 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
                 wb_s = transfer_time(g.device, wb_home, wb_bytes, dpu)
                 g.writeback_s += wb_s
                 g.n_writebacks += 1
-                g.node_writebacks.append((n, wb_s))
+                g.node_writebacks.append(
+                    (n, wb_s, _crossing_channels(g.device, wb_home)[0]))
         if g.n_writebacks:
             g.writeback_s += TRANSFER_SETUP_S
         if gi == 0 and graph.input_bytes and g.device != source:
@@ -299,22 +333,52 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
         if crossing:
             g.in_bytes = sum(b for _, b in crossing)
             g.n_in_tensors = len(crossing)
-            payload_s = sum(transfer_time(src, g.device, b, dpu)
-                            for src, b in crossing)
-            g.relay_s = sum(transfer_hops(src, g.device, b, dpu)[0]
-                            for src, b in crossing)
-            n_channels = len({src for src, _ in crossing})
-            g.in_transfer_s = n_channels * TRANSFER_SETUP_S + payload_s
-            g.serial_transfer_s = len(crossing) * TRANSFER_SETUP_S \
-                + payload_s
+            # per-crossing hop split: the relay hop (source-rank retrieve /
+            # PCIe leg) and the final hop each occupy their own channel
+            # resource; the hop sum equals `transfer_time` term-for-term,
+            # so single-channel payloads are bit-identical to the
+            # pre-topology aggregate
+            payload_s = 0.0
+            for src, b in crossing:
+                r_s, f_s = transfer_hops(src, g.device, b, dpu)
+                r_ch, f_ch = _crossing_channels(src, g.device)
+                payload_s += r_s + f_s
+                g.relay_s += r_s
+                if r_s:
+                    g.chan_src_s[r_ch] = g.chan_src_s.get(r_ch, 0.0) + r_s
+                if f_s:
+                    g.chan_dst_s[f_ch] = g.chan_dst_s.get(f_ch, 0.0) + f_s
+            # one batched parallel-transfer call per distinct crossing
+            # source; a rank->rank crossing is two calls (retrieve on the
+            # source rank's channel + push on the destination's), matching
+            # the exchange model's retrieve+push setup pair
+            n_setups = 0
+            for src in {s for s, _ in crossing}:
+                r_ch, f_ch = _crossing_channels(src, g.device)
+                if _is_pim(src) and _is_pim(g.device):
+                    n_setups += 2
+                    g.chan_src_s[r_ch] = g.chan_src_s.get(r_ch, 0.0) \
+                        + TRANSFER_SETUP_S
+                else:
+                    n_setups += 1
+                g.chan_dst_s[f_ch] = g.chan_dst_s.get(f_ch, 0.0) \
+                    + TRANSFER_SETUP_S
+            n_srcs = len({s for s, _ in crossing})
+            g.in_transfer_s = n_setups * TRANSFER_SETUP_S + payload_s
+            g.serial_transfer_s = (len(crossing) + (n_setups - n_srcs)) \
+                * TRANSFER_SETUP_S + payload_s
 
     succs = graph.succs
     out_transfer = 0.0
+    out_channels: dict[str, float] = {}
     for leaf in (n for n in order if not succs[n]):
         t = transfer_time(plan.assignment[leaf], sink,
                           graph.nodes[leaf].out_bytes, dpu)
         if t:
             out_transfer += t + TRANSFER_SETUP_S
+            ch = _crossing_channels(plan.assignment[leaf], sink)[0]
+            out_channels[ch] = out_channels.get(ch, 0.0) \
+                + t + TRANSFER_SETUP_S
 
     total = sum(g.serial_s for g in groups) + out_transfer
     overlapped = sum(g.overlapped_s for g in groups) + out_transfer
@@ -325,10 +389,33 @@ def make_schedule(graph: OpGraph, plan: Plan, dpu: DPUModel | None = None,
     busy: dict[str, float] = {}
     for g in groups:
         busy[g.device] = busy.get(g.device, 0.0) + g.launch_s + g.compute_s
-    chan_busy = sum(g.in_transfer_s + g.writeback_s + g.exchange_s
-                    for g in groups) + out_transfer
-    if chan_busy:
-        busy["channel"] = chan_busy
+    chan_names: set[str] = set(out_channels)
+    for g in groups:
+        chan_names.update(g.chan_src_s, g.chan_dst_s,
+                          (ch for _, _, ch in g.node_writebacks))
+        if g.exchange_s:
+            chan_names.add(channel_of(g.device))
+    if chan_names <= {"channel"}:
+        # single-channel topologies keep the historical aggregate
+        # arithmetic so busy_s stays bit-identical to pre-topology runs
+        chan_busy = sum(g.in_transfer_s + g.writeback_s + g.exchange_s
+                        for g in groups) + out_transfer
+        if chan_busy:
+            busy["channel"] = chan_busy
+    else:
+        for g in groups:
+            for ch, s in g.chan_src_s.items():
+                busy[ch] = busy.get(ch, 0.0) + s
+            for ch, s in g.chan_dst_s.items():
+                busy[ch] = busy.get(ch, 0.0) + s
+            for i, (_, wb_s, ch) in enumerate(g.node_writebacks):
+                busy[ch] = busy.get(ch, 0.0) + wb_s \
+                    + (TRANSFER_SETUP_S if i == 0 else 0.0)
+            if g.exchange_s:
+                ech = channel_of(g.device)
+                busy[ech] = busy.get(ech, 0.0) + g.exchange_s
+        for ch, s in out_channels.items():
+            busy[ch] = busy.get(ch, 0.0) + s
     sched = Schedule(graph_name=graph.name, groups=groups,
                      out_transfer_s=out_transfer, total_s=total,
                      overlapped_s=overlapped, unbatched_s=unbatched,
@@ -347,25 +434,31 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
     """Event-simulate the group timeline with pipelined resources.
 
     Resources: every device is a serial executor (groups on it run in
-    timeline order), and all host<->device traffic — batched group inputs,
-    KV write-backs, the final retrieve — shares ONE transfer channel (all
-    DPU traffic relays through the host, Takeaway 3). A group's batched
-    input transfer starts once its crossing producers have finished and
-    the channel is free; the relay hop is still serialized in front of the
-    group and the final hop still double-buffers under the group's compute
-    (the same per-group algebra as `LaunchGroup.overlapped_s`). KV
-    write-backs are issued as each writing member finishes and occupy only
-    the channel — the device moves on to its next group, which is what
-    lets chunk i+1's qkv ladder run under chunk i's write-back. A KV
-    *reader* (a node whose `meta["kv_writers"]` names earlier writers)
-    cannot start its group before those writers' rows have landed at the
-    home. Returns the makespan in seconds; never exceeds the serial-group
-    `overlapped_s` total (the serial timeline is this event system with
-    every resource globally serialized). When `events` is a list, every
-    resource occupancy is appended to it as an event dict (the modeled
-    trace `trace.replay.modeled_trace` packages); channel events are
-    mutually exclusive by construction — the exclusivity invariant the
-    golden-trace test pins."""
+    timeline order), and every transfer-channel resource is serial too —
+    single-rank plans book all host<->device traffic (batched group
+    inputs, KV write-backs, the final retrieve) on ONE shared `"channel"`
+    (all DPU traffic relays through the host, Takeaway 3), while rank
+    r > 0 of a multi-rank topology owns its own `"channel:r"` resource
+    (`placement.channel_of`), so transfers into different ranks run in
+    parallel (arXiv:2105.03814). A group's batched input transfer starts
+    once its crossing producers have finished and every involved channel
+    is free; relay-side hops (source-rank retrieves, PCIe legs) run
+    concurrently on their own channels and are serialized in front of the
+    group, and the final hops still double-buffer under the group's
+    compute (the same per-group algebra as `LaunchGroup.overlapped_s`,
+    applied per channel). KV write-backs are issued as each writing
+    member finishes and occupy only their channel — the device moves on
+    to its next group, which is what lets chunk i+1's qkv ladder run
+    under chunk i's write-back. A KV *reader* (a node whose
+    `meta["kv_writers"]` names earlier writers) cannot start its group
+    before those writers' rows have landed at the home. Returns the
+    makespan in seconds; never exceeds the serial-group `overlapped_s`
+    total (the serial timeline is this event system with every resource
+    globally serialized). When `events` is a list, every resource
+    occupancy is appended to it as an event dict (the modeled trace
+    `trace.replay.modeled_trace` packages); events on each channel
+    resource are mutually exclusive by construction — the per-rank
+    exclusivity invariant the golden-trace test pins."""
 
     def emit(kind, name, resource, t0, t1, group=-1, **attrs):
         if events is not None:
@@ -376,7 +469,7 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
     done: dict[str, float] = {}
     wb_done: dict[str, float] = {}
     dev_free: dict[str, float] = {}
-    chan_free = 0.0
+    chan: dict[str, float] = {}       # channel resource -> free time
     member = {n: gi for gi, g in enumerate(groups) for n in g.nodes}
     for gi, g in enumerate(groups):
         ready = 0.0
@@ -394,34 +487,64 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
                     raise ValueError(  # a physically impossible timeline
                         f"{n} reads KV rows of {w}, which the timeline "
                         "has not executed yet")
-        if g.in_transfer_s:
-            tx_start = max(chan_free, ready)
-            chan_free = tx_start + g.in_transfer_s
+        involved = set(g.chan_src_s) | set(g.chan_dst_s)
+        if g.in_transfer_s and involved <= {"channel"}:
+            # single-channel stage-in: the pre-topology aggregate algebra,
+            # verbatim — one event, one channel booking, bit-identical
+            # wall-clocks and event streams for every single-rank plan
+            tx_start = max(chan.get("channel", 0.0), ready)
+            chan["channel"] = tx_start + g.in_transfer_s
             start = max(dev_free.get(g.device, 0.0),
                         tx_start + g.relay_s)
-            emit("stage_in", f"g{gi}", "channel", tx_start, chan_free, gi,
-                 bytes=g.in_bytes, n_tensors=g.n_in_tensors,
-                 device=g.device, relay_s=g.relay_s,
-                 producers=list(g.in_producers))
+            emit("stage_in", f"g{gi}", "channel", tx_start,
+                 chan["channel"], gi, bytes=g.in_bytes,
+                 n_tensors=g.n_in_tensors, device=g.device,
+                 relay_s=g.relay_s, producers=list(g.in_producers))
+            span = max(g.compute_s, g.in_transfer_s - g.relay_s)
+        elif g.in_transfer_s:
+            # multi-channel stage-in: relay-side hops run concurrently on
+            # their own channels once every involved channel is free and
+            # the producers are done; final hops then stream concurrently
+            # into the destination, and only the destination-side span may
+            # hide under the group's compute
+            tx_start = max([ready] + [chan.get(ch, 0.0) for ch in involved])
+            relay_end = tx_start
+            for ch, s in sorted(g.chan_src_s.items()):
+                chan[ch] = tx_start + s
+                relay_end = max(relay_end, chan[ch])
+                emit("stage_in", f"g{gi}/relay", ch, tx_start, chan[ch],
+                     gi, bytes=g.in_bytes, device=g.device, side="relay")
+            dst_span = 0.0
+            for ch, s in sorted(g.chan_dst_s.items()):
+                chan[ch] = relay_end + s
+                dst_span = max(dst_span, s)
+                emit("stage_in", f"g{gi}", ch, relay_end, chan[ch], gi,
+                     bytes=g.in_bytes, n_tensors=g.n_in_tensors,
+                     device=g.device, relay_s=relay_end - tx_start,
+                     producers=list(g.in_producers))
+            start = max(dev_free.get(g.device, 0.0), relay_end)
+            span = max(g.compute_s, dst_span)
         else:
             start = max(dev_free.get(g.device, 0.0), ready)
+            span = g.compute_s
         compute_start = start + g.launch_s
         if g.launch_s:
             emit("launch", f"g{gi}", g.device, start, compute_start, gi)
-        span = max(g.compute_s, g.in_transfer_s - g.relay_s)
         if g.exchange_s:
-            # bank exchanges occupy ONLY the shared channel, but the
-            # consuming member waits on them, so the group's device span
-            # stretches by the exchange (plus any channel contention) —
-            # other devices' compute is what runs under an exchange. The
-            # exchange queues after the group's own overlap window (the
+            # bank exchanges occupy ONLY the consuming device's channel,
+            # but the consuming member waits on them, so the group's
+            # device span stretches by the exchange (plus any channel
+            # contention) — other devices' compute, and other RANKS'
+            # exchanges, are what run under an exchange. The exchange
+            # queues after the group's own overlap window (the
             # serial-group algebra serializes it there): gating on the
             # raw channel-free time instead would re-charge the window's
             # already-counted input streaming on transfer-bound groups
-            ex_start = max(chan_free, compute_start + span)
+            ex_ch = channel_of(g.device)
+            ex_start = max(chan.get(ex_ch, 0.0), compute_start + span)
             span = (ex_start - compute_start) + g.exchange_s
-            chan_free = ex_start + g.exchange_s
-            emit("exchange", f"g{gi}", "channel", ex_start, chan_free, gi,
+            chan[ex_ch] = ex_start + g.exchange_s
+            emit("exchange", f"g{gi}", ex_ch, ex_start, chan[ex_ch], gi,
                  n_exchanges=g.n_exchanges, bytes=g.exchange_bytes,
                  device=g.device)
         dev_free[g.device] = compute_start + span
@@ -436,22 +559,23 @@ def _pipelined_total(graph: OpGraph, plan: Plan, groups: list[LaunchGroup],
             emit("compute", n, g.device, prev, done[n], gi)
             prev = done[n]
         first_wb = True
-        for n, wb_s in g.node_writebacks:
-            wb_start = max(chan_free, done[n])
-            chan_free = wb_start + wb_s \
+        for n, wb_s, wb_ch in g.node_writebacks:
+            wb_start = max(chan.get(wb_ch, 0.0), done[n])
+            chan[wb_ch] = wb_start + wb_s \
                 + (TRANSFER_SETUP_S if first_wb else 0.0)
             first_wb = False
-            wb_done[n] = chan_free
-            emit("writeback", n, "channel", wb_start, chan_free, gi,
+            wb_done[n] = chan[wb_ch]
+            emit("writeback", n, wb_ch, wb_start, chan[wb_ch], gi,
                  seconds=wb_s)
     succs = graph.succs
     for leaf in (n for n in graph.topo_order() if not succs[n]):
         t = transfer_time(plan.assignment[leaf], sink,
                           graph.nodes[leaf].out_bytes, dpu)
         if t:
-            out_start = max(chan_free, done[leaf])
-            chan_free = out_start + t + TRANSFER_SETUP_S
-            emit("transfer_out", leaf, "channel", out_start, chan_free,
+            ch = _crossing_channels(plan.assignment[leaf], sink)[0]
+            out_start = max(chan.get(ch, 0.0), done[leaf])
+            chan[ch] = out_start + t + TRANSFER_SETUP_S
+            emit("transfer_out", leaf, ch, out_start, chan[ch],
                  sink=sink, bytes=graph.nodes[leaf].out_bytes)
-    return max([chan_free] + list(dev_free.values())
+    return max([0.0] + list(chan.values()) + list(dev_free.values())
                + list(wb_done.values()) + list(done.values()))

@@ -410,44 +410,21 @@ def _moe_combine(x, out_buf, topi, pos, w, *, seq: int):
 # LM decode step as a DAG (residual branches + attention fan-out)
 # ---------------------------------------------------------------------------
 
-def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
-               kv_home: str | None = "upmem_2556") -> OpGraph:
-    """The full decode-step DAG the serving planner consumes.
-
-    Unlike `decode_pipeline` (which elides residuals to stay a chain, the
-    old DP's exact case), this keeps the real dataflow: each layer's
-    residual stream fans out to both the qkv projection and the post-
-    attention add, so the graph is series-parallel with frontier width 2 —
-    squarely inside the frontier DP's exact class. Node names match the
-    executable stages of `serve.dispatch_engine` ("embed", "qkv{i}",
-    "attn{i}", "o{i}", "mlp{i}", "head"), so a plan over this graph routes
-    that engine directly.
-
-    `kv_home` annotates every attention node with its layer's KV-cache
-    residency (`graph.annotate_kv_residency`): placing attn{i} away from
-    `kv_home` charges migrating the slot's KV over the measured transfer
-    channel. None disables residency (pure dataflow comparison).
-
-    MoE dims (`dims.n_experts > 0`, see `moe_decode_dag`) replace each
-    layer's dense `mlp{i}` with the routed ladder `router{i}` (gate +
-    dispatch scatter) -> `expert{i}` (per-expert FFN over the dispatch
-    buffer) -> `combine{i}` (gather + weighted residual add), with the
-    router->expert and expert->combine edges annotated as token
-    EXCHANGES (`OpGraph.annotate_exchange`): re-distributing the
-    dispatch buffer across banks relays through the host, the volume
-    scaling with tokens x capacity (`moe_exchange_bytes`).
-    """
-    d = dims
+def _decode_protos(d: DecodeDims, expert_shards: int = 1) -> dict:
+    """Compile each distinct decode-stage shape once — later layers (and
+    later steps of `decode_steps_dag`) are renamed copies. With
+    `expert_shards=R > 1` the expert proto is ONE shard's FFN: the
+    dispatch buffer and weight stacks sliced to `n_experts / R` experts
+    (what an expert-parallel rank holds), and the router's `out_bytes`
+    shrink to one shard's slice — each shard pulls only its experts'
+    rows, so R rank crossings move the same total payload the single
+    crossing did."""
     f32, i32 = jnp.float32, jnp.int32
     q8 = d.quant == "int8"
     kv_dt = jnp.int8 if q8 else i32
     S = jax.ShapeDtypeStruct
     dm, hdh = d.d_model, d.n_heads * d.head_dim
     act_bytes = float(d.batch * dm * 4)
-    # migrating a layer's cache off-home moves every slot's K and V rows
-    # at the cache's real width (GQA heads, real itemsize)
-    kv_bytes = 2.0 * d.batch * d.seq * d.kv_heads * d.head_dim \
-        * d.kv_itemsize
 
     tokens = S((d.batch,), i32)
     table = S((d.vocab, dm), f32)
@@ -478,8 +455,9 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
     def f_head(v, w):
         return _rmsnorm(v) @ w
 
-    # compile each distinct stage shape once; later layers are renamed copies
     protos = {
+        "embed": node_from_fn("embed", f_embed, tokens, table,
+                              kind="embed"),
         "qkv": node_from_fn("qkv", f_qkv, x, wqkv, kind="gemv_qkv",
                             exchange_bytes=3 * act_bytes),
         "attn": node_from_fn("attn", attend, qkv_out, kq, vq, kind="attn"),
@@ -489,32 +467,44 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
     moe = d.n_experts > 0
     if moe:
         e, k, fe = d.n_experts, d.top_k, d.expert_ff
+        es = e // expert_shards        # experts one shard holds
         cap = moe_capacity(1, e, k)    # decode: 1 token per slot row
         wr = S((dm, e), f32)
-        wu_e, wg_e = S((e, dm, fe), f32), S((e, dm, fe), f32)
-        wd_e = S((e, fe, dm), f32)
+        wu_e, wg_e = S((es, dm, fe), f32), S((es, dm, fe), f32)
+        wd_e = S((es, fe, dm), f32)
         buf = S((d.batch, e, cap, dm), f32)
+        buf_shard = S((d.batch, es, cap, dm), f32)
         topi = S((d.batch, 1, k), i32)
         pos_ = S((d.batch, 1, k), i32)
         gate_w = S((d.batch, 1, k), f32)
         router_fn = functools.partial(_moe_router, seq=1, top_k=k)
         combine_fn = functools.partial(_moe_combine, seq=1)
-        xbytes = moe_exchange_bytes(d.batch, dm, k)
         if q8:      # pre-quantized int8 weights + per-channel f32 scales
-            wu_e, wg_e = S((e, dm, fe), jnp.int8), S((e, dm, fe), jnp.int8)
-            wd_e = S((e, fe, dm), jnp.int8)
-            su_e, sg_e = S((e, 1, fe), f32), S((e, 1, fe), f32)
-            sd_e = S((e, 1, dm), f32)
+            wu_e, wg_e = S((es, dm, fe), jnp.int8), S((es, dm, fe), jnp.int8)
+            wd_e = S((es, fe, dm), jnp.int8)
+            su_e, sg_e = S((es, 1, fe), f32), S((es, 1, fe), f32)
+            sd_e = S((es, 1, dm), f32)
             expert_proto = node_from_fn(
-                "expert", _moe_expert_q8, buf, wu_e, su_e, wg_e, sg_e,
-                wd_e, sd_e, kind="moe_expert")
+                "expert", _moe_expert_q8, buf_shard, wu_e, su_e, wg_e,
+                sg_e, wd_e, sd_e, kind="moe_expert")
         else:
-            expert_proto = node_from_fn("expert", _moe_expert, buf, wu_e,
-                                        wg_e, wd_e, kind="moe_expert")
+            expert_proto = node_from_fn("expert", _moe_expert, buf_shard,
+                                        wu_e, wg_e, wd_e,
+                                        kind="moe_expert")
+        router_proto = node_from_fn("router", router_fn, x, wr,
+                                    kind="moe_router")
+        if expert_shards > 1:
+            # each shard's stage-in pulls only its slice of the dispatch
+            # buffer — the rank-parallel all-to-all moves the original
+            # total volume, split across R rank channels
+            router_proto = dataclasses.replace(
+                router_proto, out_bytes=router_proto.out_bytes
+                / expert_shards)
         protos.update({
-            "router": node_from_fn("router", router_fn, x, wr,
-                                   kind="moe_router"),
+            "router": router_proto,
             "expert": expert_proto,
+            # the combine's compute is over the FULL reassembled buffer
+            # regardless of sharding
             "combine": node_from_fn("combine", combine_fn, x, buf, topi,
                                     pos_, gate_w, kind="moe_combine"),
         })
@@ -522,50 +512,235 @@ def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
         protos["mlp"] = node_from_fn(
             "mlp", f_mlp, x, wup, wdown, kind="mlp",
             exchange_bytes=float(d.batch * d.d_ff * 4) + act_bytes)
+    protos["head"] = node_from_fn(
+        "head", f_head, x, whead, kind="gemv_head",
+        exchange_bytes=float(d.batch * d.vocab * 4))
+    return protos
 
-    base_name = "lm-moe-decode-dag" if moe else "lm-decode-dag"
-    g = OpGraph(base_name + ("-int8" if q8 else ""),
-                input_bytes=float(d.batch * 4))
-    g.add(node_from_fn("embed", f_embed, tokens, table, kind="embed"))
-    res = "embed"                      # the residual stream's producer
+
+def _check_decode_dims(d: DecodeDims, expert_shards: int) -> None:
+    if expert_shards < 1:
+        raise ValueError(f"need expert_shards >= 1, got {expert_shards}")
+    if expert_shards > 1:
+        if d.n_experts <= 0:
+            raise ValueError("expert_shards > 1 needs MoE dims "
+                             f"(n_experts > 0), got {d}")
+        if d.n_experts % expert_shards:
+            raise ValueError(f"n_experts={d.n_experts} not divisible by "
+                             f"expert_shards={expert_shards}")
+
+
+def _add_decode_step(g: OpGraph, d: DecodeDims, protos: dict, *,
+                     kv_home: str | None, expert_shards: int = 1,
+                     sfx: str = "", prev_attns: list[str] | None = None,
+                     prev_head: str | None = None) -> tuple[str, list[str]]:
+    """Add one decode step's node ladder to `g`, every name suffixed
+    `sfx` (`decode_steps_dag`'s `"/s{k}"`; empty for the single-step
+    `decode_dag`). `prev_attns` adds the per-layer KV-order edges from
+    the previous step's attention (step k+1 attends over a cache that
+    includes step k's row); `prev_head` adds the sampled-token edge
+    (greedy decode: step k+1's embed waits on step k's logits). Returns
+    (head name, attention names) for the next step's wiring."""
+    moe = d.n_experts > 0
+    R = expert_shards
+    # migrating a layer's cache off-home moves every slot's K and V rows
+    # at the cache's real width (GQA heads, real itemsize)
+    kv_bytes = 2.0 * d.batch * d.seq * d.kv_heads * d.head_dim \
+        * d.kv_itemsize
+    xbytes = moe_exchange_bytes(d.batch, d.d_model, d.top_k) if moe else 0.0
+
+    def layer_node(kind, name):
+        return dataclasses.replace(protos[kind], name=name,
+                                   ops=dict(protos[kind].ops),
+                                   meta=dict(protos[kind].meta))
+
+    embed_preds = (prev_head,) if prev_head else ()
+    g.add(layer_node("embed", f"embed{sfx}"), *embed_preds)
+    res = f"embed{sfx}"                # the residual stream's producer
+    attns: list[str] = []
     for i in range(d.n_layers):
-        def layer_node(kind, name):
-            return dataclasses.replace(protos[kind], name=name,
-                                       ops=dict(protos[kind].ops),
-                                       meta=dict(protos[kind].meta))
-        g.add(layer_node("qkv", f"qkv{i}"), res)
-        attn = g.add(layer_node("attn", f"attn{i}"), f"qkv{i}")
+        g.add(layer_node("qkv", f"qkv{i}{sfx}"), res)
+        attn_preds = [f"qkv{i}{sfx}"]
+        if prev_attns is not None:     # KV order across decode steps
+            attn_preds.append(prev_attns[i])
+        attn = g.add(layer_node("attn", f"attn{i}{sfx}"), *attn_preds)
+        attns.append(attn.name)
         if kv_home is not None:
             annotate_kv_residency(attn, kv_bytes, kv_home)
-        g.add(layer_node("o", f"o{i}"), f"attn{i}", res)
+        g.add(layer_node("o", f"o{i}{sfx}"), f"attn{i}{sfx}", res)
         if moe:
-            g.add(layer_node("router", f"router{i}"), f"o{i}")
-            g.add(layer_node("expert", f"expert{i}"), f"router{i}")
-            g.add(layer_node("combine", f"combine{i}"), f"expert{i}",
-                  f"router{i}", f"o{i}")
-            # the token exchanges: dispatch buffer out, expert outputs back
-            g.annotate_exchange(f"router{i}", f"expert{i}", xbytes)
-            g.annotate_exchange(f"expert{i}", f"combine{i}", xbytes)
-            res = f"combine{i}"
+            g.add(layer_node("router", f"router{i}{sfx}"), f"o{i}{sfx}")
+            # the token exchanges: dispatch buffer out, expert outputs
+            # back; R shards split the same total volume R ways
+            if R == 1:
+                g.add(layer_node("expert", f"expert{i}{sfx}"),
+                      f"router{i}{sfx}")
+                g.add(layer_node("combine", f"combine{i}{sfx}"),
+                      f"expert{i}{sfx}", f"router{i}{sfx}", f"o{i}{sfx}")
+                g.annotate_exchange(f"router{i}{sfx}", f"expert{i}{sfx}",
+                                    xbytes)
+                g.annotate_exchange(f"expert{i}{sfx}", f"combine{i}{sfx}",
+                                    xbytes)
+            else:
+                shards = [f"expert{i}@r{j}{sfx}" for j in range(R)]
+                for sn in shards:
+                    g.add(layer_node("expert", sn), f"router{i}{sfx}")
+                    g.annotate_exchange(f"router{i}{sfx}", sn, xbytes / R)
+                g.add(layer_node("combine", f"combine{i}{sfx}"),
+                      *shards, f"router{i}{sfx}", f"o{i}{sfx}")
+                for sn in shards:
+                    g.annotate_exchange(sn, f"combine{i}{sfx}", xbytes / R)
+            res = f"combine{i}{sfx}"
         else:
-            g.add(layer_node("mlp", f"mlp{i}"), f"o{i}")
-            res = f"mlp{i}"
-    g.add(node_from_fn("head", f_head, x, whead, kind="gemv_head",
-                       exchange_bytes=float(d.batch * d.vocab * 4)), res)
+            g.add(layer_node("mlp", f"mlp{i}{sfx}"), f"o{i}{sfx}")
+            res = f"mlp{i}{sfx}"
+    head = g.add(layer_node("head", f"head{sfx}"), res)
+    return head.name, attns
+
+
+def _decode_dag_name(d: DecodeDims, expert_shards: int) -> str:
+    base = "lm-moe-decode-dag" if d.n_experts > 0 else "lm-decode-dag"
+    return base + ("-int8" if d.quant == "int8" else "") \
+        + (f"-ep{expert_shards}" if expert_shards > 1 else "")
+
+
+def decode_dag(dims: DecodeDims = REDUCED_DIMS, *,
+               kv_home: str | None = "upmem_2556",
+               expert_shards: int = 1) -> OpGraph:
+    """The full decode-step DAG the serving planner consumes.
+
+    Unlike `decode_pipeline` (which elides residuals to stay a chain, the
+    old DP's exact case), this keeps the real dataflow: each layer's
+    residual stream fans out to both the qkv projection and the post-
+    attention add, so the graph is series-parallel with frontier width 2 —
+    squarely inside the frontier DP's exact class. Node names match the
+    executable stages of `serve.dispatch_engine` ("embed", "qkv{i}",
+    "attn{i}", "o{i}", "mlp{i}", "head"), so a plan over this graph routes
+    that engine directly.
+
+    `kv_home` annotates every attention node with its layer's KV-cache
+    residency (`graph.annotate_kv_residency`): placing attn{i} away from
+    `kv_home` charges migrating the slot's KV over the measured transfer
+    channel. None disables residency (pure dataflow comparison).
+
+    MoE dims (`dims.n_experts > 0`, see `moe_decode_dag`) replace each
+    layer's dense `mlp{i}` with the routed ladder `router{i}` (gate +
+    dispatch scatter) -> `expert{i}` (per-expert FFN over the dispatch
+    buffer) -> `combine{i}` (gather + weighted residual add), with the
+    router->expert and expert->combine edges annotated as token
+    EXCHANGES (`OpGraph.annotate_exchange`): re-distributing the
+    dispatch buffer across banks relays through the host, the volume
+    scaling with tokens x capacity (`moe_exchange_bytes`).
+
+    `expert_shards=R > 1` (MoE dims only, `n_experts % R == 0`) splits
+    each layer's expert FFN into R shard nodes `expert{i}@r{j}`, each
+    over `n_experts / R` experts (`parse_stage_name` strips the suffix;
+    `stage_shard` recovers j). The router fans out to all R shards and
+    the combine fans them back in, with the dispatch/combine exchange
+    volume split R ways — the expert-parallel shape whose shards a
+    multi-rank `placement.Topology` places on distinct ranks
+    (`expert_parallel_plan`), putting each shard's stage-in, launch, and
+    exchange on its own rank channel."""
+    d = dims
+    _check_decode_dims(d, expert_shards)
+    protos = _decode_protos(d, expert_shards)
+    g = OpGraph(_decode_dag_name(d, expert_shards),
+                input_bytes=float(d.batch * 4))
+    _add_decode_step(g, d, protos, kv_home=kv_home,
+                     expert_shards=expert_shards)
     return g
 
 
 def moe_decode_dag(dims: DecodeDims = MOE_REDUCED_DIMS, *,
-                   kv_home: str | None = "upmem_2556") -> OpGraph:
+                   kv_home: str | None = "upmem_2556",
+                   expert_shards: int = 1) -> OpGraph:
     """The MoE decode-step DAG (`decode_dag` with routed expert layers):
     per layer `router{i}` -> token exchange -> `expert{i}` -> combine
     exchange -> `combine{i}`, the planner's first data-dependent-routing
     workload. Requires MoE dims (`dims.n_experts > 0`); see `decode_dag`
-    for the exchange-edge semantics."""
+    for the exchange-edge and `expert_shards` semantics."""
     if dims.n_experts <= 0 or dims.top_k <= 0:
         raise ValueError("moe_decode_dag needs MoE dims "
                          f"(n_experts/top_k), got {dims}")
-    return decode_dag(dims, kv_home=kv_home)
+    return decode_dag(dims, kv_home=kv_home, expert_shards=expert_shards)
+
+
+def decode_steps_dag(dims: DecodeDims = REDUCED_DIMS, *, n_steps: int = 2,
+                     kv_home: str | None = "upmem_2556",
+                     sampled: bool = False,
+                     expert_shards: int = 1) -> OpGraph:
+    """`n_steps` consecutive decode steps unrolled into ONE plannable DAG
+    — cross-step pipelining (the open PR-4 item), step k's nodes suffixed
+    `"/s{k}"` (`stage_step`).
+
+    The default `sampled=False` models the scoring / speculative-
+    verification contract: every step's input token is known up front
+    (prompt scoring, draft-tree verification), so step k+1's embed has NO
+    edge from step k's head. The only cross-step edges are the per-layer
+    KV-order edges `attn{i}/s{k}` -> `attn{i}/s{k+1}` (step k+1 attends
+    over a cache that includes step k's row; same-device, so they cost
+    nothing and only order the timeline). That is what lets the pipelined
+    event sim run step k+1's host ladder and stage-ins under step k's
+    tail PIM work — `pipelined_s` of the unrolled DAG beats
+    `n_steps * pipelined_s` of the single-step DAG wherever the plan
+    alternates devices (benchmarks/dispatch_bench.py sweep 8 reports the
+    margin).
+
+    `sampled=True` is the honest greedy-decode contract: step k's
+    sampled token IS step k+1's input, so `head/s{k}` ->
+    `embed/s{k+1}` serializes the ladders and only transfer/compute
+    tails overlap. Cross-step pipelining is a scoring/verification
+    speedup, not an autoregressive one."""
+    d = dims
+    if n_steps < 1:
+        raise ValueError(f"need n_steps >= 1, got {n_steps}")
+    _check_decode_dims(d, expert_shards)
+    protos = _decode_protos(d, expert_shards)
+    name = _decode_dag_name(d, expert_shards) + f"-steps{n_steps}" \
+        + ("-sampled" if sampled else "")
+    g = OpGraph(name, input_bytes=float(d.batch * 4) * n_steps)
+    prev_attns: list[str] | None = None
+    prev_head: str | None = None
+    for s in range(n_steps):
+        head, attns = _add_decode_step(
+            g, d, protos, kv_home=kv_home, expert_shards=expert_shards,
+            sfx=f"/s{s}", prev_attns=prev_attns,
+            prev_head=prev_head if sampled else None)
+        prev_attns, prev_head = attns, head
+    return g
+
+
+def expert_parallel_plan(graph: OpGraph, topology, *, source: str = "xeon",
+                         sink: str = "xeon",
+                         objective: str = "overlapped"):
+    """Construct (rather than search for) the expert-parallel plan of an
+    `expert_shards`-sharded decode DAG under a multi-rank
+    `placement.Topology`.
+
+    The serial and overlapped objectives sum launch groups one after
+    another, so rank concurrency — which only shows up in the pipelined
+    event simulation — never improves the scores the planner ladder
+    searches by, and the ladder keeps every expert shard on one rank.
+    This helper encodes the placement the topology is FOR: plan the
+    single-rank placement as usual, then rotate each PIM-placed expert
+    shard j (`stage_shard`) onto rank `j % n_ranks`. Shard stage-ins,
+    launches, and exchanges then land on per-rank channels, and the
+    pipelined timeline prices the rank-parallel win
+    (benchmarks/dispatch_bench.py sweep 8 gates it strictly beating the
+    single-rank plan). Returns an `evaluate`d Plan (method
+    `"expert-parallel"`); shards the base plan kept on the host stay
+    there."""
+    from .placement import _is_pim, evaluate
+    from .placement import plan as plan_placement
+    base = plan_placement(graph, devices=(source, topology.base),
+                          source=source, sink=sink, objective=objective)
+    assignment = dict(base.assignment)
+    for n in assignment:
+        j = stage_shard(n)
+        if j is not None and _is_pim(assignment[n]):
+            assignment[n] = topology.rank_device(j % topology.n_ranks)
+    return evaluate(graph, assignment, topology.dpu, source, sink,
+                    method="expert-parallel")
 
 
 # ---------------------------------------------------------------------------
@@ -605,11 +780,37 @@ def parse_stage_name(name: str) -> tuple[str, int | None, int | None]:
     decode names are `"{kind}{layer}"` (`"qkv3"` -> `("qkv", 3, None)`),
     prefill names append the chunk (`"attn2/c1"` -> `("attn", 2, 1)`),
     and the unnumbered stages parse as `("embed", None, ...)` /
-    `("head", None, None)`."""
-    base, _, c = name.partition("/c")
+    `("head", None, None)`. Two optional suffixes extend the grammar to
+    `"{kind}{layer}[@r{shard}][/c{chunk}][/s{step}]"`: expert-parallel
+    shard DAGs append `"@r{shard}"` (`decode_dag(expert_shards=...)`;
+    recover it with `stage_shard`) and cross-step DAGs append
+    `"/s{step}"` (`decode_steps_dag`; recover it with `stage_step`) —
+    both are stripped here, so (kind, layer, chunk) routing is
+    shard/step-agnostic."""
+    base, _, _s = name.partition("/s")
+    base, _, c = base.partition("/c")
+    base, _, _r = base.partition("@r")
     kind = base.rstrip("0123456789")
     layer = int(base[len(kind):]) if len(base) > len(kind) else None
     return kind, layer, (int(c) if c else None)
+
+
+def stage_shard(name: str) -> int | None:
+    """The expert-parallel shard index of a stage name (`"expert1@r2"` ->
+    2; None for unsharded stages) — which slice of the expert stack the
+    node computes, and which topology rank `expert_parallel_plan` places
+    it on."""
+    base, _, _s = name.partition("/s")
+    base, _, _c = base.partition("/c")
+    _, _, r = base.partition("@r")
+    return int(r) if r else None
+
+
+def stage_step(name: str) -> int | None:
+    """The cross-step index of a `decode_steps_dag` stage name
+    (`"qkv3/s1"` -> 1; None outside step-unrolled DAGs)."""
+    _, _, s = name.partition("/s")
+    return int(s) if s else None
 
 
 def stage_kind(name: str) -> str:
@@ -890,6 +1091,11 @@ def prim_graph(c: WorkloadCounts) -> OpGraph:
 #: planner device sets the shipped goldens were pinned under
 _TWO_DEV = ("xeon", "upmem_2556")
 _THREE_DEV = ("xeon", "titan_v", "upmem_2556")
+#: multi-rank device sets (ISSUE-9): rank 0 is the bare base name, so the
+#: single-rank placements inside them are the exact pre-topology plans
+_RANKED_2 = ("xeon", "upmem_2556", "upmem_2556:1")
+_RANKED_4 = ("xeon", "upmem_2556", "upmem_2556:1", "upmem_2556:2",
+             "upmem_2556:3")
 
 #: paper-scale prefill golden shape: 2 chunks keeps the cross-chunk
 #: frontier inside the exact frontier-DP rung (DESIGN.md §10); the
@@ -945,6 +1151,20 @@ def shipped_graphs() -> dict:
         "lm-moe-prefill-dag-int8-reduced": (
             lambda: prefill_dag(MOE_REDUCED_DIMS_INT8, prefill_len=8,
                                 chunk=4), _TWO_DEV),
+        # ISSUE-9: multi-rank scale-out — expert-parallel shard DAGs
+        # planned over rank-qualified device sets (per-rank channels),
+        # and cross-step pipelining (2 decode steps, scoring contract)
+        "lm-moe-decode-dag-reduced-ep2": (
+            lambda: moe_decode_dag(MOE_REDUCED_DIMS, expert_shards=2),
+            _RANKED_2),
+        "lm-moe-decode-dag-int8-reduced-ep4": (
+            lambda: moe_decode_dag(MOE_REDUCED_DIMS_INT8, expert_shards=4),
+            _RANKED_4),
+        "lm-decode-steps-dag-reduced": (
+            lambda: decode_steps_dag(REDUCED_DIMS, n_steps=2), _TWO_DEV),
+        "lm-moe-decode-steps-int8-reduced": (
+            lambda: decode_steps_dag(MOE_REDUCED_DIMS_INT8, n_steps=2),
+            _TWO_DEV),
     }
     for counts in prim.all_ref_counts():
         builders[f"prim/{counts.name}"] = (

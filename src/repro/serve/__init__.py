@@ -27,4 +27,5 @@ from .engine import (Request, ServeEngine, make_decode_step,
                      make_prefill_step, sample)
 from .gateway import (PRIORITIES, AdmissionQueue, Gateway, GatewayRequest,
                       GatewayStats, ManualClock, PricedPlan,
-                      percentile, poisson_requests)
+                      load_arrival_trace, percentile, poisson_requests,
+                      save_arrival_trace)

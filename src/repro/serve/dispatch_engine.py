@@ -201,28 +201,54 @@ class _MoeStageMixin:
             StageDef("combine", self._combine_fn, (ta,) * 5, (ta,)),
         ]
 
+    #: expert-parallel shard count (rank-sharded expert faces); decode
+    #: overrides per instance, prefill keeps the unsharded default
+    expert_shards: int = 1
+
+    def _expert_out(self, env, i, chunk: str):
+        """The (B, E, C, D) expert-output buffer the combine gathers from:
+        the single expert face's output, or the R rank shards' outputs
+        reassembled along the expert axis (exact — experts compute
+        independently, so concatenation is the unsharded buffer)."""
+        if self.expert_shards == 1:
+            return env[f"expert{i}{chunk}"]
+        return jnp.concatenate(
+            [env[f"expert{i}@r{j}{chunk}"]
+             for j in range(self.expert_shards)], axis=1)
+
     def _bind_moe(self, name, env, lp, chunk: str = ""):
         """Argument tuples for the MoE stages (decode names have no
-        `chunk` suffix; prefill passes `"/c{c}"`)."""
+        `chunk` suffix; prefill passes `"/c{c}"`). Expert-parallel shard
+        stages (`"expert{i}@r{j}"`) get their slice of the dispatch
+        buffer and the expert-axis weight stacks — shard j computes
+        experts `[j*E/R, (j+1)*E/R)`, matching the DAG's per-shard
+        cost/exchange split."""
         kind, i, _ = workloads.parse_stage_name(name)
         mp = lp[i]["mlp"]
         if kind == "router":
             return env[f"o{i}{chunk}"], lp[i]["ln2"], mp["router"]
         if kind == "expert":
             buf = env[f"router{i}{chunk}"][0]
+            j = workloads.stage_shard(name)
+            sl = slice(None)
+            if j is not None:
+                es = self.cfg.n_experts // self.expert_shards
+                sl = slice(j * es, (j + 1) * es)
+                buf = buf[:, sl]
             if getattr(self.cfg, "quant", "") == "int8":
                 q = self._q8_layers[i]
-                wuq, su = q["wu"]
-                wdq, sd = q["wd"]
+                wuq, su = (w[sl] for w in q["wu"])
+                wdq, sd = (w[sl] for w in q["wd"])
                 if self.cfg.gated_mlp:
-                    wgq, sg = q["wg"]
+                    wgq, sg = (w[sl] for w in q["wg"])
                     return buf, wuq, su, wgq, sg, wdq, sd
                 return buf, wuq, su, wdq, sd
-            return ((buf, mp["wu"], mp["wg"], mp["wd"])
-                    if self.cfg.gated_mlp else (buf, mp["wu"], mp["wd"]))
+            return ((buf, mp["wu"][sl], mp["wg"][sl], mp["wd"][sl])
+                    if self.cfg.gated_mlp
+                    else (buf, mp["wu"][sl], mp["wd"][sl]))
         if kind == "combine":
             _, topi, pos, w = env[f"router{i}{chunk}"]
-            return (env[f"o{i}{chunk}"], env[f"expert{i}{chunk}"],
+            return (env[f"o{i}{chunk}"], self._expert_out(env, i, chunk),
                     topi, pos, w)
         raise KeyError(f"unknown MoE stage {name!r}")
 
@@ -249,6 +275,7 @@ class DispatchDecodeStep(_MoeStageMixin):
                  devices: tuple[str, ...] = ("xeon", "upmem_2556"),
                  kv_home: str | None = "upmem_2556",
                  objective: str = "serial",
+                 expert_shards: int = 1,
                  force_assignment: dict[str, str] | None = None):
         _check_dispatchable(cfg, shd)
         self.cfg, self.shd = cfg, shd
@@ -257,8 +284,10 @@ class DispatchDecodeStep(_MoeStageMixin):
         if batch_slots % self.grid.n_banks:
             raise ValueError(f"batch_slots={batch_slots} must divide over "
                              f"{self.grid.n_banks} bank(s)")
+        self.expert_shards = int(expert_shards)
         self.dag = workloads.decode_dag(
-            dims_for_config(cfg, batch_slots, max_len), kv_home=kv_home)
+            dims_for_config(cfg, batch_slots, max_len), kv_home=kv_home,
+            expert_shards=self.expert_shards)
         self.plan: Plan = plan_placement(self.dag, devices=devices,
                                          objective=objective)
         self.assignment = dict(self.plan.assignment)
@@ -269,12 +298,17 @@ class DispatchDecodeStep(_MoeStageMixin):
         # back to host execution (which the token-identity tests could
         # never distinguish from a correctly routed plan)
         self._moe = cfg.n_experts > 0
-        mlp_kinds = (("router", "expert", "combine") if self._moe
-                     else ("mlp",))
         expected = {"embed", "head"}
         for i in range(cfg.n_blocks):
             expected |= {f"qkv{i}", f"attn{i}", f"o{i}"}
-            expected |= {f"{kd}{i}" for kd in mlp_kinds}
+            if not self._moe:
+                expected.add(f"mlp{i}")
+            elif self.expert_shards > 1:
+                expected |= {f"router{i}", f"combine{i}"}
+                expected |= {f"expert{i}@r{j}"
+                             for j in range(self.expert_shards)}
+            else:
+                expected |= {f"router{i}", f"expert{i}", f"combine{i}"}
         missing = expected - set(self.assignment)
         if missing:
             raise ValueError(f"plan is missing stages {sorted(missing)}; "

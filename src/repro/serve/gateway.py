@@ -14,7 +14,9 @@ prefill injects. `Gateway` is that layer (DESIGN.md §14):
     raise `ValueError`).
   * **Plan cache** — planner products keyed by *batch signature*
     (`dispatch.plan_cache.batch_signature`: live-slot count, bucketed
-    KV length, chunk splits). The gateway prices every decode step and
+    KV length, chunk splits, channel-topology shape — plans priced
+    under different rank counts never alias). The gateway prices every
+    decode step and
     every candidate admission through one `PlanCache`, so planner
     solves amortize as slot composition churns — the gateway bench
     gates >80% hit rate at steady state.
@@ -39,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import json
 import math
 import random
 import time
@@ -310,7 +313,8 @@ class Gateway:
         shared until composition churns out of the bucket."""
         n_live = max(1, self.engine.n_slots - self.engine.n_free)
         key = batch_signature(n_live, self._positions(),
-                              pos_bucket=self.pos_bucket)
+                              pos_bucket=self.pos_bucket,
+                              topology=self.devices)
         return self.plans.get_or_plan(
             key, lambda: self._price_decode(n_live, key[2]))
 
@@ -335,7 +339,8 @@ class Gateway:
         prompts sharing a chunk grid share one planner solve."""
         splits = self.engine.prefill_splits(plen)
         key = batch_signature(1, splits=splits, phase="prefill",
-                              pos_bucket=self.pos_bucket)
+                              pos_bucket=self.pos_bucket,
+                              topology=self.devices)
         return self.plans.get_or_plan(
             key, lambda: self._price_prefill(splits)).priced_s
 
@@ -361,7 +366,8 @@ class Gateway:
             for hi in range(self.pos_bucket, self.engine.max_len +
                             self.pos_bucket, self.pos_bucket):
                 key = batch_signature(n_live, (hi - 1,),
-                                      pos_bucket=self.pos_bucket)
+                                      pos_bucket=self.pos_bucket,
+                                      topology=self.devices)
                 self.plans.get_or_plan(
                     key, lambda n=n_live, k=key[2]:
                         self._price_decode(n, k))
@@ -576,4 +582,53 @@ def poisson_requests(n: int, rate_rps: float, *, seed: int = 0,
             max_new_tokens=rng.randint(*max_new),
             priority=rng.choices(list(priorities), list(weights))[0],
             arrival_s=t))
+    return out
+
+
+def save_arrival_trace(path, requests: Sequence[GatewayRequest]) -> int:
+    """Write an arrival trace: one JSON record per line with the
+    workload SHAPE of each request — `arrival_s` (seconds from run
+    start), `prompt_len`, `max_new`, and the priority `class` name
+    (`PRIORITIES`). Prompt token ids are deliberately not recorded: a
+    trace captures traffic (what production logs give you), not
+    content, and `load_arrival_trace` resynthesizes tokens from a seed.
+    Returns the number of records written."""
+    with open(path, "w") as f:
+        for g in requests:
+            f.write(json.dumps({
+                "arrival_s": float(g.arrival_s),
+                "prompt_len": int(g.prompt.shape[0]),
+                "max_new": int(g.max_new_tokens),
+                "class": PRIORITIES[g.priority]}) + "\n")
+    return len(requests)
+
+
+def load_arrival_trace(path, *, seed: int = 0,
+                       vocab: int = 128) -> list[GatewayRequest]:
+    """Load an arrival trace written by `save_arrival_trace` (or by
+    hand: JSONL of `{"arrival_s", "prompt_len", "max_new", "class"}`,
+    blank lines and `#` comments skipped; `class` is a `PRIORITIES`
+    name or an integer index). Prompt tokens are drawn deterministically
+    from `random.Random(seed)`, so one (trace, seed) pair replays the
+    same workload byte-for-byte — the gateway determinism gate extended
+    to file-based traffic. Requests are re-ridded 0..n-1 in file
+    order."""
+    rng = random.Random(seed)
+    out: list[GatewayRequest] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            rec = json.loads(line)
+            cls = rec["class"]
+            prompt = jnp.asarray(
+                [rng.randrange(vocab) for _ in range(int(rec["prompt_len"]))],
+                jnp.int32)
+            out.append(GatewayRequest(
+                rid=len(out), prompt=prompt,
+                max_new_tokens=int(rec["max_new"]),
+                priority=(PRIORITIES.index(cls) if isinstance(cls, str)
+                          else int(cls)),
+                arrival_s=float(rec["arrival_s"])))
     return out

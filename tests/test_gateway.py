@@ -81,7 +81,7 @@ def test_queue_validates_args():
 def test_batch_signature_buckets_positions():
     a = batch_signature(2, (5, 9), pos_bucket=16)
     b = batch_signature(2, (3, 15), pos_bucket=16)
-    assert a == b == ("decode", 2, 16, ())
+    assert a == b == ("decode", 2, 16, (), ())
     # crossing a bucket boundary changes the key; so do live count
     # and chunk splits
     assert batch_signature(2, (16,), pos_bucket=16)[2] == 32
@@ -89,9 +89,27 @@ def test_batch_signature_buckets_positions():
     assert batch_signature(2, (5,), pos_bucket=16,
                            splits=(4, 4)) != a
     assert batch_signature(1, splits=(4, 2), phase="prefill") == \
-        ("prefill", 1, 64, (4, 2))
+        ("prefill", 1, 64, (4, 2), ())
     with pytest.raises(ValueError):
         batch_signature(1, (), pos_bucket=0)
+
+
+def test_batch_signature_keys_on_topology():
+    """ISSUE-9 regression: plans priced under different channel
+    topologies must never alias in the plan cache — same batch shape,
+    different rank count, different key."""
+    from repro.dispatch.placement import Topology
+    t1, t4 = Topology(n_ranks=1), Topology(n_ranks=4)
+    a1 = batch_signature(2, (5,), pos_bucket=16, topology=t1)
+    a4 = batch_signature(2, (5,), pos_bucket=16, topology=t4)
+    assert a1 != a4
+    assert a1[-1] == ("upmem_2556", 1) and a4[-1] == ("upmem_2556", 4)
+    # a raw signature tuple keys identically to the Topology it came from
+    assert batch_signature(2, (5,), pos_bucket=16,
+                           topology=t4.signature) == a4
+    # stable across equal topologies (frozen dataclass, pure shape key)
+    assert batch_signature(2, (5,), pos_bucket=16,
+                           topology=Topology(n_ranks=4)) == a4
 
 
 def test_plan_cache_hits_misses_evictions():
@@ -246,6 +264,53 @@ def test_gateway_seeded_poisson_deterministic(setup):
     other = poisson_requests(6, 80.0, seed=22, vocab=cfg.vocab_size)
     base = poisson_requests(6, 80.0, seed=21, vocab=cfg.vocab_size)
     assert [g.arrival_s for g in other] != [g.arrival_s for g in base]
+
+
+def test_arrival_trace_round_trip(setup, tmp_path):
+    """ISSUE-9 satellite: a saved arrival trace (timestamp, prompt_len,
+    max_new, class — no token content) round-trips through the file and
+    drives a gateway run deterministically: same (trace, seed) pair,
+    same completed tokens and timestamps."""
+    cfg, params = setup
+    from repro.serve import load_arrival_trace, save_arrival_trace
+    path = tmp_path / "arrivals.jsonl"
+    reqs = poisson_requests(6, 80.0, seed=21, vocab=cfg.vocab_size,
+                            prompt_lens=(3, 8), max_new=(2, 5))
+    assert save_arrival_trace(path, reqs) == 6
+    loaded = load_arrival_trace(path, seed=9, vocab=cfg.vocab_size)
+    # the workload shape survives the file byte-for-byte
+    assert [g.arrival_s for g in loaded] == [g.arrival_s for g in reqs]
+    assert [int(g.prompt.shape[0]) for g in loaded] == \
+        [int(g.prompt.shape[0]) for g in reqs]
+    assert [g.max_new_tokens for g in loaded] == \
+        [g.max_new_tokens for g in reqs]
+    assert [g.priority for g in loaded] == [g.priority for g in reqs]
+
+    def one_run():
+        gw = _gateway(cfg, params, queue_capacity=16)
+        stats = gw.run(load_arrival_trace(path, seed=9,
+                                          vocab=cfg.vocab_size))
+        return ({g.rid: g.out_tokens for g in gw.finished},
+                {g.rid: (g.arrival_s, tuple(g.token_times))
+                 for g in gw.finished}, stats.completed)
+
+    a = one_run()
+    assert a == one_run() and a[2] == 6
+    # a different token seed replays the same traffic, different content
+    alt = load_arrival_trace(path, seed=10, vocab=cfg.vocab_size)
+    assert [g.arrival_s for g in alt] == [g.arrival_s for g in reqs]
+    assert any(g.prompt.tolist() != h.prompt.tolist()
+               for g, h in zip(alt, loaded))
+    # hand-written traces: comments, blanks, integer class indices
+    path2 = tmp_path / "hand.jsonl"
+    path2.write_text(
+        "# fleet replay\n\n"
+        '{"arrival_s": 0.5, "prompt_len": 4, "max_new": 2, "class": 0}\n'
+        '{"arrival_s": 1.0, "prompt_len": 3, "max_new": 3,'
+        ' "class": "batch"}\n')
+    hand = load_arrival_trace(path2, vocab=cfg.vocab_size)
+    assert [(g.rid, g.arrival_s, g.priority) for g in hand] == \
+        [(0, 0.5, 0), (1, 1.0, 2)]
 
 
 def test_gateway_plan_cache_hit_rate_across_churn(setup):

@@ -90,7 +90,12 @@ def _cases():
                  "lm-moe-decode-dag-reduced", "lm-moe-prefill-dag",
                  "lm-moe-prefill-dag-reduced", "lm-moe-decode-dag-int8",
                  "lm-moe-decode-dag-int8-reduced", "lm-moe-prefill-dag-int8",
-                 "lm-moe-prefill-dag-int8-reduced"):
+                 "lm-moe-prefill-dag-int8-reduced",
+                 # ISSUE-9: multi-rank device sets + cross-step DAGs
+                 "lm-moe-decode-dag-reduced-ep2",
+                 "lm-moe-decode-dag-int8-reduced-ep4",
+                 "lm-decode-steps-dag-reduced",
+                 "lm-moe-decode-steps-int8-reduced"):
         cases[f"{name}@overlapped"] = (name, "overlapped")
     return cases
 

@@ -23,9 +23,13 @@ exchange-annotated variants (`OpGraph.annotate_exchange`, ISSUE-5: MoE
 token routing) additionally mark random edges as host-relayed bank
 exchanges and re-run the same brute-force equalities through every rung,
 plus the overlapped-objective guarantee (never worse than scheduling the
-serial-ladder seed) on exchange DAGs. A deterministic seeded sweep
-always runs; when `hypothesis` is installed the same properties are
-additionally fuzzed over its search space.
+serial-ladder seed) on exchange DAGs. The multi-rank variants (ISSUE-9)
+re-run the exchange batteries over RANK-QUALIFIED device sets
+(`("xeon", "upmem_2556", "upmem_2556:1")`): topology-priced transfers —
+per-rank channels, cross-rank pim->pim host relays — must stay exact
+through every rung and keep the scheduling invariants. A deterministic
+seeded sweep always runs; when `hypothesis` is installed the same
+properties are additionally fuzzed over its search space.
 """
 
 from __future__ import annotations
@@ -110,25 +114,25 @@ def annotate_exchanges(g: OpGraph, rng: random.Random,
     return g
 
 
-def brute_force_cost(g: OpGraph) -> float:
-    devices, dpu = _resolve(DEVICES)
+def brute_force_cost(g: OpGraph, device_set=DEVICES) -> float:
+    devices, dpu = _resolve(device_set)
     names = list(g.nodes)
     return min(
         evaluate(g, dict(zip(names, combo)), dpu).total_s
         for combo in itertools.product(devices, repeat=len(names)))
 
 
-def _check_chain(g: OpGraph):
-    best = brute_force_cost(g)
-    p = plan(g, devices=DEVICES)
+def _check_chain(g: OpGraph, device_set=DEVICES):
+    best = brute_force_cost(g, device_set)
+    p = plan(g, devices=device_set)
     assert p.method == "dp"
     assert p.total_s == pytest.approx(best, rel=_REL)
 
 
-def _check_dag(g: OpGraph):
-    best = brute_force_cost(g)
-    exact = plan(g, devices=DEVICES)
-    greedy = greedy_plan(g, devices=DEVICES)
+def _check_dag(g: OpGraph, device_set=DEVICES):
+    best = brute_force_cost(g, device_set)
+    exact = plan(g, devices=device_set)
+    greedy = greedy_plan(g, devices=device_set)
     if not g.is_chain:
         assert exact.method == "dag-dp"
     assert exact.total_s == pytest.approx(best, rel=_REL)
@@ -136,8 +140,8 @@ def _check_dag(g: OpGraph):
     assert greedy.total_s <= GREEDY_BOUND * exact.total_s
 
 
-def brute_force_overlapped_cost(g: OpGraph) -> float:
-    devices, dpu = _resolve(DEVICES)
+def brute_force_overlapped_cost(g: OpGraph, device_set=DEVICES) -> float:
+    devices, dpu = _resolve(device_set)
     names = list(g.nodes)
     return min(
         make_schedule(g, evaluate(g, dict(zip(names, combo)), dpu),
@@ -145,33 +149,33 @@ def brute_force_overlapped_cost(g: OpGraph) -> float:
         for combo in itertools.product(devices, repeat=len(names)))
 
 
-def _check_chain_overlapped(g: OpGraph):
+def _check_chain_overlapped(g: OpGraph, device_set=DEVICES):
     """ISSUE-4 satellite: for chains, `objective="overlapped"` is planned
     exactly by the group-aggregate DP — equal to brute force over every
     assignment's `Schedule.overlapped_s`, never worse than the coordinate
     descent general DAGs use, and self-consistent with the scheduler."""
-    best = brute_force_overlapped_cost(g)
-    p = plan(g, devices=DEVICES, objective="overlapped")
+    best = brute_force_overlapped_cost(g, device_set)
+    p = plan(g, devices=device_set, objective="overlapped")
     assert p.method == "dp-overlap"
     assert p.objective == "overlapped"
     assert p.overlapped_s == pytest.approx(best, rel=_REL)
-    devices, dpu = _resolve(DEVICES)
+    devices, dpu = _resolve(device_set)
     assert p.overlapped_s == pytest.approx(
         make_schedule(g, p, dpu).overlapped_s, rel=_REL)
-    cd = _refine_overlapped(g, plan(g, devices=DEVICES).assignment,
+    cd = _refine_overlapped(g, plan(g, devices=device_set).assignment,
                             devices, dpu, "xeon", "xeon", "dp")
     assert p.overlapped_s <= cd.overlapped_s * (1 + _REL)
 
 
-def _check_bnb(g: OpGraph):
-    devices, dpu = _resolve(DEVICES)
-    best = brute_force_cost(g)
+def _check_bnb(g: OpGraph, device_set=DEVICES):
+    devices, dpu = _resolve(device_set)
+    best = brute_force_cost(g, device_set)
     ample = evaluate(g, _plan_dag_bnb(g, devices, dpu, "xeon", "xeon",
                                       10 ** 6), dpu)
     assert ample.total_s == pytest.approx(best, rel=_REL)
     starved = evaluate(g, _plan_dag_bnb(g, devices, dpu, "xeon", "xeon", 1),
                        dpu)
-    assert starved.total_s <= greedy_plan(g, devices=DEVICES).total_s \
+    assert starved.total_s <= greedy_plan(g, devices=device_set).total_s \
         * (1 + _REL)
 
 
@@ -319,6 +323,77 @@ def test_dtype_tagged_dag_pipelined_never_worse_than_overlapped(seed):
     assert sched.pipelined_s <= sched.overlapped_s + 1e-15
 
 
+# ------------------------------------------------------------------ #
+# multi-rank topologies (ISSUE-9): rank-qualified devices through
+# every rung — transfers and exchanges priced per rank channel
+# ------------------------------------------------------------------ #
+
+#: two ranks of one UPMEM base behind a host: rank 0 is the bare name,
+#: rank 1 its `:1`-qualified twin (`placement.Topology` naming). The
+#: generators' kv homes still sample `DEVICES`, so placements on rank 1
+#: exercise cross-rank pim->pim crossings (retrieve + push, host relay)
+RANKED_DEVICES = ("xeon", "upmem_2556", "upmem_2556:1")
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_ranked_chain_dp_equals_brute_force(seed):
+    """ISSUE-9: exchange-annotated chains over rank-qualified devices
+    stay exact under the chain DP — topology-priced transfers (per-rank
+    channels, cross-rank host relays) are part of the transition cost
+    like any other term."""
+    rng = random.Random(16_000 + seed)
+    _check_chain(annotate_exchanges(make_chain(rng), rng),
+                 device_set=RANKED_DEVICES)
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_ranked_dag_exact_equals_brute_force_and_bounds_greedy(seed):
+    """ISSUE-9: exchange-annotated DAGs through the frontier-DP rung
+    with a 2-rank device set — equal to brute force over every (device,
+    rank) placement, never worse than greedy."""
+    rng = random.Random(17_000 + seed)
+    _check_dag(annotate_exchanges(make_dag(rng), rng),
+               device_set=RANKED_DEVICES)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_ranked_bnb_exact_when_budgeted(seed):
+    """ISSUE-9: the branch-and-bound rung over rank-qualified devices
+    (ample budget == brute force; starved stays greedy-or-better)."""
+    rng = random.Random(18_000 + seed)
+    _check_bnb(annotate_exchanges(make_dag(rng, max_nodes=6), rng),
+               device_set=RANKED_DEVICES)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_ranked_chain_overlapped_dp_equals_brute_force(seed):
+    """ISSUE-9: the exact overlapped chain DP with ranks in the device
+    set — equal to brute force over every assignment's
+    `Schedule.overlapped_s`, self-consistent with the scheduler's
+    per-rank channel accounting."""
+    rng = random.Random(19_000 + seed)
+    _check_chain_overlapped(
+        annotate_exchanges(make_chain(rng, max_nodes=5), rng),
+        device_set=RANKED_DEVICES)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_ranked_dag_pipelined_never_worse_than_overlapped(seed):
+    """ISSUE-9: on ranked exchange DAGs the overlapped objective never
+    loses to the serial seed, and the pipelined event sim (one transfer
+    channel PER RANK) never loses to the serialized groups — the
+    scheduling invariants survive multi-rank topologies."""
+    rng = random.Random(20_000 + seed)
+    g = annotate_exchanges(make_dag(rng, dtype_tagged=True), rng)
+    devices, dpu = _resolve(RANKED_DEVICES)
+    serial = plan(g, devices=RANKED_DEVICES)
+    over = plan(g, devices=RANKED_DEVICES, objective="overlapped")
+    assert over.overlapped_s <= \
+        make_schedule(g, serial, dpu).overlapped_s * (1 + _REL) + 1e-15
+    sched = make_schedule(g, over, dpu, pipelined=True)
+    assert sched.pipelined_s <= sched.overlapped_s + 1e-15
+
+
 def test_chain_overlapped_dp_beats_descent_on_shipped_chains():
     """The ISSUE-4 satellite acceptance on every SHIPPED chain graph: the
     exact group-aggregate DP never scores worse than the coordinate
@@ -396,3 +471,18 @@ if HAVE_HYPOTHESIS:
     def test_hyp_dtype_tagged_chain_overlapped_dp_equals_brute_force(seed):
         _check_chain_overlapped(make_chain(random.Random(seed), max_nodes=4,
                                            dtype_tagged=True))
+
+    @_cases
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_hyp_ranked_dag_exact_equals_brute_force(seed):
+        _check_dag(annotate_exchanges(make_dag(random.Random(seed)),
+                                      random.Random(seed)),
+                   device_set=RANKED_DEVICES)
+
+    @_cases
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_hyp_ranked_chain_overlapped_dp_equals_brute_force(seed):
+        _check_chain_overlapped(
+            annotate_exchanges(make_chain(random.Random(seed), max_nodes=4),
+                               random.Random(seed)),
+            device_set=RANKED_DEVICES)

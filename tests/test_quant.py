@@ -102,6 +102,30 @@ def test_quant_dispatch_decode_token_identical_to_jit(setup_q8):
     assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
 
 
+def test_quant_dispatch_expert_sharded_decode_token_identical(setup_q8):
+    """ISSUE-9 under int8: expert-sharded decode (`expert_shards=2`, rank
+    shards forced onto per-rank devices) slices the quantized expert
+    weight STACKS (int8 weights + scales) per shard and must stay
+    exact-integer identical to the quantized fused engine — shard
+    slicing cannot change the int32 accumulation order within an
+    expert."""
+    cfg, params = setup_q8
+    prompts = _prompts(cfg, 6, jax.random.PRNGKey(17))
+    forced = {}
+    for i in range(cfg.n_blocks):
+        forced[f"expert{i}@r0"] = "upmem_2556"
+        forced[f"expert{i}@r1"] = "upmem_2556:1"
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(
+        cfg, params, batch_slots=2, max_len=48, shd=SHD, engine="dispatch",
+        dispatch_kwargs={"expert_shards": 2,
+                         "devices": ("xeon", "upmem_2556", "upmem_2556:1"),
+                         "force_assignment": forced,
+                         "prefill_engine": "jit"})
+    assert dis_eng._decode.dag.name == "lm-moe-decode-dag-int8-ep2"
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
 def test_quant_dispatch_single_chunk_prefill_token_identical(setup_q8):
     """Quantized dispatch prefill in one chunk (capacity == fused
     whole-prompt capacity) + quantized dispatch decode, against the fully

@@ -332,6 +332,39 @@ def test_dispatch_moe_forced_expert_pim_token_identical(setup_moe,
     assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
 
 
+def test_dispatch_moe_expert_sharded_decode_token_identical(setup_moe):
+    """ISSUE-9 rank-sharded expert faces: decode with `expert_shards=2`
+    builds the expert-parallel DAG (shard nodes `expert{i}@r{j}`, each
+    owning E/R experts), pins shard j on rank j's device, and must stay
+    token-for-token identical to the fused engine — the combine
+    reassembles the rank shards' outputs along the expert axis, which is
+    exact because experts compute independently. The forced per-rank
+    placement makes the executor stage each shard's boundary transfers
+    per rank device, the executable twin of the schedule's per-rank
+    channels."""
+    cfg, params = setup_moe
+    prompts = _prompts(cfg, 6, jax.random.PRNGKey(17))
+    forced = {}
+    for i in range(cfg.n_blocks):
+        forced[f"expert{i}@r0"] = "upmem_2556"
+        forced[f"expert{i}@r1"] = "upmem_2556:1"
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD)
+    dis_eng = ServeEngine(
+        cfg, params, batch_slots=2, max_len=48, shd=SHD, engine="dispatch",
+        dispatch_kwargs={"expert_shards": 2,
+                         "devices": ("xeon", "upmem_2556", "upmem_2556:1"),
+                         "force_assignment": forced,
+                         "prefill_engine": "jit"})
+    dag = dis_eng._decode.dag
+    # the sharded ladder: per-shard exchange edges, no fused expert node
+    assert "expert0@r0" in dag.nodes and "expert0@r1" in dag.nodes
+    assert "expert0" not in dag.nodes
+    assert ("router0", "expert0@r1") in dag.exchange_edges
+    assert ("expert0@r1", "combine0") in dag.exchange_edges
+    assert dis_eng._decode.assignment["expert0@r1"] == "upmem_2556:1"
+    assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
+
+
 def test_dispatch_moe_single_chunk_prefill_token_identical(setup_moe):
     """Dispatch MoE prefill in ONE chunk covers the whole prompt, so the
     per-chunk expert capacity equals the fused whole-prompt capacity and

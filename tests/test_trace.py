@@ -176,14 +176,50 @@ def test_trace_helpers():
 # ------------------------------------------------------------------ #
 
 def test_channel_events_are_mutually_exclusive(rich_traces):
-    """ONE shared transfer channel: no two channel spans overlap."""
+    """One transfer channel PER RANK: within any `channel*` resource
+    (the shared single-rank `"channel"` or a rank's `"channel:r"`), no
+    two spans overlap."""
     for name, (_, _, t) in rich_traces.items():
-        chan = sorted((e for e in t.events if e.resource == "channel"),
-                      key=lambda e: (e.t0, e.t1))
-        assert chan, name
-        for a, b in zip(chan, chan[1:]):
+        chans = [r for r in t.resources() if r.startswith("channel")]
+        assert chans, name
+        for res in chans:
+            chan = sorted((e for e in t.events if e.resource == res),
+                          key=lambda e: (e.t0, e.t1))
+            for a, b in zip(chan, chan[1:]):
+                assert b.t0 >= a.t1 - EPS, \
+                    f"{name}/{res}: {a.kind}:{a.name} overlaps " \
+                    f"{b.kind}:{b.name}"
+
+
+def test_per_rank_channels_exclusive_on_multi_rank_plan():
+    """ISSUE-9: a 2-rank expert-parallel placement stages each rank's
+    traffic on its own channel resource. Every rank channel is itself a
+    serial queue (per-rank exclusivity), BOTH rank channels carry
+    spans (the rank-parallel transfers the speedup comes from), and the
+    per-rank replay round trip reproduces the prediction exactly."""
+    from repro.dispatch.placement import Topology, evaluate
+    topo = Topology(n_ranks=2)
+    g = workloads.moe_decode_dag(workloads.MOE_REDUCED_DIMS_INT8,
+                                 expert_shards=2)
+    assignment = dict(pure_plan(g, "upmem_2556").assignment)
+    for n in g.nodes:
+        j = workloads.stage_shard(n)
+        if j is not None:
+            assignment[n] = topo.rank_device(j % topo.n_ranks)
+    p = evaluate(g, assignment, topo.dpu, method="expert-parallel")
+    t = modeled_trace(g, p)
+    chans = sorted(r for r in t.resources() if r.startswith("channel"))
+    assert chans == ["channel", "channel:1"]
+    for res in chans:
+        evs = sorted((e for e in t.events if e.resource == res),
+                     key=lambda e: (e.t0, e.t1))
+        assert evs, res
+        for a, b in zip(evs, evs[1:]):
             assert b.t0 >= a.t1 - EPS, \
-                f"{name}: {a.kind}:{a.name} overlaps {b.kind}:{b.name}"
+                f"{res}: {a.kind}:{a.name} overlaps {b.kind}:{b.name}"
+    fid = fidelity(g, p)
+    assert fid.ok
+    assert fid.replayed_s == pytest.approx(fid.predicted_s, rel=1e-12)
 
 
 def test_per_device_spans_are_serial(rich_traces):
@@ -191,7 +227,7 @@ def test_per_device_spans_are_serial(rich_traces):
     overlap each other."""
     for name, (_, _, t) in rich_traces.items():
         for res in t.resources():
-            if res == "channel":
+            if res.startswith("channel"):
                 continue
             evs = sorted((e for e in t.events if e.resource == res),
                          key=lambda e: (e.t0, e.t1))
