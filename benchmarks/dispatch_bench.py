@@ -39,6 +39,12 @@ Three sweeps over `repro.dispatch`:
      pipelined wall-clock AND survive the per-rank replay fidelity
      gate; plus cross-step pipelining — the 2-step scoring DAG beats 2x
      the single-step wall-clock by overlapping across the step boundary.
+  9. Long-context sliding-window attention (ISSUE-10): the SAME model
+     priced windowed (32k prompt, 4k ring-buffer window) vs as its
+     full-attention twin — the windowed decode plan (ring-sized KV
+     protos/migration) and the BANDED prefill DAG (dead cross-chunk KV
+     edges dropped) must each STRICTLY beat the full-attention plan,
+     with replay error through the fidelity gate.
 
 Every sweep row also reports the planner-fidelity round trip
 (`replay err %`): the plan's predicted `pipelined_s` against the
@@ -59,8 +65,9 @@ trace_event twin.
 `python -m benchmarks.run dispatch_bench --quick`) runs only a reduced
 prefill-DAG sweep plus a reduced MoE sweep: DAG build, both planner
 objectives, the overlapped<=serial gate, the pure-baseline comparison,
-the serial-chunk-loop vs pipelined-executor timeline comparison, and
-the MoE exchange bookkeeping asserts.
+the serial-chunk-loop vs pipelined-executor timeline comparison, the
+MoE exchange bookkeeping asserts, and the reduced-dims sliding-window
+sweep (the sweep-9 inequalities at window 8).
 """
 
 from __future__ import annotations
@@ -317,6 +324,88 @@ def _multi_rank_sweep(report, quant_hybrid):
         "head -> embed; `decode_steps_dag(sampled=True)` prices that)")
 
 
+def _swa_sweep(report, dims, prefill_len, chunk, bnb_budget=20_000):
+    """Sweep 9 (ISSUE-10): long-context sliding-window attention. Price
+    the SAME model twice — once with a ring-buffer KV window
+    (`DecodeDims.window`, attention protos/migration sized at
+    min(kv_len, window) rows) and once as its full-attention twin
+    (window=0) — for both phases: the windowed decode DAG vs the
+    full-cache decode DAG, and the BANDED prefill DAG (cross-chunk KV
+    edges outside the window dropped, `prefill_live_from`) vs the full
+    lower-triangular prefill DAG at the same prompt/chunking. The
+    windowed hybrid must STRICTLY beat the full-attention plan in both
+    phases, and its predictions must survive the replay fidelity gate."""
+    import dataclasses
+    full = dataclasses.replace(dims, window=0)
+
+    # decode: ring-sized KV vs the full cache
+    dag_w = workloads.decode_dag(dims)
+    dag_f = workloads.decode_dag(full)
+    p_w, p_f = plan(dag_w), plan(dag_f)
+    report.table([
+        {"decode plan": f"full attention ({full.kv_len}-row KV)",
+         "modeled ms": round(p_f.total_s * 1e3, 3),
+         "kv-migrate ms": round(p_f.migrate_s * 1e3, 3),
+         "replay err %": _replay_err(dag_f, p_f)},
+        {"decode plan": f"windowed ({dims.kv_len}-slot ring) "
+                        f"[{p_w.method}]",
+         "modeled ms": round(p_w.total_s * 1e3, 3),
+         "kv-migrate ms": round(p_w.migrate_s * 1e3, 3),
+         "replay err %": _replay_err(dag_w, p_w)},
+    ])
+    # ISSUE-10 acceptance (decode): at the same model dims the windowed
+    # plan strictly beats full attention — the ring cache is the only
+    # difference, so every win is attention rows not priced
+    assert p_w.total_s < p_f.total_s, \
+        "windowed decode hybrid did not beat the full-attention plan"
+    fid_d = dtrace.fidelity(dag_w, p_w)
+    assert fid_d.ok, \
+        f"windowed decode fidelity {fid_d.rel_err:.1%} out of band"
+
+    # prefill: banded DAG (dead cross-chunk KV edges dropped) vs full
+    pre_w = workloads.prefill_dag(dims, prefill_len=prefill_len,
+                                  chunk=chunk)
+    pre_f = workloads.prefill_dag(full, prefill_len=prefill_len,
+                                  chunk=chunk)
+    q_w = plan(pre_w, bnb_budget=bnb_budget)
+    q_f = plan(pre_f, bnb_budget=bnb_budget)
+    s_w = make_schedule(pre_w, q_w, pipelined=True)
+    s_f = make_schedule(pre_f, q_f, pipelined=True)
+    edges_w = sum(len(p) for p in pre_w.preds.values())
+    edges_f = sum(len(p) for p in pre_f.preds.values())
+    report.table([
+        {"prefill plan": f"full causal ({edges_f} edges)",
+         "serial ms": round(q_f.total_s * 1e3, 1),
+         "pipelined ms": round(s_f.pipelined_s * 1e3, 1),
+         "replay err %": _replay_err(pre_f, q_f)},
+        {"prefill plan": f"banded, window {dims.window} "
+                         f"({edges_w} edges) [{q_w.method}]",
+         "serial ms": round(q_w.total_s * 1e3, 1),
+         "pipelined ms": round(s_w.pipelined_s * 1e3, 1),
+         "replay err %": _replay_err(pre_w, q_w)},
+    ])
+    # ISSUE-10 acceptance (prefill): the banded DAG strictly beats the
+    # full plan — dropped KV edges are flops, residency, AND write-back
+    # the planner never has to schedule
+    assert edges_w < edges_f, "banded prefill DAG dropped no edges"
+    assert q_w.total_s < q_f.total_s, \
+        "banded prefill plan did not beat the full-attention plan"
+    assert s_w.pipelined_s <= s_f.pipelined_s + 1e-15, \
+        "banded prefill pipelines worse than full attention"
+    fid_p = dtrace.fidelity(pre_w, q_w)
+    assert fid_p.ok, \
+        f"banded prefill fidelity {fid_p.rel_err:.1%} out of band"
+    report.note(
+        f"window {dims.window} of {full.seq}: windowed decode models "
+        f"{p_f.total_s / p_w.total_s:.2f}x faster than full attention "
+        f"(ring holds {dims.kv_len} of {full.kv_len} KV rows); banded "
+        f"prefill drops {edges_f - edges_w} dead cross-chunk edges and "
+        f"models {q_f.total_s / q_w.total_s:.2f}x faster serial, "
+        f"{s_f.pipelined_s / s_w.pipelined_s:.2f}x pipelined (decode "
+        f"replay err {fid_d.rel_err * 100:.2f}%, prefill "
+        f"{fid_p.rel_err * 100:.2f}%)")
+
+
 def _three_way(report, graph, devices=("xeon", "upmem_2556")):
     plans = compare_plans(graph, devices=devices)
     rows = [{"plan": k, "modeled ms": round(p.total_s * 1e3, 3),
@@ -461,6 +550,12 @@ def run(report, quick: bool = False, trace_out: str | None = None):
                     "DPU's native 8x8 multiplier (2 cycles vs float's "
                     "32-cycle software ladder; sweep 7 gates the "
                     "paper-scale flip)")
+        # sliding-window smoke (ISSUE-10): windowed vs full at reduced
+        # dims — the same strict inequalities as sweep 9, small graphs
+        report.section("QUICK: sliding-window attention (reduced dims, "
+                       "window 8), windowed vs full-attention plans")
+        _swa_sweep(report, workloads.SWA_REDUCED_DIMS,
+                   **workloads.PREFILL_SWA_REDUCED)
         if trace_out:
             report.section("QUICK: execution tracing (measured dispatch "
                            "serving trace, overhead, fidelity)")
@@ -567,6 +662,11 @@ def run(report, quick: bool = False, trace_out: str | None = None):
     report.section("Multi-rank scale-out (4-rank expert parallelism, "
                    "per-rank channels) + cross-step pipelining")
     _multi_rank_sweep(report, quant_hybrid)
+
+    # -- sweep 9: long-context sliding-window attention ------------------
+    report.section("Long-context sliding-window attention (32k prompt, "
+                   "4k window): windowed vs full-attention plans")
+    _swa_sweep(report, workloads.SWA_PAPER_DIMS, **workloads.PREFILL_SWA)
 
     # -- execute the plans for real (reduced scale) ----------------------
     report.section("Runtime validation (reduced scale, real execution)")

@@ -29,10 +29,11 @@ from typing import Any, Callable, Hashable, Iterable, Sequence
 
 def batch_signature(n_live: int, positions: Iterable[int] = (), *,
                     pos_bucket: int = 64, splits: Sequence[int] = (),
-                    phase: str = "decode", topology: Any = ()) -> tuple:
+                    phase: str = "decode", topology: Any = (),
+                    window: int = 0) -> tuple:
     """Canonical plan-cache key for one batch composition:
     `(phase, live-slot count, bucketed KV length, chunk splits,
-    topology shape)`.
+    topology shape[, window])`.
 
     The KV length is the max position rounded UP to a multiple of
     `pos_bucket` (the sequence length the priced DAG assumes —
@@ -44,14 +45,21 @@ def batch_signature(n_live: int, positions: Iterable[int] = (), *,
     assumes — a `placement.Topology` (its `.signature`, `(base,
     n_ranks)`) or an already-hashable shape tuple — so plans priced
     under different rank counts never alias; the empty default means
-    the single-channel topology."""
+    the single-channel topology. `window` is the sliding-window bound
+    the priced DAG assumes (`DecodeDims.window`; 0 = full attention):
+    a windowed and a full-attention batch with identical
+    `(n_live, positions, splits)` price DIFFERENT graphs (ring-width
+    KV, banded prefill) and must never serve each other's plan. The
+    zero default appends nothing, keeping every pre-window signature
+    byte-identical."""
     if pos_bucket < 1:
         raise ValueError(f"pos_bucket must be >= 1, got {pos_bucket}")
     mx = max((int(p) for p in positions), default=0)
     kv_len = (mx // pos_bucket + 1) * pos_bucket
     topo = getattr(topology, "signature", topology)
-    return (str(phase), int(n_live), int(kv_len),
-            tuple(int(s) for s in splits), tuple(topo))
+    sig = (str(phase), int(n_live), int(kv_len),
+           tuple(int(s) for s in splits), tuple(topo))
+    return sig + (int(window),) if window else sig
 
 
 class PlanCache:

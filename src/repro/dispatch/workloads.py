@@ -152,7 +152,15 @@ class DecodeDims:
     migration charge. The modeled attention compute keeps the MHA int32
     proxy regardless (conservative for GQA: it can only overstate PIM's
     attention work, never understate the migration the planner trades it
-    against)."""
+    against).
+
+    `window` (0 = full attention) is a sliding-window bound: the KV the
+    model can ever attend is the last `min(seq, window)` positions, so
+    the resident cache is a RING BUFFER of that many rows
+    (`models.cache.cache_width`). Attention compute, KV residency, and
+    migration charges all price `kv_len` rows, not `seq` — a 32k context
+    under a 4k window costs 4k-row attention — and `prefill_dag` drops
+    the cross-chunk KV edges a window makes dead (banded prefill)."""
     d_model: int = 4096
     n_heads: int = 32
     head_dim: int = 128
@@ -170,11 +178,20 @@ class DecodeDims:
     # accumulation — models.layers.moe_expert_ffn_q8) and int8 KV storage;
     # pair with kv_itemsize=1 so residency/migration charges shrink 4x
     quant: str = ""
+    window: int = 0                    # sliding window (0 = full attention)
 
     @property
     def kv_heads(self) -> int:
         """Cached KV head count (GQA when n_kv_heads is set, else MHA)."""
         return self.n_kv_heads or self.n_heads
+
+    @property
+    def kv_len(self) -> int:
+        """Resident KV rows a decode step attends: the ring-buffer width
+        `min(seq, window)` under a sliding window, else the full `seq` —
+        what sizes the attention proxies and the residency/migration
+        byte charges."""
+        return min(self.seq, self.window) if self.window else self.seq
 
     @property
     def expert_ff(self) -> int:
@@ -204,6 +221,19 @@ MOE_PAPER_DIMS_INT8 = dataclasses.replace(MOE_PAPER_DIMS, kv_itemsize=1,
                                           quant="int8")
 MOE_REDUCED_DIMS_INT8 = dataclasses.replace(MOE_REDUCED_DIMS, kv_itemsize=1,
                                             quant="int8")
+
+#: long-context sliding-window dims (mistral-style 4k window over a 32k
+#: context): attention and KV residency price the 4096-row ring, not the
+#: 32768-row context — the planner's long-context workload shape
+SWA_PAPER_DIMS = DecodeDims(seq=32768, window=4096)
+SWA_REDUCED_DIMS = dataclasses.replace(REDUCED_DIMS, window=8)
+
+#: windowed MoE at the KT2-flip configuration (int8 experts + int8 KV):
+#: the 32k-context mixtral shape whose resident KV is the 4k ring
+MOE_SWA_PAPER_DIMS_INT8 = dataclasses.replace(MOE_PAPER_DIMS_INT8,
+                                              seq=32768, window=4096)
+MOE_SWA_REDUCED_DIMS_INT8 = dataclasses.replace(MOE_REDUCED_DIMS_INT8,
+                                                window=8)
 
 _Q_SCALE = 64.0          # activation quantization step for int attention
 
@@ -432,8 +462,10 @@ def _decode_protos(d: DecodeDims, expert_shards: int = 1) -> dict:
     qkv_out = S((d.batch, 3 * hdh), f32)
     attn_out = S((d.batch, hdh), f32)
     wqkv = S((dm, 3 * hdh), f32)
-    kq = S((d.seq, d.n_heads, d.head_dim), kv_dt)
-    vq = S((d.seq, d.n_heads, d.head_dim), kv_dt)
+    # a sliding window bounds the attended KV to the ring width: the
+    # decode step's scores/AV run over kv_len rows, never the full seq
+    kq = S((d.kv_len, d.n_heads, d.head_dim), kv_dt)
+    vq = S((d.kv_len, d.n_heads, d.head_dim), kv_dt)
     wo = S((hdh, dm), f32)
     wup, wdown = S((dm, d.d_ff), f32), S((d.d_ff, dm), f32)
     whead = S((dm, d.vocab), f32)
@@ -544,8 +576,9 @@ def _add_decode_step(g: OpGraph, d: DecodeDims, protos: dict, *,
     moe = d.n_experts > 0
     R = expert_shards
     # migrating a layer's cache off-home moves every slot's K and V rows
-    # at the cache's real width (GQA heads, real itemsize)
-    kv_bytes = 2.0 * d.batch * d.seq * d.kv_heads * d.head_dim \
+    # at the cache's real width (GQA heads, real itemsize); under a
+    # sliding window only the ring buffer is resident (kv_len rows)
+    kv_bytes = 2.0 * d.batch * d.kv_len * d.kv_heads * d.head_dim \
         * d.kv_itemsize
     xbytes = moe_exchange_bytes(d.batch, d.d_model, d.top_k) if moe else 0.0
 
@@ -601,6 +634,7 @@ def _add_decode_step(g: OpGraph, d: DecodeDims, protos: dict, *,
 def _decode_dag_name(d: DecodeDims, expert_shards: int) -> str:
     base = "lm-moe-decode-dag" if d.n_experts > 0 else "lm-decode-dag"
     return base + ("-int8" if d.quant == "int8" else "") \
+        + (f"-swa{d.window}" if 0 < d.window < d.seq else "") \
         + (f"-ep{expert_shards}" if expert_shards > 1 else "")
 
 
@@ -747,13 +781,21 @@ def expert_parallel_plan(graph: OpGraph, topology, *, source: str = "xeon",
 # chunked LM prefill as a DAG (per-chunk fan-out, KV write residency)
 # ---------------------------------------------------------------------------
 
-def _attend_prefill(qkv, kq, vq, dims: DecodeDims, t: int, q0: int):
+def _attend_prefill(qkv, kq, vq, dims: DecodeDims, t: int, q0: int,
+                    k0: int = 0, window: int = 0):
     """Costing proxy for one prefill chunk's attention: `t` query rows at
-    positions q0..q0+t-1 attend causally over the `prefix` keys written so
-    far (prior chunks + this one), with the same quantized-int dot /
+    positions q0..q0+t-1 attend causally over the keys written so far
+    (prior chunks + this one), with the same quantized-int dot /
     float-softmax mix as the decode `_attend` — the op profile the DPU
     cost model prices. int8-stored caches (`dims.quant == "int8"`) upcast
-    to the int32 accumulator on entry, same as the decode `_attend`."""
+    to the int32 accumulator on entry, same as the decode `_attend`.
+
+    Under a sliding `window` the banded prefill DAG drops chunks whose
+    KV the window makes dead, so the key tensor starts at absolute
+    position `k0` (the first live chunk's offset) instead of 0, and the
+    mask adds the window bound `q_pos - k_pos < window` on top of
+    causality. Both are python-gated: the `k0=0, window=0` jaxpr is
+    byte-identical to the pre-window proxy."""
     h, dh = dims.n_heads, dims.head_dim
     kq, vq = kq.astype(jnp.int32), vq.astype(jnp.int32)
     b = qkv.shape[0] // t
@@ -762,8 +804,10 @@ def _attend_prefill(qkv, kq, vq, dims: DecodeDims, t: int, q0: int):
     scores_i = jnp.einsum("bthd,shd->bhts", qq, kq)
     scores = scores_i.astype(jnp.float32) / (_Q_SCALE * _Q_SCALE * dh ** 0.5)
     q_pos = q0 + jnp.arange(t)
-    k_pos = jnp.arange(kq.shape[0])
+    k_pos = (k0 + jnp.arange(kq.shape[0])) if k0 else jnp.arange(kq.shape[0])
     mask = q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
     scores = jnp.where(mask[None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     wq = jnp.round(w * 256.0).astype(jnp.int32)
@@ -856,6 +900,36 @@ def prefill_chunk_splits(s_len: int, chunk: int) -> list[int]:
     return splits
 
 
+def prefill_live_from(splits, window: int) -> list[int]:
+    """Per-chunk banding bound for windowed prefill: `live_from[c]` is
+    the FIRST chunk index whose KV chunk `c`'s queries can still attend
+    under a sliding `window` — chunk `j < c` is dead for chunk `c` when
+    even its last key position (`offs[j+1] - 1`) falls outside the
+    oldest key chunk `c`'s first query may read (`offs[c] - window + 1`,
+    the `q_pos - k_pos < window` bound of `models/layers.py`). All
+    zeros when `window == 0` (full attention: every prior chunk live).
+
+    The single source of truth for the banded prefill DAG's dropped
+    cross-chunk edges AND the executable banded KV prefix in
+    `serve.dispatch_engine.DispatchPrefillStep` — the two must agree or
+    the executor would feed a chunk keys the plan never priced (or
+    vice versa). Whole chunks stay live even when only partially inside
+    the window: the mask (not the fan-in) handles sub-chunk
+    granularity."""
+    offs = [0]
+    for t in splits:
+        offs.append(offs[-1] + int(t))
+    if not window:
+        return [0] * len(splits)
+    live = []
+    for c in range(len(splits)):
+        j = c
+        while j > 0 and offs[j] - 1 >= offs[c] - window + 1:
+            j -= 1
+        live.append(j)
+    return live
+
+
 def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
                 prefill_len: int | None = None, chunk: int | None = None,
                 batch: int = 1, kv_home: str | None = "upmem_2556",
@@ -881,6 +955,16 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
     running it elsewhere ships them back). Node names follow
     `"{stage}{layer}/c{chunk}"` (`"embed/c0"`, `"qkv3/c1"`, ...), the
     routing contract `serve.dispatch_engine.DispatchPrefillStep` executes.
+
+    Sliding-window dims (`0 < dims.window < prefill_len`) build the
+    BANDED (block-sparse) variant: chunk c's attention fans in KV only
+    from chunks within the window (`prefill_live_from` — the same bound
+    the executable banded prefix in `dispatch_engine` uses), dead
+    chunks' qkv edges / residency charges / `kv_writers` waits are
+    dropped, the resident-read charge shrinks to the live prior rows,
+    and the write-back charge to the ring's `min(t, window)` surviving
+    rows. The graph name gains `-swa{window}`; a window that never
+    binds (>= prefill_len) builds the byte-identical full DAG.
 
     Planner note: the cross-chunk fan-in widens the topological frontier
     to ~2*n_chunks+1, so DAGs beyond 2 chunks typically exceed the
@@ -909,6 +993,15 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
     S_len = prefill_len if prefill_len is not None else d.seq
     c_len = chunk if chunk is not None else max(1, -(-S_len // 4))
     splits = prefill_chunk_splits(S_len, c_len)
+    # banded (block-sparse) variant: a sliding window narrower than the
+    # prompt makes old chunks' KV dead — their cross-chunk edges,
+    # residency charges, and write-back waits are dropped. A window that
+    # never binds (>= the prompt) builds the identical full-attention DAG.
+    win = d.window if 0 < d.window < S_len else 0
+    live_from = prefill_live_from(splits, win)
+    offs = [0]
+    for t in splits:
+        offs.append(offs[-1] + t)
 
     f32, i32 = jnp.float32, jnp.int32
     q8 = d.quant == "int8"
@@ -953,7 +1046,8 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
                                    meta=dict(src.meta))
 
     base_name = "lm-moe-prefill-dag" if d.n_experts else "lm-prefill-dag"
-    g = OpGraph(base_name + ("-int8" if q8 else ""),
+    g = OpGraph(base_name + ("-int8" if q8 else "")
+                + (f"-swa{win}" if win else ""),
                 input_bytes=float(batch * S_len * 4))
     res: list[str | None] = [None] * len(splits)  # chunk residual producers
     for c, t in enumerate(splits):
@@ -967,7 +1061,9 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
         c0 = 0
         for c, t in enumerate(splits):
             rows = batch * t
-            prefix = c0 + t
+            # banding: keys start at the first live chunk's offset, not 0
+            k0 = offs[live_from[c]]
+            prefix = c0 + t - k0
             x = S((rows, dm), f32)
             qkv_out = S((rows, 3 * hdh), f32)
             attn_out = S((rows, hdh), f32)
@@ -982,22 +1078,29 @@ def prefill_dag(dims: DecodeDims = REDUCED_DIMS, *,
                         res[c])
             qkv_names.append(qkv.name)
 
-            attend = functools.partial(_attend_prefill, dims=d, t=t, q0=c0)
+            attend = functools.partial(_attend_prefill, dims=d, t=t,
+                                       q0=c0, k0=k0, window=win)
             node = proto("attn", (t, prefix), lambda: node_from_fn(
                 "attn", attend, qkv_out, kq, vq, kind="attn"))
-            # fan-in: this chunk's qkv plus every earlier chunk's (their
-            # written KV rows), the cross-chunk edges of the DAG
+            # fan-in: this chunk's qkv plus every LIVE earlier chunk's
+            # (their written KV rows) — the cross-chunk edges of the
+            # DAG; a window drops the dead chunks' edges entirely
             attn = g.add(dataclasses.replace(node, name=f"attn{i}/c{c}"),
-                         *qkv_names)
+                         *qkv_names[live_from[c]:])
             if kv_home is not None:
-                if c0:
-                    annotate_kv_residency(attn, kv_row_bytes * c0, kv_home)
+                if c0 - k0:
+                    annotate_kv_residency(attn, kv_row_bytes * (c0 - k0),
+                                          kv_home)
                     # the rows this chunk reads from the home were written
-                    # by the earlier chunks' attention — the pipelined
-                    # timeline waits for their write-backs to land
+                    # by the earlier LIVE chunks' attention — the
+                    # pipelined timeline waits for their write-backs only
                     attn.meta["kv_writers"] = [f"attn{i}/c{j}"
-                                               for j in range(c)]
-                annotate_kv_write(attn, kv_row_bytes * t, kv_home)
+                                               for j in range(live_from[c],
+                                                              c)]
+                # the ring keeps at most `win` of this chunk's rows —
+                # only those are ever shipped back to the home
+                annotate_kv_write(attn, kv_row_bytes * (min(t, win) if win
+                                                        else t), kv_home)
 
             node = proto("o", t, lambda: node_from_fn(
                 "o", f_o, attn_out, x, wo, kind="gemv_o",
@@ -1102,6 +1205,16 @@ _RANKED_4 = ("xeon", "upmem_2556", "upmem_2556:1", "upmem_2556:2",
 #: 4-chunk B&B shape is exercised by benchmarks/dispatch_bench.py
 PREFILL_PAPER = dict(prefill_len=2048, chunk=1024)
 
+#: long-context banded-prefill golden shape: a 32k prompt under the 4k
+#: window in 8k chunks — chunk c >= 2 drops chunk c-2's dead KV
+#: (`prefill_live_from` = [0, 0, 1, 2]), so the band structure is
+#: golden-pinned while the chunk count stays at the 4-chunk B&B shape
+#: the bench already exercises
+PREFILL_SWA = dict(prefill_len=32768, chunk=8192)
+#: reduced banded shape with the same live_from band ([0, 0, 0, 1]:
+#: chunk 3 drops chunk 0 under the window-8 bound)
+PREFILL_SWA_REDUCED = dict(prefill_len=16, chunk=4)
+
 
 def shipped_graphs() -> dict:
     """Registry of every shipped graph: name -> (builder, planner device
@@ -1164,6 +1277,22 @@ def shipped_graphs() -> dict:
             lambda: decode_steps_dag(REDUCED_DIMS, n_steps=2), _TWO_DEV),
         "lm-moe-decode-steps-int8-reduced": (
             lambda: decode_steps_dag(MOE_REDUCED_DIMS_INT8, n_steps=2),
+            _TWO_DEV),
+        # ISSUE-10: long-context sliding-window workloads — decode prices
+        # the 4k-row ring (not the 32k context), prefill is the banded
+        # block-sparse DAG with dead cross-chunk KV edges dropped
+        "lm-decode-dag-swa4096": (
+            lambda: decode_dag(SWA_PAPER_DIMS), _TWO_DEV),
+        "lm-decode-dag-swa8-reduced": (
+            lambda: decode_dag(SWA_REDUCED_DIMS), _TWO_DEV),
+        "lm-moe-decode-dag-int8-swa4096": (
+            lambda: moe_decode_dag(MOE_SWA_PAPER_DIMS_INT8), _TWO_DEV),
+        "lm-moe-decode-dag-int8-swa8-reduced": (
+            lambda: moe_decode_dag(MOE_SWA_REDUCED_DIMS_INT8), _TWO_DEV),
+        "lm-prefill-dag-swa4096-32k": (
+            lambda: prefill_dag(SWA_PAPER_DIMS, **PREFILL_SWA), _TWO_DEV),
+        "lm-prefill-dag-swa8-reduced": (
+            lambda: prefill_dag(SWA_REDUCED_DIMS, **PREFILL_SWA_REDUCED),
             _TWO_DEV),
     }
     for counts in prim.all_ref_counts():

@@ -81,7 +81,11 @@ def dims_for_config(cfg: ModelConfig, batch_slots: int,
     and the config dtype's itemsize — so the migration charge matches the
     bytes a real migration would move. `cfg.quant == "int8"` maps onto
     the KT2-flip planning configuration: 1-byte KV rows and int8-tagged
-    expert GEMMs (`DecodeDims.quant`, DESIGN.md §15)."""
+    expert GEMMs (`DecodeDims.quant`, DESIGN.md §15). `cfg.sliding_window`
+    threads through as `DecodeDims.window`: decode dims already price the
+    ring width (`seq` IS `cache_width`, so `kv_len == seq` and decode
+    planning is unchanged), but prefill DAGs built from these dims go
+    banded for prompts longer than the window."""
     q8 = getattr(cfg, "quant", "") == "int8"
     return workloads.DecodeDims(
         d_model=cfg.d_model, n_heads=cfg.n_heads, head_dim=cfg.hd,
@@ -90,7 +94,7 @@ def dims_for_config(cfg: ModelConfig, batch_slots: int,
         n_kv_heads=cfg.n_kv_heads,
         kv_itemsize=1 if q8 else jnp.dtype(cfg.dtype).itemsize,
         n_experts=cfg.n_experts, top_k=cfg.top_k, moe_d_ff=cfg.moe_d_ff,
-        quant="int8" if q8 else "")
+        quant="int8" if q8 else "", window=cfg.sliding_window)
 
 
 def _check_dispatchable(cfg: ModelConfig, shd: Shardings) -> None:
@@ -595,7 +599,7 @@ class DispatchPrefillStep(_MoeStageMixin):
         return [
             StageDef("embed", self._embed_fn, (None, 1, 1), (1, 1, 1)),
             StageDef("qkv", self._qkv_fn, (1, 1, 1, None, None), (1, 1, 1)),
-            StageDef("attn", self._attn_fn, (1, None, None, 0), (1,)),
+            StageDef("attn", self._attn_fn, (1, None, None, 0, None), (1,)),
             StageDef("o", self._o_fn, (1, 1, None), (1,)),
             *mlp_defs,
             StageDef("head", self._head_fn, (1, None, None), (1,)),
@@ -617,17 +621,26 @@ class DispatchPrefillStep(_MoeStageMixin):
         return L._qkv(h, attn_p, self.cfg, self.shd, rope_sin=rs,
                       rope_cos=rc, heads_tp=True)
 
-    def _attn_fn(self, q, kp, vp, q_pos):
-        # _plain_attention with absolute q positions passed explicitly
-        # (bank-sharded chunks must not rebuild them from a local arange)
+    def _attn_fn(self, q, kp, vp, q_pos, k_pos):
+        # _plain_attention with absolute q AND k positions passed
+        # explicitly (bank-sharded chunks must not rebuild them from a
+        # local arange). Key positions must come from the caller: a slot
+        # index only equals its absolute position in a full cache, and a
+        # banded prefix doesn't even start at 0 — an in-stage
+        # `arange(skv)` would silently mis-mask both (the ISSUE-10
+        # ring-cache position bug).
         b, sq, h, hd = q.shape
         skv, kvh = kp.shape[1], kp.shape[2]
+        if skv != k_pos.shape[0]:
+            raise ValueError(
+                f"attn stage got {skv} KV rows but {k_pos.shape[0]} key "
+                "positions — slot index != absolute position here (ring "
+                "cache or banded prefix?); refusing to mis-mask")
         if kvh != h:
             kp = jnp.repeat(kp, h // kvh, axis=2)
             vp = jnp.repeat(vp, h // kvh, axis=2)
         s = jnp.einsum("bqhd,bkhd->bhqk", q, kp,
                        preferred_element_type=jnp.float32) / math.sqrt(hd)
-        k_pos = jnp.arange(skv)
         mask = q_pos[:, None] >= k_pos[None, :]
         if self.cfg.sliding_window:
             mask &= q_pos[:, None] - k_pos[None, :] < self.cfg.sliding_window
@@ -720,8 +733,15 @@ class DispatchPrefillStep(_MoeStageMixin):
     def _bind(self, params, toks, splits):
         """The executor's workload surface for one prompt: map a prefill
         node name (`"{kind}{layer}/c{chunk}"`) to its argument tuple.
-        Cross-chunk attention concatenates every prior chunk's K/V from
-        the environment — the executable twin of the DAG's fan-in edges."""
+        Cross-chunk attention concatenates every LIVE prior chunk's K/V
+        from the environment — the executable twin of the DAG's fan-in
+        edges, banded by the same `workloads.prefill_live_from` bound
+        the builder drops dead edges with (a sliding window narrower
+        than the prompt makes old chunks' KV unreadable; concatenating
+        them anyway would feed the stage keys the plan never priced).
+        The banded prefix starts at absolute position
+        `offs[live_from[c]]`, so the true key positions thread through
+        to the attn stage explicitly."""
         cfg = self.cfg
         stacked = params["layers"][0]
         lp = [jax.tree.map(lambda l, i=i: l[i], stacked)
@@ -732,9 +752,11 @@ class DispatchPrefillStep(_MoeStageMixin):
         offs = [0]
         for t in splits:
             offs.append(offs[-1] + t)
+        live_from = workloads.prefill_live_from(splits, cfg.sliding_window)
 
         def kv_prefix(env, i, c, idx):
-            parts = [env[f"qkv{i}/c{j}"][idx] for j in range(c + 1)]
+            parts = [env[f"qkv{i}/c{j}"][idx]
+                     for j in range(live_from[c], c + 1)]
             return parts[0] if len(parts) == 1 \
                 else jnp.concatenate(parts, axis=1)
 
@@ -759,8 +781,10 @@ class DispatchPrefillStep(_MoeStageMixin):
             if kind == "attn":
                 q = env[f"qkv{i}/c{c}"][0]
                 q_pos = jnp.arange(c0, c0 + t, dtype=jnp.int32)
+                k_pos = jnp.arange(offs[live_from[c]], c0 + t,
+                                   dtype=jnp.int32)
                 return (q, kv_prefix(env, i, c, 1),
-                        kv_prefix(env, i, c, 2), q_pos)
+                        kv_prefix(env, i, c, 2), q_pos, k_pos)
             if kind == "o":
                 x = (env[f"{res_kind}{i - 1}/c{c}"] if i
                      else env[f"embed/c{c}"][0])

@@ -314,7 +314,8 @@ class Gateway:
         n_live = max(1, self.engine.n_slots - self.engine.n_free)
         key = batch_signature(n_live, self._positions(),
                               pos_bucket=self.pos_bucket,
-                              topology=self.devices)
+                              topology=self.devices,
+                              window=self._dims.window)
         return self.plans.get_or_plan(
             key, lambda: self._price_decode(n_live, key[2]))
 
@@ -340,7 +341,8 @@ class Gateway:
         splits = self.engine.prefill_splits(plen)
         key = batch_signature(1, splits=splits, phase="prefill",
                               pos_bucket=self.pos_bucket,
-                              topology=self.devices)
+                              topology=self.devices,
+                              window=self._dims.window)
         return self.plans.get_or_plan(
             key, lambda: self._price_prefill(splits)).priced_s
 
@@ -367,7 +369,8 @@ class Gateway:
                             self.pos_bucket, self.pos_bucket):
                 key = batch_signature(n_live, (hi - 1,),
                                       pos_bucket=self.pos_bucket,
-                                      topology=self.devices)
+                                      topology=self.devices,
+                                      window=self._dims.window)
                 self.plans.get_or_plan(
                     key, lambda n=n_live, k=key[2]:
                         self._price_decode(n, k))

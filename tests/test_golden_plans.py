@@ -95,7 +95,13 @@ def _cases():
                  "lm-moe-decode-dag-reduced-ep2",
                  "lm-moe-decode-dag-int8-reduced-ep4",
                  "lm-decode-steps-dag-reduced",
-                 "lm-moe-decode-steps-int8-reduced"):
+                 "lm-moe-decode-steps-int8-reduced",
+                 # ISSUE-10: sliding-window decode + banded prefill
+                 "lm-decode-dag-swa4096", "lm-decode-dag-swa8-reduced",
+                 "lm-moe-decode-dag-int8-swa4096",
+                 "lm-moe-decode-dag-int8-swa8-reduced",
+                 "lm-prefill-dag-swa4096-32k",
+                 "lm-prefill-dag-swa8-reduced"):
         cases[f"{name}@overlapped"] = (name, "overlapped")
     return cases
 

@@ -136,7 +136,9 @@ def test_quant_dispatch_single_chunk_prefill_token_identical(setup_q8):
     dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, shd=SHD,
                           engine="dispatch",
                           dispatch_kwargs={"prefill_chunk": 48})
-    assert dis_eng._prefill_step.dag.name == "lm-moe-prefill-dag-int8"
+    # mixtral-reduced is a sliding-window config (window 16 < the 48-token
+    # chunk), so its prefill DAG carries the -swa suffix since ISSUE-10
+    assert dis_eng._prefill_step.dag.name == "lm-moe-prefill-dag-int8-swa16"
     assert _run_16_steps(jit_eng, prompts) == _run_16_steps(dis_eng, prompts)
 
 

@@ -701,3 +701,90 @@ def test_engine_prefill_splits_hook(setup):
                           dispatch_kwargs={"prefill_chunk": 4})
     assert dis_eng.prefill_splits(11) == [4, 4, 3]
     assert dis_eng.prefill_splits(4) == [4]
+
+
+# ------------------------------------------------------------------ #
+# windowed serving (ISSUE-10): ring-cache decode + banded prefill
+# ------------------------------------------------------------------ #
+
+@pytest.fixture(scope="module")
+def setup_swa():
+    """A mistral-style sliding-window config at f32: starcoder2-reduced
+    (dense, window 16, attention bias) — at max_len 32 the engine's KV
+    cache is a RING of width 16, so decode slots wrap and slot index !=
+    absolute position (the ISSUE-10 bug surface)."""
+    import dataclasses
+    cfg = dataclasses.replace(REDUCED["starcoder2-7b"], dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg, SHD)
+    return cfg, params
+
+
+def _run_16_steps_wrapping(eng, prompts):
+    """The 16-step continuous-batching schedule with budgets big enough
+    that positions cross the ring width mid-decode."""
+    reqs = [Request(i, p, 8) for i, p in enumerate(prompts)]
+    pending = list(reqs)
+    for _ in range(16):
+        while pending and eng.admit(pending[0]):
+            pending.pop(0)
+        eng.step()
+    return {r.rid: (list(r.out_tokens), r.done) for r in reqs}
+
+
+def test_windowed_dispatch_decode_token_identical(setup_swa):
+    """The ISSUE-10 serving gate: windowed dispatch decode against the
+    ring cache is token-identical to the fused engine over a 16-step
+    continuous-batching run whose positions wrap the ring (prompts of
+    12-14 tokens + 8 generated cross width 16)."""
+    from repro.models import cache as cache_lib
+    cfg, params = setup_swa
+    assert cache_lib.cache_width(cfg, 32) == 16    # ring, not full
+    key = jax.random.PRNGKey(17)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (12 + i % 3,), 0, cfg.vocab_size,
+                                  dtype=jnp.int32) for i in range(4)]
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, shd=SHD)
+    dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, shd=SHD,
+                          engine="dispatch",
+                          dispatch_kwargs={"prefill_engine": "jit"})
+    from repro.serve.dispatch_engine import dims_for_config
+    assert dims_for_config(cfg, 2, 32).window == cfg.sliding_window
+    jit_trace = _run_16_steps_wrapping(jit_eng, prompts)
+    assert any(len(p) + len(toks) > 16
+               for p, (toks, _) in zip(prompts, jit_trace.values()))
+    assert jit_trace == _run_16_steps_wrapping(dis_eng, prompts)
+
+
+def test_windowed_banded_prefill_token_identical(setup_swa):
+    """Banded dispatch prefill: prompts LONGER than the window execute
+    the banded KV prefix (chunk 5 of a 22-token prompt drops chunk 0,
+    matching the DAG's dropped edges) and stay token-identical to the
+    fused engine — fully-masked keys contribute exactly zero at f32, so
+    dropping them is exact, not approximate."""
+    from repro.dispatch import workloads
+    cfg, params = setup_swa
+    key = jax.random.PRNGKey(23)
+    plens = [22, 20, 9, 18]
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (plens[i],),
+                                  0, cfg.vocab_size, dtype=jnp.int32)
+               for i in range(4)]
+    jit_eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, shd=SHD)
+    dis_eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, shd=SHD,
+                          engine="dispatch",
+                          dispatch_kwargs={"prefill_chunk": 4})
+    step = dis_eng._prefill_step
+    lf = workloads.prefill_live_from(step.chunk_splits(22),
+                                     cfg.sliding_window)
+    assert lf[-1] == 1                     # banding actually engages
+    reqs = [Request(i, p, 3) for i, p in enumerate(prompts)]
+
+    def run(eng):
+        rs = [Request(r.rid, prompts[r.rid], 3) for r in reqs]
+        pending = list(rs)
+        for _ in range(12):
+            while pending and eng.admit(pending[0]):
+                pending.pop(0)
+            eng.step()
+        return {r.rid: (list(r.out_tokens), r.done) for r in rs}
+
+    assert run(jit_eng) == run(dis_eng)
